@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness + relative
+cost; absolute TPU numbers come from the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplane as B
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+            else x, out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    n, dim = 2048, 512
+    q = jnp.asarray(rng.integers(-128, 128, size=(1, dim)), jnp.int8)
+    d = jnp.asarray(rng.integers(-128, 128, size=(n, dim)), jnp.int8)
+    packed = B.pack_words(B.to_bitplanes(d))
+    dn = jnp.sqrt(jnp.sum(d.astype(jnp.float32) ** 2, -1))
+    scores = jnp.asarray(rng.normal(size=(1, n)).astype(np.float32))
+    rows = [
+        {"kernel": "dirc_mac(bitserial, paper-faithful)",
+         "us_per_call": _time(ops.dirc_mac, q, packed),
+         "work": f"{n}x{dim} int8 docs"},
+        {"kernel": "score_matmul(MXU path, beyond-paper)",
+         "us_per_call": _time(ops.score_matmul, q, d),
+         "work": f"{n}x{dim} int8 docs"},
+        {"kernel": "score_matmul_cosine(fused)",
+         "us_per_call": _time(ops.score_matmul_cosine, q, d, dn),
+         "work": f"{n}x{dim} int8 docs"},
+        {"kernel": "local_topk_blocks(k=16)",
+         "us_per_call": _time(lambda s: ops.local_topk_blocks(s, 16), scores),
+         "work": f"{n} scores"},
+    ]
+    return rows
+
+
+def main() -> None:
+    print("kernel,us_per_call,work")
+    for r in run():
+        print(f"{r['kernel']},{r['us_per_call']:.1f},{r['work']}")
+
+
+if __name__ == "__main__":
+    main()

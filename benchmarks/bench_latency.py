@@ -1,0 +1,56 @@
+"""Paper Table III: DIRC-RAG vs a von-Neumann baseline on SciFact-sized
+retrieval (1.9 MB INT8, dim 512).
+
+The paper compares against an RTX3090 (21.7 ms / 86.8 mJ per query). We
+cannot measure a GPU here; we (a) reproduce the DIRC side from the
+calibrated model, (b) measure THIS container's JAX-CPU retrieval as the
+living von-Neumann baseline, and (c) quote the paper's GPU constants.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from repro.core.retrieval import DircRagIndex, RetrievalConfig
+from repro.core.simulator import (RTX3090_ENERGY_J, RTX3090_LATENCY_S,
+                                  simulate_database_mb)
+from repro.data.synthetic import beir_analogue
+
+
+def run() -> dict:
+    ds = beir_analogue("synth-scifact")
+    idx = DircRagIndex.build(jnp.asarray(ds.doc_embeddings),
+                             RetrievalConfig(bits=8, path="int_exact"))
+    qs = jnp.asarray(ds.query_embeddings)
+    # warmup + measure
+    idx.search(qs, k=3).indices.block_until_ready()
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        idx.search(qs, k=3).indices.block_until_ready()
+    cpu_per_query = (time.perf_counter() - t0) / (reps * qs.shape[0])
+
+    sim = simulate_database_mb(1.9, dim=512, bits=8)
+    return {
+        "dirc_latency_us": sim.latency_s * 1e6,
+        "dirc_energy_uj": sim.energy_j * 1e6,
+        "paper_dirc_latency_us": 2.77,
+        "paper_dirc_energy_uj": 0.46,
+        "rtx3090_latency_us": RTX3090_LATENCY_S * 1e6,
+        "rtx3090_energy_uj": RTX3090_ENERGY_J * 1e6,
+        "jax_cpu_latency_us": cpu_per_query * 1e6,
+        "speedup_vs_rtx3090": RTX3090_LATENCY_S / sim.latency_s,
+        "speedup_vs_this_cpu": cpu_per_query / sim.latency_s,
+    }
+
+
+def main() -> None:
+    r = run()
+    print("metric,value")
+    for k, v in r.items():
+        print(f"{k},{v:.4g}")
+
+
+if __name__ == "__main__":
+    main()

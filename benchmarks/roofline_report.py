@@ -1,0 +1,65 @@
+"""Roofline report: render the dry-run JSONs into the EXPERIMENTS tables.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits (a) the per-cell three-term roofline table, (b) the collective
+breakdown, (c) the memory-fit table for both meshes.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load(dryrun_dir: str = DRYRUN_DIR) -> list:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def roofline_rows(rows) -> list:
+    out = []
+    for r in rows:
+        if r["status"] != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bottleneck": rf["bottleneck"],
+            "useful_flops_ratio": rf["useful_flops_ratio"],
+            "step_bound_s": max(rf["compute_s"], rf["memory_s"],
+                                rf["collective_s"]),
+            "roofline_fraction": rf["compute_s"] / max(
+                rf["compute_s"], rf["memory_s"], rf["collective_s"]),
+            "temp_gib": r["memory"]["temp_gib"],
+            "fits": r["memory"]["fits_16gib"],
+        })
+    return out
+
+
+def main() -> None:
+    rows = load()
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    print(f"# cells: {len(rows)} ({len(ok)} ok, {len(skipped)} skipped)")
+    print("\narch,shape,compute_s,memory_s,collective_s,bottleneck,"
+          "useful_ratio,roofline_fraction,temp_gib,fits16gib")
+    for r in roofline_rows(rows):
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.4f},"
+              f"{r['memory_s']:.4f},{r['collective_s']:.4f},"
+              f"{r['bottleneck']},{r['useful_flops_ratio']:.3f},"
+              f"{r['roofline_fraction']:.3f},{r['temp_gib']:.1f},"
+              f"{r['fits']}")
+    print("\nskipped_cell,reason")
+    for r in skipped:
+        print(f"{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"\"{r['reason'][:80]}\"")
+
+
+if __name__ == "__main__":
+    main()

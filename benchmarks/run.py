@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_simulator  -> Table I   (spec + scaling)
+  bench_precision  -> Table II  (P@k at FP32/INT8/INT4)
+  bench_latency    -> Table III (DIRC vs baselines)
+  bench_error_opt  -> Fig. 6    (error-aware optimization ladder)
+  bench_kernels    -> kernel micro-benchmarks
+  roofline_report  -> dry-run roofline tables (EXPERIMENTS.md source)
+
+Run: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+from . import (bench_error_opt, bench_kernels, bench_latency,
+               bench_precision, bench_simulator, roofline_report)
+
+SECTIONS = [
+    ("Table I — DIRC-RAG spec (calibrated model)", bench_simulator),
+    ("Table II — retrieval precision vs quantization", bench_precision),
+    ("Table III — latency/energy vs baselines", bench_latency),
+    ("Fig. 6 — error-aware optimization ladder", bench_error_opt),
+    ("Kernel micro-benchmarks", bench_kernels),
+    ("Roofline (from multi-pod dry-run)", roofline_report),
+]
+
+
+def main() -> None:
+    for title, mod in SECTIONS:
+        print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            print(f"SECTION FAILED: {type(e).__name__}: {e}")
+        print(f"-- section took {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Walk the calibrated DIRC-RAG silicon model across the paper's design
+space: database size, precision, dimension, detection on/off.
+
+Run: PYTHONPATH=src python examples/edge_sim.py
+"""
+from repro.core.simulator import simulate_database_mb, table1_spec
+
+
+def main() -> None:
+    print("== Table I spec (calibrated model vs paper) ==")
+    for k, v in table1_spec().items():
+        print(f"   {k:32s} {v}")
+
+    print("\n== latency/energy scaling (dim 512) ==")
+    print(f"   {'MB':>5s} {'bits':>5s} {'us/query':>9s} {'uJ/query':>9s}")
+    for mb in (0.25, 0.5, 1, 2, 4):
+        for bits in (8, 4):
+            r = simulate_database_mb(mb, dim=512, bits=bits)
+            print(f"   {mb:5.2f} {bits:5d} {r.latency_s * 1e6:9.3f} "
+                  f"{r.energy_j * 1e6:9.4f}")
+
+    print("\n== dimension folding (4MB INT8) ==")
+    for dim in (128, 256, 512, 1024):
+        r = simulate_database_mb(4.0, dim=dim, bits=8)
+        print(f"   dim {dim:5d}: {r.latency_s * 1e6:7.3f} us, "
+              f"{r.plan.docs_per_core * 16:6d} docs resident")
+
+    print("\n== error-detection cost (4MB INT8) ==")
+    on = simulate_database_mb(4.0, detect=True)
+    off = simulate_database_mb(4.0, detect=False)
+    print(f"   detect ON : {on.latency_s * 1e6:.3f} us, "
+          f"{on.energy_j * 1e6:.4f} uJ")
+    print(f"   detect OFF: {off.latency_s * 1e6:.3f} us, "
+          f"{off.energy_j * 1e6:.4f} uJ  "
+          f"(saves {(1 - off.latency_s / on.latency_s) * 100:.1f}% latency)")
+
+
+if __name__ == "__main__":
+    main()

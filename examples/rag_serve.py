@@ -1,0 +1,60 @@
+"""End-to-end edge RAG serving: embed -> DIRC retrieve -> augment ->
+generate, with batched requests against a small LM (paper Fig. 1).
+
+Run: PYTHONPATH=src python examples/rag_serve.py
+"""
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core.retrieval import RetrievalConfig
+from repro.models import build_model
+from repro.serving import HashEmbedder, RagPipeline
+
+CORPUS = [
+    "DIRC couples a multi-level ReRAM subarray with an SRAM cell.",
+    "The query-stationary dataflow pins the query in input registers.",
+    "Sixteen cores each run a local top-k comparator.",
+    "Bit-wise remapping puts MSBs in the most reliable ReRAM positions.",
+    "The Sigma-D LUT detects sensing errors and triggers re-sensing.",
+    "INT8 quantized embeddings retrieve almost as well as FP32.",
+    "The macro reaches 1176 TOPS/W at 250 MHz and 0.8 V.",
+    "A 4MB database is searched in 5.6 microseconds per query.",
+] + [f"filler document number {i} about unrelated topics" for i in range(56)]
+
+
+def main() -> None:
+    print("== loading generator (phi4-mini smoke config) ==")
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    print("== building RAG pipeline over", len(CORPUS), "documents ==")
+    pipe = RagPipeline(
+        CORPUS,
+        RetrievalConfig(bits=8, metric="cosine", path="int_exact"),
+        model=model, params=params,
+        dim=256, embedder=HashEmbedder(dim=256),
+        max_prompt_len=96,
+    )
+
+    queries = [
+        "how does the error detection work?",
+        "what dataflow does DIRC use for retrieval?",
+        "how fast is a 4MB database search?",
+    ]
+    for q in queries:
+        t0 = time.time()
+        res = pipe.query(q, k=2, max_new_tokens=12)
+        print(f"\nQ: {q}")
+        for i, t in zip(res.doc_ids, res.retrieved_texts):
+            print(f"   retrieved[{i}]: {t[:70]}")
+        print(f"   DIRC sim: {res.sim_latency_us:.2f} us, "
+              f"{res.sim_energy_uj:.3f} uJ per query")
+        print(f"   generated {res.answer_tokens.shape[1]} tokens "
+              f"(wall {time.time() - t0:.2f}s, untrained model -> noise)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Train a ~100M-parameter LM for a few hundred steps on the synthetic
+bigram corpus — the end-to-end training driver with checkpointing.
+
+The model is a scaled-down granite-family decoder (~100M params with the
+byte-level vocab). Loss should fall from ~6.2 toward the bigram entropy
+floor (~3.1 nats).
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.launch import train as train_mod
+
+CFG_100M = ModelConfig(
+    name="granite-100m", family="dense",
+    n_layers=10, d_model=768, n_heads=12, n_kv_heads=4,
+    d_ff=2048, vocab_size=4096, head_dim=64,
+    norm="rmsnorm", mlp="swiglu", rope_style="standard",
+    tie_embeddings=True, attn_chunk=256,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    print(f"model: {CFG_100M.param_count() / 1e6:.1f}M params")
+
+    # monkey-patch the registry lookup so the driver trains THIS config
+    import repro.configs.registry as reg
+    orig = reg.get_config
+    reg.get_config = lambda a, smoke=False: CFG_100M \
+        if a == "granite-100m" else orig(a, smoke)
+    import repro.launch.train as t
+    t.get_config = reg.get_config
+
+    out = train_mod.train(
+        "granite-100m", smoke=True, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=3e-3, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+        async_ckpt=True, log_every=20)
+    print(f"final loss: {out['final_loss']:.4f} "
+          f"(start {out['losses'][0]:.4f}, bigram floor ~3.1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro — DIRC-RAG edge-RAG acceleration framework in JAX.
+
+Subpackages:
+  core           the paper's contribution (DIRC retrieval engine)
+  kernels        Pallas TPU kernels (+ jnp oracles)
+  models         the 10 assigned generator architectures
+  data           synthetic corpora / IR datasets / pipeline
+  optim          sharded AdamW + gradient compression
+  checkpointing  fault-tolerant checkpoint manager
+  serving        batched serving + end-to-end RAG pipeline
+  configs        per-architecture configs (--arch <id>)
+  launch         production mesh, multi-pod dry-run, train/serve drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""repro.checkpointing — atomic, rotating, elastic checkpoints."""
+from .checkpoint import restore, save  # noqa: F401
+from .manager import CheckpointManager, StepWatchdog  # noqa: F401

@@ -1,0 +1,15 @@
+"""repro.configs — per-architecture configs + shape definitions."""
+from .base import (  # noqa: F401
+    EncoderConfig,
+    LONG_500K,
+    ModelConfig,
+    MoEConfig,
+    PREFILL_32K,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+    TRAIN_4K,
+    DECODE_32K,
+    shape_applicable,
+)
+from .registry import ARCHS, all_archs, get_config  # noqa: F401

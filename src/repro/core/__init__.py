@@ -1,0 +1,29 @@
+"""repro.core — DIRC-RAG: digital in-ReRAM computation for edge RAG.
+
+The paper's contribution as a composable JAX library:
+  quantization    INT8/INT4 symmetric embedding quantization
+  bitplane        two's-complement bit-plane (ReRAM) layout + bit-serial MAC
+  error_model     spatial LSB sensing-error channel (Fig. 5a)
+  remapping       error-aware bit-wise remapping (Fig. 5a -> +24.6% P@k)
+  error_detection Sigma-D checksum + re-sense (Fig. 5b)
+  topk            hierarchical local/global top-k (Fig. 3a)
+  retrieval       DircRagIndex build/search
+  distributed     pod-scale shard_map retrieval (local top-k + global merge)
+  dataflow        query-stationary cycle schedule (Fig. 4)
+  simulator       calibrated cycle/energy/area model (Tables I & III)
+"""
+from . import (  # noqa: F401
+    bitplane,
+    dataflow,
+    distributed,
+    error_detection,
+    error_model,
+    quantization,
+    remapping,
+    retrieval,
+    simulator,
+    topk,
+)
+from .quantization import QuantizedTensor, quantize  # noqa: F401
+from .retrieval import DircRagIndex, RetrievalConfig  # noqa: F401
+from .topk import TopK, hierarchical_topk, local_topk  # noqa: F401

@@ -1,0 +1,117 @@
+"""Two's-complement bit-plane packing — the ReRAM storage layout.
+
+A DIRC column stores sixteen INT8 embedding elements per cell (8x8 MLC
+subarray = 128 bits); the SRAM plane caches ONE bit of ONE document per
+cell at a time, and the digital MAC consumes doc bit-planes serially
+(paper Fig. 4). Functionally, the array-wide view is: for each document d
+and bit index b, a {0,1}-valued plane of shape (dim,).
+
+We keep two representations:
+  * dense planes: uint8 {0,1} array of shape (n_docs, bits, dim) — used by
+    the error model (flips individual bits) and the reference MAC;
+  * packed planes: uint32 array (n_docs, bits, dim//32) — the kernel-side
+    layout (`kernels/dirc_mac.py`), 32 cells per word.
+
+Arithmetic identity (two's complement, b = bits-1 the sign bit):
+    value = -2^(b) * bit_b + sum_{i<b} 2^i * bit_i
+so  dot(q, d) = sum_{bq} sum_{bd} w(bq) w(bd) * popcount(Q_bq & D_bd).
+This is exactly what DIRC's NOR-multipliers + carry-save adder compute.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bit_weights(bits: int) -> jnp.ndarray:
+    """Signed two's-complement weight of each bit plane, LSB-first."""
+    w = [float(1 << i) for i in range(bits)]
+    w[bits - 1] = -w[bits - 1]
+    return jnp.asarray(w, dtype=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def to_bitplanes(values: jax.Array, bits: int = 8) -> jax.Array:
+    """int8 codes (..., dim) -> uint8 {0,1} planes (..., bits, dim), LSB-first."""
+    u = values.astype(jnp.int32) & ((1 << bits) - 1)  # two's complement, low `bits`
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    planes = (u[..., None, :] >> shifts[:, None]) & 1
+    return planes.astype(jnp.uint8)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def from_bitplanes(planes: jax.Array, bits: int = 8) -> jax.Array:
+    """Inverse of to_bitplanes: (..., bits, dim) {0,1} -> int8 codes (..., dim)."""
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    u = jnp.sum(planes.astype(jnp.int32) << shifts[:, None], axis=-2)
+    # sign-extend from `bits`
+    sign = 1 << (bits - 1)
+    v = jnp.where(u >= sign, u - (1 << bits), u)
+    return v.astype(jnp.int8)
+
+
+@partial(jax.jit, static_argnames=())
+def pack_words(planes: jax.Array) -> jax.Array:
+    """{0,1} planes (..., dim) -> packed uint32 words (..., dim//32).
+
+    dim must be a multiple of 32 (DIRC dims are 128..1024). Bit j of word w
+    is plane element w*32 + j (little-endian within the word).
+    """
+    *lead, dim = planes.shape
+    assert dim % 32 == 0, f"dim {dim} not a multiple of 32"
+    p = planes.reshape(*lead, dim // 32, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(p << shifts, axis=-1).astype(jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=())
+def unpack_words(words: jax.Array) -> jax.Array:
+    """Inverse of pack_words: (..., nw) uint32 -> (..., nw*32) uint8 {0,1}."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    *lead, nw, _ = bits.shape
+    return bits.reshape(*lead, nw * 32).astype(jnp.uint8)
+
+
+def bitserial_dot(q_values: jax.Array, d_planes: jax.Array, bits: int = 8) -> jax.Array:
+    """Bit-serial MAC, the functional model of a DIRC column pass.
+
+    q_values: int8 query codes (dim,) or (b, dim)
+    d_planes: uint8 {0,1} doc planes (n, bits, dim)
+    returns:  int32 scores (n,) or (b, n) — exact == integer dot product.
+
+    The loop order mirrors Fig. 4: outer over doc bit-planes (one ReRAM
+    sensing each), inner over query bits (one MAC cycle each).
+    """
+    q_planes = to_bitplanes(q_values, bits=bits)  # (..., bits, dim)
+    w = bit_weights(bits)
+    # popcount(Q_bq & D_bd) over dim == sum of elementwise AND for {0,1}
+    # (..., bq, dim) x (n, bd, dim) -> (..., bq, n, bd)
+    inter = jax.lax.dot_general(
+        q_planes.astype(jnp.int32),
+        d_planes.astype(jnp.int32),
+        (((q_planes.ndim - 1,), (d_planes.ndim - 1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc = jnp.einsum("...qnd,q,d->...n", inter.astype(jnp.float32), w, w)
+    return acc.astype(jnp.int32)
+
+
+def sum_d_lut(planes: jax.Array) -> jax.Array:
+    """Per-(doc, bit-plane) popcount — the D-Sum LUT for error detection.
+
+    planes: (n, bits, dim) -> (n, bits) int32. Computed OFFLINE from the
+    written (assumed-correct) data; compared at runtime against the adder
+    output when the input registers drive all-ones (paper Fig. 5b).
+    """
+    return jnp.sum(planes.astype(jnp.int32), axis=-1)
+
+
+def np_to_bitplanes(values: np.ndarray, bits: int = 8) -> np.ndarray:
+    """NumPy twin of to_bitplanes for host-side index building."""
+    u = values.astype(np.int64) & ((1 << bits) - 1)
+    shifts = np.arange(bits, dtype=np.int64)
+    return ((u[..., None, :] >> shifts[:, None]) & 1).astype(np.uint8)

@@ -1,0 +1,86 @@
+"""Sigma-D checksum error detection + re-sense loop (paper Fig. 5b).
+
+Offline, DIRC computes the bitwise popcount of every stored doc bit-plane
+and stores it in the D-Sum LUT (in the ReRAM buffer). At runtime, after a
+bit-plane is sensed into the SRAM plane, the input registers drive all
+logical '1's for one cycle so the adder emits the popcount of the sensed
+plane; a mismatch vs the LUT flags a sensing error and the plane is
+RE-SENSED (transient errors are independent across senses).
+
+Detection is a popcount equality check, so COMPENSATING flips (equal
+numbers of 0->1 and 1->0 in one plane) escape detection — we model that
+faithfully rather than idealizing the circuit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .error_model import apply_sense_errors
+
+
+class SenseResult(NamedTuple):
+    planes: jax.Array          # uint8 (n, bits, dim) — final sensed planes
+    detected: jax.Array        # int32 () — total mismatches detected (all rounds)
+    residual_planes: jax.Array  # int32 () — planes still mismatched after retries
+    rounds: jax.Array          # int32 () — sensing rounds executed (1 = no retry)
+
+
+def plane_popcount(planes: jax.Array) -> jax.Array:
+    """(n, bits, dim) {0,1} -> (n, bits) int32 popcounts (the adder output)."""
+    return jnp.sum(planes.astype(jnp.int32), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("max_retries", "detect"))
+def sense_with_detection(
+    clean_planes: jax.Array,
+    lut: jax.Array,
+    probs: jax.Array,
+    key: jax.Array,
+    max_retries: int = 3,
+    detect: bool = True,
+) -> SenseResult:
+    """Simulate sensing of all planes with the error channel + detection.
+
+    clean_planes: the true stored bits (n, bits, dim) — written correctly
+        (the paper assumes correct writes; the circuit targets read errors).
+    lut: D-Sum LUT (n, bits) int32 computed offline from clean planes.
+    probs: (n_slots, bits) per-position flip probabilities.
+    """
+    k0, kloop = jax.random.split(key)
+    sensed = apply_sense_errors(clean_planes, probs, k0)
+    if not detect:
+        return SenseResult(
+            planes=sensed,
+            detected=jnp.int32(0),
+            residual_planes=jnp.int32(0),
+            rounds=jnp.int32(1),
+        )
+
+    def body(i, state):
+        planes, total_detected, k = state
+        mismatch = plane_popcount(planes) != lut  # (n, bits) bool
+        n_bad = jnp.sum(mismatch.astype(jnp.int32))
+        k, sub = jax.random.split(k)
+        resensed = apply_sense_errors(clean_planes, probs, sub)
+        planes = jnp.where(mismatch[..., None], resensed, planes).astype(jnp.uint8)
+        return planes, total_detected + n_bad, k
+
+    planes, detected, _ = jax.lax.fori_loop(
+        0, max_retries, body, (sensed, jnp.int32(0), kloop)
+    )
+    residual = jnp.sum((plane_popcount(planes) != lut).astype(jnp.int32))
+    return SenseResult(
+        planes=planes,
+        detected=detected,
+        residual_planes=residual,
+        rounds=jnp.int32(1 + max_retries),
+    )
+
+
+def undetected_error_bits(sensed: jax.Array, clean: jax.Array) -> jax.Array:
+    """Ground-truth bit errors remaining (incl. compensating flips)."""
+    return jnp.sum((sensed != clean).astype(jnp.int32))

@@ -1,0 +1,106 @@
+"""Spatial ReRAM sensing-error model (paper Fig. 5a).
+
+The paper runs a 1000-point post-layout Monte-Carlo sim (ReRAM sigma=0.1,
+MOS mismatch, 0.8 V, 250 MHz) and reports:
+  * MSB of each MLC cell: 100% reliable (large signal margin);
+  * LSB: position-dependent flip probability over the 8x8 subarray —
+    smaller near the VSS rails (left/right columns), larger far from the
+    readout circuit (which sits on the RIGHT side of the subarray).
+
+We model the systematic part parametrically. Every DIRC cell in the macro
+shares the same layout, hence the same 8x8 profile; optional log-normal
+jitter models cell-to-cell variation. Errors are TRANSIENT per sensing
+event (that is why re-sensing in `error_detection.py` can fix them), so the
+flip channel is resampled per query / per retry with a fresh PRNG key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SUBARRAY_ROWS = 8
+SUBARRAY_COLS = 8
+CELLS = SUBARRAY_ROWS * SUBARRAY_COLS  # 64 MLC cells -> 64 MSB + 64 LSB bits
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorModelConfig:
+    enabled: bool = False
+    p_min: float = 1e-3      # LSB flip prob at the most reliable position
+    p_max: float = 5e-2      # ... at the least reliable position
+    jitter_sigma: float = 0.0  # log-normal cell-to-cell jitter (0 = systematic only)
+    seed: int = 0
+
+
+def lsb_error_map(cfg: ErrorModelConfig) -> np.ndarray:
+    """(8, 8) LSB flip probability per subarray position.
+
+    Geometry per paper Fig. 5(a): VSS rails on the left (c=0) and right
+    (c=7) edges; sensing circuit + SRAM on the right. Error grows with
+    distance from the nearest rail and with distance from the readout on
+    the right; rows far from the sense amp routing (top rows) are slightly
+    worse.
+    """
+    r = np.arange(SUBARRAY_ROWS, dtype=np.float64)[:, None]
+    c = np.arange(SUBARRAY_COLS, dtype=np.float64)[None, :]
+    dist_rail = np.minimum(c, (SUBARRAY_COLS - 1) - c) / ((SUBARRAY_COLS - 1) / 2)
+    dist_readout = ((SUBARRAY_COLS - 1) - c) / (SUBARRAY_COLS - 1)
+    dist_row = r / (SUBARRAY_ROWS - 1)
+    g = 0.55 * dist_rail + 0.35 * dist_readout + 0.10 * np.broadcast_to(
+        dist_row, (SUBARRAY_ROWS, SUBARRAY_COLS)
+    )
+    g = (g - g.min()) / (g.max() - g.min())
+    p = cfg.p_min + (cfg.p_max - cfg.p_min) * g
+    if cfg.jitter_sigma > 0:
+        rng = np.random.default_rng(cfg.seed)
+        p = p * rng.lognormal(0.0, cfg.jitter_sigma, size=p.shape)
+    return np.clip(p, 0.0, 0.5)
+
+
+def msb_error_map(cfg: ErrorModelConfig) -> np.ndarray:
+    """MSB flip probability — 0 everywhere (paper: '100% reliability')."""
+    del cfg
+    return np.zeros((SUBARRAY_ROWS, SUBARRAY_COLS), dtype=np.float64)
+
+
+def flip_probs_for_mapping(mapping: "np.ndarray", cfg: ErrorModelConfig) -> np.ndarray:
+    """Per-(slot, bit) flip probability given a bit->cell mapping.
+
+    mapping: int array (n_slots, bits, 3) of (row, col, level) with
+             level 0 = MSB, 1 = LSB (see `remapping.py`).
+    returns: float array (n_slots, bits).
+    """
+    lsb = lsb_error_map(cfg)
+    msb = msb_error_map(cfg)
+    rows = mapping[..., 0]
+    cols = mapping[..., 1]
+    lvl = mapping[..., 2]
+    return np.where(lvl == 1, lsb[rows, cols], msb[rows, cols])
+
+
+def apply_sense_errors(
+    planes: jax.Array,
+    probs: jax.Array,
+    key: jax.Array,
+) -> jax.Array:
+    """One sensing event: flip each bit of `planes` independently.
+
+    planes: uint8 {0,1} (n_docs, bits, dim)
+    probs:  fp32 per-(slot,bit) flip probability, broadcast over docs via
+            slot = doc_index mod n_slots, shape (n_slots, bits).
+    """
+    n, bits, dim = planes.shape
+    n_slots = probs.shape[0]
+    slot = jnp.arange(n) % n_slots
+    p = probs[slot]  # (n, bits)
+    flips = jax.random.bernoulli(key, p[..., None], shape=(n, bits, dim))
+    return jnp.where(flips, 1 - planes, planes).astype(jnp.uint8)
+
+
+def expected_bit_error_rate(probs: np.ndarray) -> float:
+    """Mean flip probability across (slot, bit) — a scalar summary."""
+    return float(np.mean(probs))

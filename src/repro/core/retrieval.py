@@ -1,0 +1,173 @@
+"""DircRagIndex — the end-to-end DIRC-RAG retrieval engine.
+
+Build: FP32 corpus embeddings -> per-row symmetric INT8/INT4 quantization
+-> two's-complement bit-planes (the ReRAM image) -> D-Sum LUT + integer
+norms (the ReRAM buffer) -> error-aware bit mapping.
+
+Search: query FP32 -> quantize -> (optionally error-injected, checksum
+re-sensed) bit-serial MAC or MXU-path scores -> cosine/MIPS -> hierarchical
+local/global top-k.
+
+Compute paths:
+  reference       fp32 dequantized matmul (oracle; no hardware semantics)
+  int_exact       exact integer dot product (what error-free DIRC computes)
+  bitserial       functional bit-plane MAC (paper Fig. 4) + error channel
+  kernel_bitserial Pallas `dirc_mac` (interpret-mode on CPU)
+  kernel_mxu      Pallas `score_matmul` (beyond-paper MXU path)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitplane, error_detection, error_model, quantization, remapping, topk
+
+PATHS = ("reference", "int_exact", "bitserial", "kernel_bitserial", "kernel_mxu")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalConfig:
+    bits: int = 8
+    metric: str = "cosine"            # "cosine" | "mips"
+    n_cores: int = 16
+    path: str = "int_exact"
+    mapping: str = "error_aware"      # remapping.STRATEGIES
+    error: error_model.ErrorModelConfig = dataclasses.field(
+        default_factory=error_model.ErrorModelConfig
+    )
+    detect: bool = True               # Sigma-D checksum + re-sense
+    max_retries: int = 3
+
+
+@dataclasses.dataclass
+class DircRagIndex:
+    config: RetrievalConfig
+    docs: quantization.QuantizedTensor          # (n, dim) int codes + scales
+    planes: jax.Array                           # (n, bits, dim) uint8 {0,1}
+    lut: jax.Array                              # (n, bits) int32 D-Sum LUT
+    doc_norms: jax.Array                        # (n,) fp32 integer norms
+    mapping: np.ndarray                         # (slots, bits, 3)
+    flip_probs: jax.Array                       # (slots, bits) fp32
+    n_docs: int
+    dim: int
+
+    # ---------------------------------------------------------------- build
+    @classmethod
+    def build(cls, embeddings: jax.Array, config: RetrievalConfig) -> "DircRagIndex":
+        n, dim = embeddings.shape
+        docs = quantization.quantize(embeddings, bits=config.bits, per_row=True)
+        planes = bitplane.to_bitplanes(docs.values, bits=config.bits)
+        lut = bitplane.sum_d_lut(planes)
+        norms = quantization.doc_int_norms(docs)
+        mapping = remapping.build_mapping(
+            config.mapping, bits=config.bits, error_cfg=config.error
+        )
+        probs = jnp.asarray(
+            error_model.flip_probs_for_mapping(mapping, config.error),
+            dtype=jnp.float32,
+        )
+        return cls(
+            config=config,
+            docs=docs,
+            planes=planes,
+            lut=lut,
+            doc_norms=norms,
+            mapping=mapping,
+            flip_probs=probs,
+            n_docs=n,
+            dim=dim,
+        )
+
+    # ---------------------------------------------------------------- sense
+    def sensed_planes(self, key: Optional[jax.Array]) -> tuple[jax.Array, dict]:
+        """Apply the per-query transient sensing channel (+ detection)."""
+        cfg = self.config
+        if not cfg.error.enabled or key is None:
+            return self.planes, {"detected": 0, "residual": 0}
+        res = error_detection.sense_with_detection(
+            self.planes,
+            self.lut,
+            self.flip_probs,
+            key,
+            max_retries=cfg.max_retries if cfg.detect else 0,
+            detect=cfg.detect,
+        )
+        stats = {
+            "detected": int(res.detected),
+            "residual": int(res.residual_planes),
+        }
+        return res.planes, stats
+
+    # ---------------------------------------------------------------- score
+    def scores(
+        self, queries: jax.Array, key: Optional[jax.Array] = None
+    ) -> jax.Array:
+        """(b, dim) fp32 queries -> (b, n_docs) similarity scores."""
+        cfg = self.config
+        if queries.ndim == 1:
+            queries = queries[None]
+        q = quantization.quantize_query(queries, bits=cfg.bits)
+
+        if cfg.path == "reference":
+            d = self.docs.dequantize()
+            qf = queries.astype(jnp.float32)
+            ip = qf @ d.T
+            if cfg.metric == "cosine":
+                qn = jnp.linalg.norm(qf, axis=-1, keepdims=True)
+                dn = jnp.linalg.norm(d, axis=-1)
+                return ip / jnp.maximum(qn * dn, 1e-12)
+            return ip
+
+        if cfg.path == "int_exact" and not cfg.error.enabled:
+            return quantization.quantized_scores(
+                q, self.docs, doc_norms=self.doc_norms, metric=cfg.metric
+            )
+
+        # Bit-plane paths (support the error channel).
+        planes, _ = self.sensed_planes(key)
+        if cfg.path in ("bitserial", "int_exact"):
+            ip = bitplane.bitserial_dot(q.values, planes, bits=cfg.bits)
+        elif cfg.path == "kernel_bitserial":
+            from repro.kernels import ops as kops
+
+            packed = bitplane.pack_words(planes)
+            ip = kops.dirc_mac(q.values, packed, bits=cfg.bits)
+        elif cfg.path == "kernel_mxu":
+            from repro.kernels import ops as kops
+
+            values = bitplane.from_bitplanes(planes, bits=cfg.bits)
+            ip = kops.score_matmul(q.values, values)
+        else:
+            raise ValueError(f"unknown path {self.config.path!r}")
+        return self._finalize(ip.astype(jnp.float32), q)
+
+    def _finalize(
+        self, ip: jax.Array, q: quantization.QuantizedTensor
+    ) -> jax.Array:
+        cfg = self.config
+        if cfg.metric == "mips":
+            d_scale = jnp.reshape(self.docs.scale, (-1,))
+            return ip * q.scale * d_scale
+        qn = jnp.sqrt(jnp.sum(q.values.astype(jnp.float32) ** 2, -1, keepdims=True))
+        return ip / jnp.maximum(qn * self.doc_norms, 1e-12)
+
+    # --------------------------------------------------------------- search
+    def search(
+        self, queries: jax.Array, k: int, key: Optional[jax.Array] = None
+    ) -> topk.TopK:
+        s = self.scores(queries, key=key)
+        n_cores = self.config.n_cores
+        if self.n_docs % n_cores:
+            return topk.local_topk(s, k)  # ragged db: single comparator
+        return topk.hierarchical_topk(s, k, n_cores=n_cores)
+
+    # ------------------------------------------------------------- memory
+    def storage_bytes(self) -> dict:
+        """ReRAM image + buffer sizes (what Table II's 'Embedding Size' is)."""
+        emb = self.n_docs * self.dim * self.config.bits // 8
+        buffer = self.n_docs * (4 + 4 + self.config.bits * 4 // 8)
+        return {"embeddings": emb, "reram_buffer": buffer}

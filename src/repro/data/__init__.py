@@ -1,0 +1,4 @@
+"""repro.data — synthetic corpora, tokenizer, resumable pipeline."""
+from .pipeline import DataPipeline, PipelineState  # noqa: F401
+from .synthetic import BigramLM, IRDataset, beir_analogue, make_ir_dataset  # noqa: F401
+from .tokenizer import ByteTokenizer  # noqa: F401

@@ -1,0 +1,10 @@
+"""repro.kernels — Pallas TPU kernels for the DIRC-RAG hot paths.
+
+  dirc_mac      bit-serial bit-plane MAC (paper-faithful digital CIM math)
+  score_matmul  MXU-path INT8 score matmul (+fused cosine) — beyond-paper
+  topk_select   per-block local top-k (the local comparator)
+
+ops.py = jit'd public wrappers; ref.py = pure-jnp oracles. All kernels are
+validated in interpret mode on CPU; on TPU set REPRO_PALLAS_INTERPRET=0.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,6 @@
+"""repro.launch — production meshes, dry-run, train/serve drivers.
+
+NOTE: do not import .dryrun here — it sets XLA_FLAGS at import time and
+must only be imported as the __main__ entry point.
+"""
+from .mesh import make_local_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,272 @@
+"""Step builders shared by train.py, serve.py and dryrun.py.
+
+train_step = microbatched loss+grad (lax.scan over grad-accum steps,
+fp32 accumulation in the FSDP-sharded grad layout) + AdamW update.
+serve_step = one-token decode against carried caches.
+prefill_step = full-sequence forward (the inference-prefill shape).
+
+All steps take/return sharded pytrees and are built against an explicit
+mesh; `shardings_for(...)` produces the matching in_shardings so AOT
+`.lower().compile()` works from ShapeDtypeStructs alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model, cache_specs, input_specs
+from repro.models import sharding as shmod
+from repro.optim import adamw
+from .mesh import batch_axes
+
+
+# ------------------------------------------------------------- shardings
+def batch_shardings(mesh: Mesh, specs: dict) -> dict:
+    ba = batch_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        if k == "positions" and len(v.shape) == 3:  # (3, b, s) — b is dim 1
+            out[k] = NamedSharding(mesh, P(None, ba, None))
+        else:
+            sz = 1
+            for a in ba:
+                sz *= mesh.shape[a]
+            spec_batch = ba if v.shape[0] % sz == 0 else None
+            out[k] = NamedSharding(
+                mesh, P(spec_batch, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def _cache_path_spec(path_str: str, shape, mesh: Mesh) -> P:
+    """Decode-cache shardings: batch over data axes, KV sequence over
+    `model` (SP / flash-decoding layout), SSM heads over `model`."""
+    ba = batch_axes(mesh)
+    bsz = 1
+    for a in ba:
+        bsz *= mesh.shape[a]
+    msz = mesh.shape.get("model", 1)
+
+    def b_ok(dim):
+        return ba if dim % bsz == 0 and dim >= bsz else None
+
+    name = path_str.split("/")[-1]
+    nd = len(shape)
+    if name in ("k", "v", "shared_k", "shared_v", "self_k", "self_v",
+                "cross_k", "cross_v"):
+        # (L, b, S, kh, hd)
+        seq = "model" if shape[2] % msz == 0 else None
+        return P(None, b_ok(shape[1]), seq, None, None)
+    if name == "ssm":
+        # (L, b, h, p, n)
+        h = "model" if shape[2] % msz == 0 else None
+        return P(None, b_ok(shape[1]), h, None, None)
+    if name.startswith("conv_x"):
+        c = "model" if shape[-1] % msz == 0 else None
+        return P(None, b_ok(shape[1]), None, c)
+    if name.startswith("conv_"):
+        return P(None, b_ok(shape[1]), None, None)
+    if name == "length":
+        return P(*([None] * nd))
+    return P(*([None] * nd))
+
+
+def cache_shardings(mesh: Mesh, caches_shape):
+    def one(path, leaf):
+        ps = shmod._path_str(path)
+        return NamedSharding(mesh, _cache_path_spec(ps, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, caches_shape)
+
+
+@dataclasses.dataclass
+class StepArtifacts:
+    fn: callable
+    arg_shapes: tuple      # ShapeDtypeStructs (with shardings)
+    in_shardings: tuple
+
+
+def _sds_tree(shape_tree, sharding_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree, sharding_tree)
+
+
+# ------------------------------------------------------------ train step
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     ocfg: Optional[adamw.AdamWConfig] = None,
+                     grad_accum: Optional[int] = None) -> StepArtifacts:
+    model = build_model(cfg)
+    ocfg = ocfg or adamw.AdamWConfig()
+    accum = grad_accum if grad_accum is not None else cfg.grad_accum_steps
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_sh = shmod.param_shardings(mesh, params_shape, cfg=cfg)
+    opt_shape = jax.eval_shape(adamw.init, params_shape)
+    o_sh = adamw.state_shardings(mesh, p_sh, params_shape)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)[0]
+
+    def _pin(grads):
+        """Pin grads to the (bf16) param sharding BEFORE the optimizer's
+        fp32 cast — otherwise GSPMD reduces/reshards the fp32 copies and
+        doubles every gradient collective's bytes."""
+        return jax.tree_util.tree_map(
+            lambda g, sh: jax.lax.with_sharding_constraint(g, sh),
+            grads, p_sh)
+
+    def train_step(params, opt, batch):
+        with shmod.sharding_ctx(mesh):
+            if accum <= 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                grads = _pin(grads)
+            else:
+                # microbatch: (B, ...) -> (accum, B/accum, ...); grads
+                # accumulate in fp32 in the (FSDP-sharded) param layout.
+                def _split(k, x):
+                    if k == "positions" and x.ndim == 3:
+                        # (3, B, S): batch lives on dim 1
+                        return x.reshape(x.shape[0], accum,
+                                         x.shape[1] // accum,
+                                         *x.shape[2:]).swapaxes(0, 1)
+                    return x.reshape(accum, x.shape[0] // accum,
+                                     *x.shape[1:])
+
+                micro = {k: _split(k, v) for k, v in batch.items()}
+                zeros = _pin(jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+                def mb(carry, mbatch):
+                    g_acc, l_acc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                    g = _pin(g)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(jnp.float32) / accum,
+                        g_acc, g)
+                    return (g_acc, l_acc + l / accum), None
+
+                (grads, loss), _ = jax.lax.scan(
+                    mb, (zeros, jnp.float32(0.0)), micro)
+            new_params, new_opt, metrics = adamw.update(ocfg, grads, opt,
+                                                        params)
+            metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    shape = None  # batch shapes supplied by caller at lower time
+    return StepArtifacts(
+        fn=train_step,
+        arg_shapes=(
+            _sds_tree(params_shape, p_sh),
+            _sds_tree(opt_shape, o_sh),
+        ),
+        in_shardings=(p_sh, o_sh),
+    )
+
+
+def train_step_lowered(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                       ocfg: Optional[adamw.AdamWConfig] = None,
+                       grad_accum: Optional[int] = None):
+    """AOT-lower the train step for one (arch x shape x mesh) cell."""
+    art = build_train_step(cfg, mesh, ocfg, grad_accum)
+    bs = input_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, bs)
+    batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=b_sh[k])
+                 for k, v in bs.items()}
+    with mesh:
+        lowered = jax.jit(
+            art.fn, in_shardings=(*art.in_shardings, b_sh)
+        ).lower(*art.arg_shapes, batch_sds)
+    return lowered
+
+
+# --------------------------------------------------- inference shardings
+def inference_param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape):
+    """Serving keeps weights TP-sharded and replicated over `data` when
+    they fit (<= 8 GiB/device): FSDP would re-gather every weight on
+    EVERY decoded token. Oversized models (e.g. arctic-480b) keep FSDP
+    and pay the per-token gather — the roofline shows that cost honestly.
+    """
+    per_dev = sum(
+        l.size * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(params_shape)
+    ) / max(mesh.shape.get("model", 1), 1)
+    # Measured (EXPERIMENTS.md Perf-3): TP-only wins 1.6-3.6x for dense
+    # decode but REGRESSES MoE (experts already model-sharded; FSDP on
+    # the small dense remainder was nearly free) and hybrid models.
+    if cfg.moe is None and cfg.family != "hybrid" and per_dev <= 8 * 2**30:
+        rules = shmod.default_rules(mesh)
+        rules["fsdp"] = ()  # disable FSDP for inference weights
+        return shmod.param_shardings(mesh, params_shape, cfg=cfg,
+                                     rules=rules)
+    return shmod.param_shardings(mesh, params_shape, cfg=cfg)
+
+
+# ------------------------------------------------------------ serve step
+def serve_step_lowered(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    """One-token decode against a seq_len-deep cache (decode shapes)."""
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_sh = inference_param_shardings(cfg, mesh, params_shape)
+    caches_shape = cache_specs(cfg, shape)
+    c_sh = cache_shardings(mesh, caches_shape)
+    bs = input_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, bs)
+
+    def serve_step(params, caches, batch):
+        with shmod.sharding_ctx(mesh):
+            logits, new_caches = model.decode_step(params, caches,
+                                                   batch["token"])
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, new_caches
+
+    batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=b_sh[k])
+                 for k, v in bs.items()}
+    with mesh:
+        lowered = jax.jit(
+            serve_step, in_shardings=(p_sh, c_sh, b_sh),
+            donate_argnums=(1,),
+        ).lower(_sds_tree(params_shape, p_sh), _sds_tree(caches_shape, c_sh),
+                batch_sds)
+    return lowered
+
+
+# ---------------------------------------------------------- prefill step
+def prefill_step_lowered(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    """Full-sequence forward returning last-position logits."""
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_sh = inference_param_shardings(cfg, mesh, params_shape)
+    bs = input_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, bs)
+
+    def prefill_step(params, batch):
+        with shmod.sharding_ctx(mesh):
+            kwargs = {}
+            if "positions" in batch:
+                kwargs["positions"] = batch["positions"]
+            if cfg.family == "audio":
+                logits, _ = model.forward(params, batch["tokens"],
+                                          batch["frames"])
+            else:
+                logits, _ = model.forward(params, tokens=batch["tokens"],
+                                          **kwargs)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=b_sh[k])
+                 for k, v in bs.items()}
+    with mesh:
+        lowered = jax.jit(prefill_step, in_shardings=(p_sh, b_sh)).lower(
+            _sds_tree(params_shape, p_sh), batch_sds)
+    return lowered
+
+
+def lower_cell(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    if shape.kind == "train":
+        return train_step_lowered(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return prefill_step_lowered(cfg, mesh, shape)
+    return serve_step_lowered(cfg, mesh, shape)

@@ -1,0 +1,2 @@
+"""repro.models — the ten assigned generator architectures in pure JAX."""
+from .model_api import build_model, input_specs, cache_specs, param_specs  # noqa: F401

@@ -1,0 +1,245 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: `input_specs` provides
+precomputed frame embeddings (b, n_frames, d_enc). Encoder = non-causal
+transformer with learned positions; decoder = causal self-attention +
+cross-attention to the encoder output, with a self-attention KV cache and
+precomputed cross-attention K/V for decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention, layers, sharding
+
+
+class EncDecCaches(NamedTuple):
+    self_k: jax.Array    # (L, b, S, kh, hd)
+    self_v: jax.Array
+    cross_k: jax.Array   # (L, b, F, kh, hd) — precomputed from encoder
+    cross_v: jax.Array
+    length: jax.Array    # (b,)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encoder is not None
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def _init_enc_block(self, key):
+        cfg, e = self.cfg, self.cfg.encoder
+        ka, km = jax.random.split(key)
+        return {
+            "attn_norm": layers.init_norm(cfg, e.d_model),
+            "attn": attention.init_attention(
+                cfg, ka, d_model=e.d_model, n_heads=e.n_heads,
+                n_kv_heads=e.n_heads, n_layers_scale=e.n_layers),
+            "mlp_norm": layers.init_norm(cfg, e.d_model),
+            "mlp": {
+                "w_up": layers.normal(km, (e.d_model, e.d_ff),
+                                      e.d_model**-0.5, layers.dt(cfg.param_dtype)),
+                "w_down": layers.normal(jax.random.fold_in(km, 1),
+                                        (e.d_ff, e.d_model),
+                                        e.d_ff**-0.5, layers.dt(cfg.param_dtype)),
+            },
+        }
+
+    def _init_dec_block(self, key):
+        cfg = self.cfg
+        ka, kc, km = jax.random.split(key, 3)
+        return {
+            "attn_norm": layers.init_norm(cfg),
+            "attn": attention.init_attention(cfg, ka),
+            "cross_norm": layers.init_norm(cfg),
+            "cross": attention.init_attention(cfg, kc),
+            "mlp_norm": layers.init_norm(cfg),
+            "mlp": layers.init_mlp(cfg, km),
+        }
+
+    def init(self, key) -> dict:
+        cfg, e = self.cfg, self.cfg.encoder
+        keys = jax.random.split(key, 6)
+        enc_blocks = jax.vmap(self._init_enc_block)(
+            jax.random.split(keys[0], e.n_layers))
+        dec_blocks = jax.vmap(self._init_dec_block)(
+            jax.random.split(keys[1], cfg.n_layers))
+        pdt = layers.dt(cfg.param_dtype)
+        # enc d_model may differ from dec d_model: bridge projection if so.
+        p = {
+            "embedding": layers.init_embedding(cfg, keys[2]),
+            "enc_pos_embed": layers.normal(keys[3], (e.n_frames, e.d_model),
+                                           0.02, pdt),
+            "encoder": enc_blocks,
+            "enc_final_norm": layers.init_norm(cfg, e.d_model),
+            "decoder": dec_blocks,
+            "final_norm": layers.init_norm(cfg),
+        }
+        if e.d_model != cfg.d_model:
+            p["bridge"] = layers.normal(keys[4], (e.d_model, cfg.d_model),
+                                        e.d_model**-0.5, pdt)
+        return p
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames (b, F, d_enc) stub embeddings -> encoder output."""
+        cfg, e = self.cfg, self.cfg.encoder
+        cdt = layers.dt(cfg.compute_dtype)
+        x = frames.astype(cdt) + params["enc_pos_embed"].astype(cdt)[None]
+
+        def block(x, p):
+            h = layers.apply_norm(cfg, p["attn_norm"], x)
+            x = x + attention.attend_train(
+                cfg, p["attn"], h, None, h=e.n_heads, kh=e.n_heads,
+                causal=False)
+            h2 = layers.apply_norm(cfg, p["mlp_norm"], x)
+            u = jax.nn.gelu(h2.astype(cdt) @ p["mlp"]["w_up"].astype(cdt))
+            x = x + u @ p["mlp"]["w_down"].astype(cdt)
+            return sharding.constrain(x, ("batch", "seq", None)), None
+
+        from .transformer import _remat
+
+        x, _ = jax.lax.scan(_remat(cfg, block), x, params["encoder"],
+                            unroll=cfg.scan_unroll)
+        x = layers.apply_norm(cfg, params["enc_final_norm"], x)
+        if "bridge" in params:
+            x = x.astype(cdt) @ params["bridge"].astype(cdt)
+        return x
+
+    # ------------------------------------------------------------ decoder
+    def _dec_block(self, p, x, enc_out, angles):
+        cfg = self.cfg
+        h = layers.apply_norm(cfg, p["attn_norm"], x)
+        x = x + attention.attend_train(cfg, p["attn"], h, angles)
+        h2 = layers.apply_norm(cfg, p["cross_norm"], x)
+        x = x + attention.cross_attention(cfg, p["cross"], h2, enc_out,
+                                          cfg.n_heads, cfg.n_kv_heads)
+        h3 = layers.apply_norm(cfg, p["mlp_norm"], x)
+        x = x + layers.apply_mlp(cfg, p["mlp"], h3)
+        return sharding.constrain(x, ("batch", "seq", None))
+
+    def forward(self, params, tokens, frames, positions=None):
+        """Teacher-forced decode over the full token sequence."""
+        cfg = self.cfg
+        from . import rope
+
+        enc_out = self.encode(params, frames)
+        x = layers.embed_tokens(cfg, params["embedding"], tokens)
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)) \
+            if positions is None else positions
+        angles = rope.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+        from .transformer import _remat
+
+        def scan_fn(x, p):
+            return self._dec_block(p, x, enc_out, angles), None
+
+        x, _ = jax.lax.scan(_remat(cfg, scan_fn), x, params["decoder"],
+                            unroll=cfg.scan_unroll)
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        logits = layers.logits_from_hidden(cfg, params["embedding"], x)
+        return logits, jnp.zeros((3,), jnp.float32)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        from . import rope
+
+        enc_out = self.encode(params, batch["frames"])
+        x = layers.embed_tokens(cfg, params["embedding"], batch["tokens"])
+        b, s, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        angles = rope.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        from .transformer import _remat
+
+        def scan_fn(xc, p):
+            return self._dec_block(p, xc, enc_out, angles), None
+
+        x, _ = jax.lax.scan(_remat(cfg, scan_fn), x, params["decoder"],
+                            unroll=cfg.scan_unroll)
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        ce = layers.lm_head_loss(cfg, params["embedding"], x, batch["labels"])
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------ serving
+    def init_caches(self, batch: int, cache_len: int, prefix_len,
+                    enc_out: Optional[jax.Array] = None) -> EncDecCaches:
+        cfg, e = self.cfg, self.cfg.encoder
+        kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cdt = layers.dt(cfg.compute_dtype)
+        L = cfg.n_layers
+        F = e.n_frames
+        return EncDecCaches(
+            self_k=jnp.zeros((L, batch, cache_len, kh, hd), cdt),
+            self_v=jnp.zeros((L, batch, cache_len, kh, hd), cdt),
+            cross_k=jnp.zeros((L, batch, F, kh, hd), cdt),
+            cross_v=jnp.zeros((L, batch, F, kh, hd), cdt),
+            length=jnp.broadcast_to(jnp.asarray(prefix_len, jnp.int32),
+                                    (batch,)),
+        )
+
+    def precompute_cross(self, params, enc_out: jax.Array):
+        """Per-layer cross K/V from the encoder output (done once)."""
+        cfg = self.cfg
+        kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cdt = layers.dt(cfg.compute_dtype)
+        b, F, _ = enc_out.shape
+
+        def one(p):
+            k = (enc_out.astype(cdt) @ p["cross"]["wk"].astype(cdt))
+            v = (enc_out.astype(cdt) @ p["cross"]["wv"].astype(cdt))
+            return k.reshape(b, F, kh, hd), v.reshape(b, F, kh, hd)
+
+        return jax.vmap(one)(params["decoder"])  # (L, b, F, kh, hd) x2
+
+    def decode_step(self, params, caches: EncDecCaches, token: jax.Array,
+                    positions: Optional[jax.Array] = None):
+        cfg = self.cfg
+        from . import rope
+
+        x = layers.embed_tokens(cfg, params["embedding"], token)
+        b = x.shape[0]
+        pos = caches.length[:, None] if positions is None else positions
+        angles = rope.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        h_q = cfg.n_heads
+        cdt = layers.dt(cfg.compute_dtype)
+
+        def block(carry, inp):
+            x = carry
+            p, sk, sv, ck, cv = inp
+            cache = attention.KVCache(k=sk, v=sv, length=caches.length)
+            h = layers.apply_norm(cfg, p["attn_norm"], x)
+            y, nc = attention.decode_step(cfg, p["attn"], h, cache, angles)
+            x = x + y
+            # cross attention against precomputed K/V (no mask, no rope)
+            h2 = layers.apply_norm(cfg, p["cross_norm"], x)
+            q = (h2.astype(cdt) @ p["cross"]["wq"].astype(cdt)).reshape(
+                b, 1, h_q, hd)
+            g = h_q // kh
+            qg = q.reshape(b, 1, kh, g, hd) * hd**-0.5
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
+                           preferred_element_type=jnp.float32)
+            pattn = jax.nn.softmax(s, axis=-1).astype(cdt)
+            o = jnp.einsum("bkgqs,bskd->bqkgd", pattn, cv)
+            o = o.reshape(b, 1, h_q * hd) @ p["cross"]["wo"].astype(cdt)
+            x = x + o
+            h3 = layers.apply_norm(cfg, p["mlp_norm"], x)
+            x = x + layers.apply_mlp(cfg, p["mlp"], h3)
+            return x, (nc.k, nc.v)
+
+        (x), (nk, nv) = jax.lax.scan(
+            block, x,
+            (params["decoder"], caches.self_k, caches.self_v,
+             caches.cross_k, caches.cross_v),
+            unroll=cfg.scan_unroll,
+        )
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        logits = layers.logits_from_hidden(cfg, params["embedding"], x[:, -1])
+        new = EncDecCaches(self_k=nk, self_v=nv, cross_k=caches.cross_k,
+                           cross_v=caches.cross_v, length=caches.length + 1)
+        return logits, new

@@ -1,0 +1,192 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+The published Zamba2 design (arXiv:2411.15242) interleaves a single
+weight-shared attention(+MLP) block into a Mamba2 backbone: the same
+attention weights are applied every `hybrid_attn_every` SSM layers.
+We implement exactly that weight sharing: the backbone is grouped as
+(n_groups x every) SSM layers scanned per group, with the shared block
+applied between groups.
+
+Decode state = per-layer Mamba states + ONE KV cache (the shared block's),
+which is why long_500k decode is tractable: the only O(S) memory is a
+single-layer KV cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention, layers, mamba2, sharding
+
+
+class HybridCaches(NamedTuple):
+    mamba: mamba2.MambaState     # leaves stacked (L, ...)
+    shared_k: jax.Array          # (n_apps, b, S, kh, hd)
+    shared_v: jax.Array
+    length: jax.Array            # (b,)
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.hybrid_attn_every > 0 and cfg.ssm is not None
+        assert cfg.n_layers % cfg.hybrid_attn_every == 0
+        self.cfg = cfg
+        self.n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        self.per_group = cfg.hybrid_attn_every
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kb, ks, km = jax.random.split(key, 4)
+        block_keys = jax.random.split(kb, cfg.n_layers)
+
+        def init_layer(k):
+            return {
+                "norm": layers.init_norm(cfg),
+                "mamba": mamba2.init_mamba_block(cfg, k),
+            }
+
+        blocks = jax.vmap(init_layer)(block_keys)
+        shared = {
+            "attn_norm": layers.init_norm(cfg),
+            "attn": attention.init_attention(cfg, ks),
+            "mlp_norm": layers.init_norm(cfg),
+            "mlp": layers.init_mlp(cfg, km),
+        }
+        return {
+            "embedding": layers.init_embedding(cfg, ke),
+            "blocks": blocks,
+            "shared": shared,
+            "final_norm": layers.init_norm(cfg),
+        }
+
+    # ---------------------------------------------------------- reshaping
+    def _grouped(self, blocks):
+        """(L, ...) stacked params -> (n_groups, per_group, ...)."""
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape(self.n_groups, self.per_group, *x.shape[1:]),
+            blocks,
+        )
+
+    # ------------------------------------------------------------ forward
+    def _shared_fwd(self, shared, x, angles):
+        cfg = self.cfg
+        h = layers.apply_norm(cfg, shared["attn_norm"], x)
+        x = x + attention.attend_train(cfg, shared["attn"], h, angles)
+        h2 = layers.apply_norm(cfg, shared["mlp_norm"], x)
+        return x + layers.apply_mlp(cfg, shared["mlp"], h2)
+
+    def hidden_states(self, params, tokens=None, embeds=None, positions=None):
+        cfg = self.cfg
+        if embeds is None:
+            embeds = layers.embed_tokens(cfg, params["embedding"], tokens)
+        b, s, _ = embeds.shape
+        from . import rope
+
+        angles = rope.rope_angles(
+            jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            if positions is None else positions,
+            cfg.resolved_head_dim, cfg.rope_theta,
+        )
+
+        def mamba_layer(x, p):
+            h = layers.apply_norm(cfg, p["norm"], x)
+            y = x + mamba2.apply_mamba_block(cfg, p["mamba"], h)
+            y = sharding.constrain(y, ("batch", "seq", None))
+            return y, None
+
+        from .transformer import _remat
+
+        def group_fn(x, group_params):
+            x, _ = jax.lax.scan(_remat(cfg, mamba_layer), x, group_params,
+                                unroll=cfg.scan_unroll)
+            x = _remat(cfg, self._shared_fwd)(params["shared"], x, angles)
+            return x, None
+
+        x, _ = jax.lax.scan(group_fn, embeds, self._grouped(params["blocks"]),
+                            unroll=cfg.scan_unroll)
+        return layers.apply_norm(cfg, params["final_norm"], x)
+
+    def forward(self, params, tokens=None, embeds=None, positions=None):
+        x = self.hidden_states(params, tokens, embeds, positions)
+        logits = layers.logits_from_hidden(self.cfg, params["embedding"], x)
+        return logits, jnp.zeros((3,), jnp.float32)
+
+    def loss(self, params, batch):
+        x = self.hidden_states(params, tokens=batch.get("tokens"),
+                               positions=batch.get("positions"))
+        ce = layers.lm_head_loss(self.cfg, params["embedding"], x,
+                                 batch["labels"])
+        return ce, {"ce": ce}
+
+    # ------------------------------------------------------------ serving
+    def init_caches(self, batch: int, cache_len: int, prefix_len) -> HybridCaches:
+        cfg = self.cfg
+        L = cfg.n_layers
+        st = mamba2.init_mamba_state(cfg, batch)
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (L, *x.shape)), st
+        )
+        kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cdt = layers.dt(cfg.compute_dtype)
+        kshape = (self.n_groups, batch, cache_len, kh, hd)
+        return HybridCaches(
+            mamba=stacked,
+            shared_k=jnp.zeros(kshape, cdt),
+            shared_v=jnp.zeros(kshape, cdt),
+            length=jnp.broadcast_to(jnp.asarray(prefix_len, jnp.int32),
+                                    (batch,)),
+        )
+
+    def decode_step(self, params, caches: HybridCaches, token: jax.Array,
+                    positions: Optional[jax.Array] = None):
+        cfg = self.cfg
+        from . import rope
+
+        x = layers.embed_tokens(cfg, params["embedding"], token)
+        b = x.shape[0]
+        pos = caches.length[:, None] if positions is None else positions
+        angles = rope.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+        grouped = self._grouped(params["blocks"])
+        mamba_grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(self.n_groups, self.per_group, *a.shape[1:]),
+            caches.mamba,
+        )
+
+        def mamba_layer(x, p_st):
+            p, st = p_st
+            h = layers.apply_norm(cfg, p["norm"], x)
+            y, new_st = mamba2.decode_mamba_block(cfg, p["mamba"], h, st)
+            return x + y, new_st
+
+        def group_fn(carry, inp):
+            x = carry
+            gp, g_state, k, v = inp
+            x, new_states = jax.lax.scan(mamba_layer, x, (gp, g_state),
+                                         unroll=cfg.scan_unroll)
+            cache = attention.KVCache(k=k, v=v, length=caches.length)
+            h = layers.apply_norm(cfg, params["shared"]["attn_norm"], x)
+            y, new_cache = attention.decode_step(
+                cfg, params["shared"]["attn"], h, cache, angles)
+            x = x + y
+            h2 = layers.apply_norm(cfg, params["shared"]["mlp_norm"], x)
+            x = x + layers.apply_mlp(cfg, params["shared"]["mlp"], h2)
+            return x, (new_states, new_cache.k, new_cache.v)
+
+        x, (new_mamba_g, new_k, new_v) = jax.lax.scan(
+            group_fn, x,
+            (grouped, mamba_grouped, caches.shared_k, caches.shared_v),
+            unroll=cfg.scan_unroll,
+        )
+        new_mamba = jax.tree_util.tree_map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_mamba_g
+        )
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        logits = layers.logits_from_hidden(cfg, params["embedding"], x[:, -1])
+        new = HybridCaches(mamba=new_mamba, shared_k=new_k, shared_v=new_v,
+                           length=caches.length + 1)
+        return logits, new

@@ -1,0 +1,236 @@
+"""Shared model building blocks: norms, MLPs, embeddings, logits.
+
+Everything is functional: `init_*` returns a params dict; `apply`-style
+functions are pure. Params are created in cfg.param_dtype and cast to
+cfg.compute_dtype inside the blocks (mixed precision).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+def normal(key, shape, std, dtype):
+    return (std * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> dict:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=dt(cfg.param_dtype))}
+    if cfg.norm == "layernorm" and True:
+        # bias kept zero-init; command-r uses no-bias layernorm -> scale only
+        pass
+    return p
+
+
+def apply_norm(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+    y = y * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_rmsnorm(params: dict, x: jax.Array, z: jax.Array, eps: float) -> jax.Array:
+    """Mamba2 gated RMSNorm: norm(x * silu(z))."""
+    g = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(g * g, axis=-1, keepdims=True)
+    y = g * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLPs
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pdt = dt(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d**-0.5
+    std_out = f**-0.5 / (2 * cfg.n_layers) ** 0.5
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": normal(k1, (d, f), std_in, pdt),
+            "w_up": normal(k2, (d, f), std_in, pdt),
+            "w_down": normal(k3, (f, d), std_out, pdt),
+        }
+    return {
+        "w_up": normal(k1, (d, f), std_in, pdt),
+        "w_down": normal(k2, (f, d), std_out, pdt),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    cdt = dt(cfg.compute_dtype)
+    x = x.astype(cdt)
+    if cfg.mlp == "swiglu":
+        g = x @ params["w_gate"].astype(cdt)
+        u = x @ params["w_up"].astype(cdt)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(cdt))
+    return h @ params["w_down"].astype(cdt)
+
+
+# -------------------------------------------------------------- embeddings
+def init_embedding(cfg: ModelConfig, key) -> dict:
+    pdt = dt(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    vp = cfg.padded_vocab_size
+    p = {"embed": normal(k1, (vp, cfg.d_model), 0.02, pdt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal(k2, (cfg.d_model, vp),
+                              cfg.d_model**-0.5, pdt)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    from . import sharding
+
+    # Re-gather the fsdp axis first: a (tp, fsdp)-sharded table makes the
+    # token gather (and any matmul contracting d) produce giant
+    # all-reduces; the table itself is small once vocab-sharded.
+    w = sharding.constrain(params["embed"], ("tp", None))
+    return sharding.constrain(
+        w.astype(dt(cfg.compute_dtype))[tokens], ("batch", "seq", None))
+
+
+def logits_from_hidden(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    from . import sharding
+
+    cdt = dt(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        w = sharding.constrain(params["embed"], ("tp", None)).astype(cdt).T
+    else:
+        w = sharding.constrain(params["lm_head"], (None, "tp")).astype(cdt)
+    logits = (x.astype(cdt) @ w).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        # mask (not slice) the pad slots: keeps the vocab axis shardable
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab_size, logits, -1e30)
+    # The fp32 logits are by far the largest activation (b, s, V): keep the
+    # vocab axis sharded over `model`; cross_entropy_loss is written to
+    # reduce over the sharded axis without ever gathering it.
+    spec = ("batch",) + (None,) * (logits.ndim - 2) + ("tp",)
+    return sharding.constrain(logits, spec)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy; labels < 0 are ignored.
+
+    Vocab-sharding friendly: the gold logit is extracted with a one-hot
+    contraction (partial sum + all-reduce under GSPMD) instead of a gather
+    across the sharded vocab axis.
+    """
+    valid = labels >= 0 if mask is None else mask & (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _head_ce(real_v: int, hidden: jax.Array, w: jax.Array,
+             labels: jax.Array) -> jax.Array:
+    """Fused LM-head cross-entropy: loss = mean(logsumexp(h@W^T) - gold).
+
+    Never materializes an fp32 (b, s, V) buffer in fwd OR bwd: the fwd
+    keeps logits in compute dtype with fp32 fused reductions and extracts
+    the gold logit by gathering the label's embedding row; the custom bwd
+    recomputes softmax tile-wise into a compute-dtype dlogits.
+    real_v: true vocab size — slots >= real_v (padding) are masked out.
+    """
+    loss, _ = _head_ce_fwd(real_v, hidden, w, labels)
+    return loss
+
+
+def _masked_logits(real_v, hidden, w):
+    from . import sharding
+
+    w = sharding.constrain(w, ("tp", None))              # re-gather fsdp dim
+    logits = hidden @ w.T                                # (b, s, Vp) cdt
+    if w.shape[0] != real_v:
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        neg = jnp.asarray(-1e30, logits.dtype)
+        logits = jnp.where(iota < real_v, logits, neg)
+    return sharding.constrain(logits, ("batch", None, "tp"))
+
+
+def _head_ce_fwd(real_v, hidden, w, labels):
+    logits = _masked_logits(real_v, hidden, w)
+    m = jnp.max(logits, axis=-1, keepdims=True)          # (b, s, 1)
+    z = jnp.sum(jnp.exp((logits - m).astype(jnp.float32)), axis=-1)
+    logz = jnp.log(z) + m[..., 0].astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    from . import sharding as _sh
+
+    gold_rows = _sh.constrain(w, ("tp", None))[safe]     # (b, s, d)
+    gold = jnp.einsum("bsd,bsd->bs", hidden, gold_rows,
+                      preferred_element_type=jnp.float32)
+    count = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum((logz - gold) * valid) / count
+    return loss, (hidden, w, m, z, valid, safe, count)
+
+
+def _head_ce_bwd(real_v, res, g):
+    hidden, w, m, z, valid, safe, count = res
+    from . import sharding
+
+    logits = _masked_logits(real_v, hidden, w)
+    p = jnp.exp((logits - m).astype(jnp.float32)) / z[..., None]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = (iota == safe[..., None]).astype(jnp.float32)
+    scale = (g * valid.astype(jnp.float32) / count)[..., None]
+    dlogits = ((p - onehot) * scale).astype(hidden.dtype)  # (b, s, Vp) cdt
+    dlogits = sharding.constrain(dlogits, ("batch", None, "tp"))
+    dh = dlogits @ w                                     # (b, s, d)
+    dw = jax.lax.dot_general(
+        dlogits, hidden,
+        (((0, 1), (0, 1)), ((), ())),                    # contract b, s
+        preferred_element_type=jnp.float32,
+    )
+    return dh, dw.astype(w.dtype), None
+
+
+_head_ce.defvjp(_head_ce_fwd, _head_ce_bwd)
+
+
+def lm_head_loss(cfg: ModelConfig, params: dict, hidden: jax.Array,
+                 labels: jax.Array) -> jax.Array:
+    """Memory-lean LM loss over the (possibly vocab-sharded) head.
+
+    Equals cross_entropy_loss(fp32 logits, labels) up to compute-dtype
+    rounding of the logits (verified in tests). Falls back to the explicit
+    logits path when logit_softcap is set.
+    """
+    cdt = dt(cfg.compute_dtype)
+    if cfg.logit_softcap:
+        logits = logits_from_hidden(cfg, params, hidden)
+        return cross_entropy_loss(logits, labels)
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"].T
+    return _head_ce(cfg.vocab_size, hidden.astype(cdt), w.astype(cdt),
+                    labels)

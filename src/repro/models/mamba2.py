@@ -1,0 +1,285 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked SSD forward (training / prefill): intra-chunk quadratic term with
+a segment-sum decay mask + inter-chunk state recurrence via `lax.scan` —
+O(S * chunk) compute, O(1)-per-step decode state. Single-step decode
+updates the (b, h, p, n) state in closed form.
+
+The reference Mamba2 fuses [z|x|B|C|dt] into one in_proj; we keep SEPARATE
+projection matrices (identical math) so tensor parallelism can shard the
+d_inner projections over the `model` axis without slicing across segment
+boundaries, and the depthwise conv splits per segment for the same reason
+(depthwise == per-channel, so splitting is exact).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SSMConfig
+from . import layers
+
+NEG_INF = -1.0e30
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array     # (b, h, p, n) fp32
+    conv_x: jax.Array  # (b, cw-1, d_inner)
+    conv_B: jax.Array  # (b, cw-1, g*n)
+    conv_C: jax.Array  # (b, cw-1, g*n)
+
+
+# --------------------------------------------------------------------- SSD
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., cl) -> (..., cl, cl) with T[i, j] = sum_{k in (j, i]} a[k],
+    lower-triangular (i >= j), -inf above the diagonal."""
+    cl = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(cl)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(
+    x: jax.Array,      # (b, s, h, p)
+    dt: jax.Array,     # (b, s, h) — post-softplus
+    A: jax.Array,      # (h,) negative
+    B: jax.Array,      # (b, s, g, n)
+    C: jax.Array,      # (b, s, g, n)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (b, h, p, n)
+    unroll: bool = False,
+):
+    """Returns (y (b, s, h, p), final_state (b, h, p, n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[-2:]
+    r = h // g
+    cl = min(chunk, s)
+    if s % cl:
+        raise ValueError(f"seq {s} not divisible by chunk {cl}")
+    nc = s // cl
+
+    f32 = jnp.float32
+    a = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, cl, g, r)
+    xd = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, nc, cl, g, r, p)
+    Bc = B.astype(f32).reshape(b, nc, cl, g, n)
+    Cc = C.astype(f32).reshape(b, nc, cl, g, n)
+
+    a_t = a.transpose(0, 1, 3, 4, 2)            # (b, nc, g, r, cl)
+    a_cum = jnp.cumsum(a_t, axis=-1)            # within-chunk cumsum
+    L = jnp.exp(_segsum(a_t))                   # (b, nc, g, r, cl, cl)
+
+    # Intra-chunk (the "quadratic attention-like" term).
+    y_diag = jnp.einsum(
+        "bclgn,bcsgn,bcgrls,bcsgrp->bclgrp", Cc, Bc, L, xd,
+        preferred_element_type=f32,
+    )
+
+    # Per-chunk input states.
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (b, nc, g, r, cl)
+    states = jnp.einsum(
+        "bcsgn,bcgrs,bcsgrp->bcgrpn", Bc, decay_states, xd,
+        preferred_element_type=f32,
+    )
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(a_cum[..., -1])            # (b, nc, g, r)
+    init = (
+        jnp.zeros((b, g, r, p, n), f32)
+        if initial_state is None
+        else initial_state.astype(f32).reshape(b, g, r, p, n)
+    )
+
+    def step(prev, inp):
+        dec, st = inp                                # (b,g,r), (b,g,r,p,n)
+        new = prev * dec[..., None, None] + st
+        return new, prev                             # emit state BEFORE chunk
+
+    del unroll  # heavy einsums are outside this scan; body is negligible
+    final, prev_states = jax.lax.scan(
+        step, init, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1))
+    )
+    prev_states = prev_states.swapaxes(0, 1)         # (b, nc, g, r, p, n)
+
+    state_decay_out = jnp.exp(a_cum)                 # (b, nc, g, r, cl)
+    y_off = jnp.einsum(
+        "bclgn,bcgrpn,bcgrl->bclgrp", Cc, prev_states, state_decay_out,
+        preferred_element_type=f32,
+    )
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final.reshape(b, h, p, n)
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (b, h, p, n) fp32
+    x: jax.Array,      # (b, h, p)
+    dt: jax.Array,     # (b, h) post-softplus
+    A: jax.Array,      # (h,)
+    B: jax.Array,      # (b, g, n)
+    C: jax.Array,      # (b, g, n)
+):
+    """One recurrent step; returns (y (b, h, p), new_state)."""
+    b, h, p = x.shape
+    g, n = B.shape[-2:]
+    r = h // g
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))     # (b, h)
+    Bh = jnp.repeat(B.astype(f32), r, axis=1)        # (b, h, n)
+    Ch = jnp.repeat(C.astype(f32), r, axis=1)
+    dBx = (dt.astype(f32)[..., None] * x.astype(f32))[..., None] * Bh[:, :, None, :]
+    new_state = state * dA[..., None, None] + dBx    # (b, h, p, n)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch, preferred_element_type=f32)
+    return y.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------------- block
+def _dims(cfg: ModelConfig) -> tuple[SSMConfig, int, int, int, int]:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    return s, di, h, s.state_dim, s.n_groups
+
+
+def init_mamba_block(cfg: ModelConfig, key) -> dict:
+    s, di, h, n, g = _dims(cfg)
+    d = cfg.d_model
+    pdt = layers.dt(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    std = d**-0.5
+    u = jax.random.uniform(keys[7], (h,), minval=np.log(s.dt_min),
+                           maxval=np.log(s.dt_max))
+    inv_softplus = jnp.log(jnp.expm1(jnp.exp(u)))  # softplus^-1(dt_init)
+    return {
+        "in_z": layers.normal(keys[0], (d, di), std, pdt),
+        "in_x": layers.normal(keys[1], (d, di), std, pdt),
+        "in_B": layers.normal(keys[2], (d, g * n), std, pdt),
+        "in_C": layers.normal(keys[3], (d, g * n), std, pdt),
+        "in_dt": layers.normal(keys[4], (d, h), std, pdt),
+        "conv_x_w": layers.normal(keys[5], (s.conv_width, di), 0.2, pdt),
+        "conv_x_b": jnp.zeros((di,), pdt),
+        "conv_B_w": layers.normal(keys[6], (s.conv_width, g * n), 0.2, pdt),
+        "conv_B_b": jnp.zeros((g * n,), pdt),
+        "conv_C_w": layers.normal(keys[6], (s.conv_width, g * n), 0.2, pdt),
+        "conv_C_b": jnp.zeros((g * n,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)).astype(pdt),
+        "dt_bias": inv_softplus.astype(pdt),
+        "D": jnp.ones((h,), pdt),
+        "norm": {"scale": jnp.ones((di,), pdt)},
+        "out_proj": layers.normal(
+            keys[7], (di, d), di**-0.5 / (2 * cfg.n_layers) ** 0.5, pdt
+        ),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x (b, s, c), w (cw, c).
+
+    Returns (y (b, s, c), new_state (b, cw-1, c))."""
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(cw))
+    new_state = xp[:, xp.shape[1] - (cw - 1) :, :]
+    return jax.nn.silu(y + b), new_state
+
+
+def _project(cfg: ModelConfig, params: dict, x: jax.Array):
+    cdt = layers.dt(cfg.compute_dtype)
+    x = x.astype(cdt)
+    z = x @ params["in_z"].astype(cdt)
+    xs = x @ params["in_x"].astype(cdt)
+    Bc = x @ params["in_B"].astype(cdt)
+    Cc = x @ params["in_C"].astype(cdt)
+    dt_raw = x @ params["in_dt"].astype(cdt)
+    return z, xs, Bc, Cc, dt_raw
+
+
+def apply_mamba_block(
+    cfg: ModelConfig, params: dict, x: jax.Array,
+    state: Optional[MambaState] = None, return_state: bool = False
+):
+    """Full-sequence forward. x (b, s, d) -> y (b, s, d) [, MambaState]."""
+    s_cfg, di, h, n, g = _dims(cfg)
+    cdt = layers.dt(cfg.compute_dtype)
+    b, s, d = x.shape
+    z, xs, Bc, Cc, dt_raw = _project(cfg, params, x)
+    xs, st_x = _causal_conv(xs, params["conv_x_w"].astype(cdt),
+                            params["conv_x_b"].astype(cdt),
+                            None if state is None else state.conv_x)
+    Bc, st_B = _causal_conv(Bc, params["conv_B_w"].astype(cdt),
+                            params["conv_B_b"].astype(cdt),
+                            None if state is None else state.conv_B)
+    Cc, st_C = _causal_conv(Cc, params["conv_C_w"].astype(cdt),
+                            params["conv_C_b"].astype(cdt),
+                            None if state is None else state.conv_C)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, final = ssd_chunked(
+        xs.reshape(b, s, h, s_cfg.head_dim),
+        dt,
+        A,
+        Bc.reshape(b, s, g, n),
+        Cc.reshape(b, s, g, n),
+        chunk=s_cfg.chunk_size,
+        initial_state=None if state is None else state.ssm,
+        unroll=cfg.scan_unroll,
+    )
+    y = y + params["D"].astype(y.dtype)[:, None] * xs.reshape(b, s, h, -1)
+    y = layers.gated_rmsnorm(params["norm"], y.reshape(b, s, di), z,
+                             cfg.norm_eps)
+    out = y.astype(cdt) @ params["out_proj"].astype(cdt)
+    if return_state:
+        return out, MambaState(ssm=final, conv_x=st_x, conv_B=st_B, conv_C=st_C)
+    return out
+
+
+def decode_mamba_block(cfg: ModelConfig, params: dict, x: jax.Array,
+                       state: MambaState):
+    """One-token decode. x (b, 1, d) -> (y (b, 1, d), new MambaState)."""
+    s_cfg, di, h, n, g = _dims(cfg)
+    cdt = layers.dt(cfg.compute_dtype)
+    b = x.shape[0]
+    z, xs, Bc, Cc, dt_raw = _project(cfg, params, x)
+    xs, st_x = _causal_conv(xs, params["conv_x_w"].astype(cdt),
+                            params["conv_x_b"].astype(cdt), state.conv_x)
+    Bc, st_B = _causal_conv(Bc, params["conv_B_w"].astype(cdt),
+                            params["conv_B_b"].astype(cdt), state.conv_B)
+    Cc, st_C = _causal_conv(Cc, params["conv_C_w"].astype(cdt),
+                            params["conv_C_b"].astype(cdt), state.conv_C)
+    dt1 = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_ssm = ssd_decode_step(
+        state.ssm,
+        xs[:, 0].reshape(b, h, s_cfg.head_dim),
+        dt1,
+        A,
+        Bc[:, 0].reshape(b, g, n),
+        Cc[:, 0].reshape(b, g, n),
+    )
+    y = y + params["D"].astype(y.dtype)[:, None] * xs[:, 0].reshape(b, h, -1)
+    y = layers.gated_rmsnorm(params["norm"], y.reshape(b, 1, di), z,
+                             cfg.norm_eps)
+    out = y.astype(cdt) @ params["out_proj"].astype(cdt)
+    return out, MambaState(ssm=new_ssm, conv_x=st_x, conv_B=st_B, conv_C=st_C)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    s_cfg, di, h, n, g = _dims(cfg)
+    cdt = layers.dt(cfg.compute_dtype)
+    cw = s_cfg.conv_width
+    return MambaState(
+        ssm=jnp.zeros((batch, h, s_cfg.head_dim, n), jnp.float32),
+        conv_x=jnp.zeros((batch, cw - 1, di), cdt),
+        conv_B=jnp.zeros((batch, cw - 1, g * n), cdt),
+        conv_C=jnp.zeros((batch, cw - 1, g * n), cdt),
+    )

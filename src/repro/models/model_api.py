@@ -1,0 +1,172 @@
+"""Uniform Model protocol + input specs for every assigned architecture.
+
+`build_model(cfg)` returns an object with:
+    init(key) -> params
+    loss(params, batch) -> (scalar, metrics)       [train_step lowers this]
+    forward(params, ...) -> (logits, aux)          [prefill_32k lowers this]
+    init_caches(batch, cache_len, prefix_len)      [decode shapes]
+    decode_step(params, caches, token) -> (logits, caches)  [serve_step]
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch x shape) cell — weak-type-correct, shardable,
+zero device allocation — exactly what the multi-pod dry-run lowers with.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import layers, mamba2, sharding
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .transformer import DecoderLM
+
+
+class MambaCaches(NamedTuple):
+    mamba: mamba2.MambaState  # leaves stacked (L, ...)
+    length: jax.Array
+
+
+class MambaLM:
+    """Pure SSM LM (mamba2-2.7b): attention-free."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "ssm" and cfg.ssm is not None
+        self.cfg = cfg
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kb = jax.random.split(key)
+
+        def init_layer(k):
+            return {"norm": layers.init_norm(cfg),
+                    "mamba": mamba2.init_mamba_block(cfg, k)}
+
+        blocks = jax.vmap(init_layer)(jax.random.split(kb, cfg.n_layers))
+        return {
+            "embedding": layers.init_embedding(cfg, ke),
+            "blocks": blocks,
+            "final_norm": layers.init_norm(cfg),
+        }
+
+    def hidden_states(self, params, tokens=None, embeds=None,
+                      positions=None):
+        cfg = self.cfg
+        if embeds is None:
+            embeds = layers.embed_tokens(cfg, params["embedding"], tokens)
+
+        def layer(x, p):
+            h = layers.apply_norm(cfg, p["norm"], x)
+            y = x + mamba2.apply_mamba_block(cfg, p["mamba"], h)
+            return sharding.constrain(y, ("batch", "seq", None)), None
+
+        from .transformer import _remat
+
+        x, _ = jax.lax.scan(_remat(cfg, layer), embeds, params["blocks"],
+                            unroll=cfg.scan_unroll)
+        return layers.apply_norm(cfg, params["final_norm"], x)
+
+    def forward(self, params, tokens=None, embeds=None, positions=None):
+        x = self.hidden_states(params, tokens, embeds, positions)
+        logits = layers.logits_from_hidden(cfg := self.cfg, params["embedding"], x)
+        return logits, jnp.zeros((3,), jnp.float32)
+
+    def loss(self, params, batch):
+        x = self.hidden_states(params, tokens=batch.get("tokens"))
+        ce = layers.lm_head_loss(self.cfg, params["embedding"], x,
+                                 batch["labels"])
+        return ce, {"ce": ce}
+
+    def init_caches(self, batch: int, cache_len: int, prefix_len) -> MambaCaches:
+        cfg = self.cfg
+        st = mamba2.init_mamba_state(cfg, batch)
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), st
+        )
+        return MambaCaches(
+            mamba=stacked,
+            length=jnp.broadcast_to(jnp.asarray(prefix_len, jnp.int32),
+                                    (batch,)),
+        )
+
+    def decode_step(self, params, caches: MambaCaches, token: jax.Array,
+                    positions=None):
+        cfg = self.cfg
+        x = layers.embed_tokens(cfg, params["embedding"], token)
+
+        def layer(x, inp):
+            p, st = inp
+            h = layers.apply_norm(cfg, p["norm"], x)
+            y, new_st = mamba2.decode_mamba_block(cfg, p["mamba"], h, st)
+            return x + y, new_st
+
+        x, new_states = jax.lax.scan(layer, x, (params["blocks"],
+                                                caches.mamba),
+                                     unroll=cfg.scan_unroll)
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        logits = layers.logits_from_hidden(cfg, params["embedding"], x[:, -1])
+        return logits, MambaCaches(mamba=new_states,
+                                   length=caches.length + 1)
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+# -------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the batch of one (arch x shape) cell.
+
+    train / prefill: token ids (+ stub frontend tensors for audio/vlm);
+    decode: the single new token (the KV cache / SSM state specs come from
+    `cache_specs`, since they are carried state rather than data inputs).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), i32)}
+    else:  # decode: one new token against a cache of length s
+        batch = {"token": _sds((b, 1), i32)}
+    if cfg.family == "audio" and shape.kind != "decode":
+        e = cfg.encoder
+        batch["frames"] = _sds((b, e.n_frames, e.d_model),
+                               jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm" and shape.kind != "decode":
+        # M-RoPE position ids (t, h, w) — the vision stub's contribution
+        batch["positions"] = _sds((3, b, s), i32)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract (eval_shape'd) decode caches for a decode cell: a cache of
+    logical length shape.seq_len, physical capacity seq_len + headroom."""
+    assert shape.kind == "decode"
+    model = build_model(cfg)
+    b = shape.global_batch
+    cache_len = shape.seq_len  # capacity == the assigned context length
+    return jax.eval_shape(
+        lambda: model.init_caches(b, cache_len, shape.seq_len - 1)
+    )
+
+
+def param_specs(cfg: ModelConfig):
+    """Abstract params via eval_shape (no allocation)."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))

@@ -1,0 +1,116 @@
+"""Top-k MoE with capacity-based scatter dispatch (Arctic / Phi-3.5-MoE).
+
+Dispatch avoids the O(T*E*C) one-hot tensor entirely: each token's top-k
+(expert, slot) coordinates are computed with a cumsum-over-tokens rank and
+tokens are SCATTERED into the (E, C, d) expert buffer (dropping overflow,
+capacity_factor bounds the drop rate); the combine is a plain gather.
+Expert weights are sharded over the `model` axis (expert parallelism); the
+scatter/gather lower to all-to-all-style collectives under GSPMD.
+
+Arctic's "dense residual": a small dense SwiGLU MLP runs in PARALLEL with
+the MoE FFN and their outputs add (hf:Snowflake/snowflake-arctic-base).
+
+Aux losses: load-balance (Switch-style) + router z-loss, returned to the
+caller for logging / adding to the objective.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+    dropped_fraction: jax.Array
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    assert cfg.moe is not None
+    m = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, m.n_experts
+    pdt = layers.dt(cfg.param_dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    std_in = d**-0.5
+    std_out = f**-0.5 / (2 * cfg.n_layers) ** 0.5
+    p = {
+        "router": layers.normal(k1, (d, E), std_in, pdt),
+        "w_gate": layers.normal(k2, (E, d, f), std_in, pdt),
+        "w_up": layers.normal(k3, (E, d, f), std_in, pdt),
+        "w_down": layers.normal(k4, (E, f, d), std_out, pdt),
+    }
+    if m.dense_residual_d_ff:
+        sub = dataclasses.replace(cfg, moe=None)
+        p["dense_residual"] = layers.init_mlp(sub, k5, d_ff=m.dense_residual_d_ff)
+    return p
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k / m.n_experts * m.capacity_factor)
+    return max(m.top_k, min(tokens, c))
+
+
+def apply_moe(cfg: ModelConfig, params: dict, x: jax.Array,
+              key: Optional[jax.Array] = None) -> tuple[jax.Array, MoEAux]:
+    """x (b, s, d) -> (y (b, s, d), aux)."""
+    m = cfg.moe
+    cdt = layers.dt(cfg.compute_dtype)
+    b, s, d = x.shape
+    T = b * s
+    E, K = m.n_experts, m.top_k
+    C = _capacity(T, cfg)
+    xt = x.reshape(T, d).astype(cdt)
+
+    logits = (xt @ params["router"].astype(cdt)).astype(jnp.float32)  # (T, E)
+    if m.router_jitter and key is not None:
+        logits = logits + m.router_jitter * jax.random.normal(key, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Rank of each (token, k) within its expert: cumsum of one-hot counts.
+    flat_expert = expert_idx.reshape(-1)                      # (T*K,)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (T*K, E)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot               # rank before me
+    my_rank = jnp.take_along_axis(ranks, flat_expert[:, None], axis=1)[:, 0]
+    keep = my_rank < C
+    slot = jnp.where(keep, my_rank, C)                        # C = overflow bin
+
+    # Scatter tokens into (E, C+1, d); the +1 row swallows drops.
+    buf = jnp.zeros((E, C + 1, d), cdt)
+    src = jnp.repeat(xt, K, axis=0)                           # (T*K, d) token copies
+    buf = buf.at[flat_expert, slot].add(src)
+    expert_in = buf[:, :C]                                    # (E, C, d)
+
+    # Expert FFN (einsum keeps the E axis shardable over `model`).
+    h_g = jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"].astype(cdt))
+    h_u = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"].astype(cdt))
+    h = jax.nn.silu(h_g) * h_u
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(cdt))
+
+    # Combine: gather each kept (token, k) result and weight by its gate.
+    gathered = expert_out[flat_expert, jnp.minimum(slot, C - 1)]  # (T*K, d)
+    w = (gate_vals.reshape(-1) * keep.astype(jnp.float32)).astype(cdt)
+    y = jnp.sum((gathered * w[:, None]).reshape(T, K, d), axis=1)
+
+    if "dense_residual" in params:
+        sub = dataclasses.replace(cfg, moe=None)
+        y = y + layers.apply_mlp(sub, params["dense_residual"], xt)
+
+    # Aux losses.
+    me = jnp.mean(probs, axis=0)                              # (E,) router mass
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0
+    )                                                          # top-1 load
+    lb = E * jnp.sum(me * ce)
+    zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y.reshape(b, s, d), MoEAux(lb, zl, dropped)

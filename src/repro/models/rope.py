@@ -1,0 +1,57 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+Split-half (llama) convention: the head dim is split into two halves that
+rotate together. M-RoPE partitions the *frequency* axis into
+(temporal, height, width) sections, each driven by its own position id
+channel — for the text-only backbone dry-run the three channels coincide,
+but the implementation is the real sectioned one and `input_specs`
+provides (3, b, s) position ids.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions (b, s) int -> angles (b, s, head_dim/2) fp32."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def mrope_angles(
+    positions: jax.Array, head_dim: int, theta: float, sections: Sequence[int]
+) -> jax.Array:
+    """positions (3, b, s) -> angles (b, s, head_dim/2).
+
+    sections = frequency counts per channel (t, h, w); sum == head_dim/2.
+    """
+    assert positions.ndim == 3 and positions.shape[0] == len(sections)
+    inv = rope_freqs(head_dim, theta)
+    assert sum(sections) == inv.shape[0], (sections, inv.shape)
+    parts = []
+    start = 0
+    for c, sec in enumerate(sections):
+        p = positions[c].astype(jnp.float32)[..., None]  # (b, s, 1)
+        parts.append(p * inv[start : start + sec])
+        start += sec
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rotary(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x (b, s, h, d), angles (b, s, d/2) -> rotated x (split-half)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # (b, s, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )

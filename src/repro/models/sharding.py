@@ -1,0 +1,222 @@
+"""Logical-axis sharding: activation constraints + param spec trees.
+
+Models annotate activations with LOGICAL axes ("batch", "tp", "cache_seq",
+...). A context installs the physical mesh and the logical->physical
+translation; outside any context the constraints are no-ops, so every
+model runs unmodified on a single CPU device (smoke tests) and fully
+sharded under the production mesh (dry-run / train) with the same code.
+
+Param shardings are derived from leaf PATHS (MaxText-style rules table),
+so `jax.eval_shape` over `init` is enough to build `in_shardings` without
+materializing any weights.
+
+Divisibility guard: an axis is only sharded if its size divides the mesh
+axis product — otherwise it is replicated (e.g. 24 query heads on a
+16-way `model` axis). GSPMD would accept uneven shardings with padding;
+we prefer explicit replication and surface the imbalance in the roofline
+report instead of hiding padded compute.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def default_rules(mesh: Mesh) -> dict:
+    """batch -> all data-like axes; tp -> the model axis."""
+    names = mesh.axis_names
+    batch = tuple(n for n in names if n in ("pod", "data", "replica", "fsdp"))
+    return {
+        "batch": batch,
+        "tp": ("model",) if "model" in names else (),
+        "seq": ("model",) if "model" in names else (),     # sequence parallel
+        "heads": ("model",) if "model" in names else (),
+        "expert": ("model",) if "model" in names else (),
+        "fsdp": ("data",) if "data" in names else (),
+        "cache_seq": ("model",) if "model" in names else (),
+    }
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: Optional[dict] = None):
+    prev = (_mesh(), _rules())
+    _state.mesh = mesh
+    _state.rules = rules or default_rules(mesh)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _physical(logical: Sequence[Optional[str]], shape) -> Optional[P]:
+    mesh, rules = _mesh(), _rules()
+    if mesh is None:
+        return None
+    out = []
+    for dim, name in zip(shape, logical):
+        if name is None:
+            out.append(None)
+            continue
+        axes = rules.get(name, ())
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and size > 1 and dim % size == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def tp_size() -> int:
+    """Size of the tensor-parallel axis in the ambient mesh (1 if none)."""
+    mesh = _mesh()
+    if mesh is None:
+        return 1
+    return mesh.shape.get("model", 1)
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = _physical(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ------------------------------------------------------------ param specs
+# Path-suffix regex -> logical spec for the LAST len(spec) dims; leading
+# dims (layer stacking, expert axis handled explicitly) are replicated.
+# Dense 2-D weights are FSDP x TP sharded ("2D sharding"): the non-TP dim
+# shards over `data`, so weights/grads/opt-state all scale with the FULL
+# chip count; GSPMD inserts the per-layer FSDP all-gather in fwd/bwd.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("tp", "fsdp")),          # (V, d) vocab x fsdp
+    (r"lm_head$", ("fsdp", "tp")),
+    (r"(wq|wk|wv)$", ("fsdp", "tp")),
+    (r"wo$", ("tp", "fsdp")),
+    (r"(w_gate|w_up)$", ("fsdp", "tp")),  # overridden for MoE by expert rule
+    (r"w_down$", ("tp", "fsdp")),
+    (r"(in_z|in_x)$", ("fsdp", "tp")),
+    (r"(in_B|in_C|in_dt)$", ("fsdp", None)),
+    (r"conv_x_w$", (None, "tp")),
+    (r"conv_x_b$", ("tp",)),
+    (r"(conv_B_w|conv_C_w|conv_B_b|conv_C_b)$", None),  # replicate (small)
+    (r"out_proj$", ("tp", "fsdp")),
+    (r"(A_log|dt_bias|D)$", ("tp",)),
+    (r"router$", ("fsdp", None)),
+    (r"(bq)$", ("tp",)),
+    (r"(bk|bv)$", ("tp",)),
+    (r"scale$", None),
+    (r"pos_embed$", None),
+]
+# Experts shard over the SAME physical axis as tp ("model"), so expert
+# tensors shard on E only — a spec may not repeat a mesh axis.
+# Expert weights: E over `model` (EP) AND d over `data` (FSDP) — 480B-scale
+# MoE weights cannot live model-sharded-only; the per-layer FSDP all-gather
+# is the standard recipe.
+_MOE_RULES: list[tuple[str, tuple]] = [
+    (r"(w_gate|w_up)$", ("expert", "fsdp", None)),
+    (r"w_down$", ("expert", None, "fsdp")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pe in path:
+        if hasattr(pe, "key"):
+            parts.append(str(pe.key))
+        elif hasattr(pe, "idx"):
+            parts.append(str(pe.idx))
+        elif hasattr(pe, "name"):
+            parts.append(str(pe.name))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, shape, attn_q_tp: bool = True,
+                  attn_kv_tp: bool = False) -> tuple:
+    """Logical spec tuple (len == ndim) for a parameter leaf path.
+
+    attn_q_tp / attn_kv_tp: whether this arch's (kv-)head count divides the
+    tp degree — uneven heads would make GSPMD shard *within* heads and
+    all-reduce attention scores, so such archs replicate their attention
+    projections (the roofline reports the imbalance honestly).
+    """
+    ndim = len(shape)
+    # MoE expert tensors (E, d, f) live under a "moe" subtree; the expert
+    # rule takes priority over the dense-MLP name rules there.
+    if "moe" in path_str.split("/"):
+        for pat, spec in _MOE_RULES:
+            if re.search(pat, path_str) and ndim >= len(spec):
+                pad = ndim - len(spec)
+                return (None,) * pad + tuple(spec)
+    # attention projections: head-divisibility aware
+    leaf = path_str.split("/")[-1]
+    if leaf in ("wq",):
+        spec = ("fsdp", "tp") if attn_q_tp else ("fsdp", None)
+        return (None,) * (ndim - 2) + spec
+    if leaf in ("wk", "wv"):
+        spec = ("fsdp", "tp") if attn_kv_tp else ("fsdp", None)
+        return (None,) * (ndim - 2) + spec
+    if leaf == "wo":
+        spec = ("tp", "fsdp") if attn_q_tp else (None, "fsdp")
+        return (None,) * (ndim - 2) + spec
+    if leaf == "bq":
+        return (None,) * (ndim - 1) + (("tp",) if attn_q_tp else (None,))
+    if leaf in ("bk", "bv"):
+        return (None,) * (ndim - 1) + (("tp",) if attn_kv_tp else (None,))
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_str):
+            if spec is None:
+                return (None,) * ndim
+            pad = ndim - len(spec)
+            if pad < 0:  # spec longer than leaf ndim (e.g. scalar) -> replicate
+                return (None,) * ndim
+            return (None,) * pad + tuple(spec)
+    return (None,) * ndim
+
+
+def _attn_divisibility(cfg, mesh: Mesh) -> tuple:
+    tp = mesh.shape.get("model", 1)
+    if cfg is None or tp <= 1:
+        return True, True
+    heads = getattr(cfg, "effective_n_heads", cfg.n_heads)
+    q_ok = heads > 0 and heads % tp == 0
+    kv_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % tp == 0
+    return q_ok, kv_ok
+
+
+def param_pspecs(params_shape, cfg=None, mesh: Optional[Mesh] = None):
+    """Map an eval_shape'd param tree -> PartitionSpec tree (physical)."""
+    q_ok, kv_ok = _attn_divisibility(cfg, mesh or _mesh())
+
+    def one(path, leaf):
+        logical = spec_for_path(_path_str(path), leaf.shape,
+                                attn_q_tp=q_ok, attn_kv_tp=kv_ok)
+        spec = _physical(logical, leaf.shape)
+        return spec if spec is not None else P()
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(mesh: Mesh, params_shape, cfg=None,
+                    rules: Optional[dict] = None):
+    """NamedSharding tree for in_shardings / device_put."""
+    with sharding_ctx(mesh, rules):
+        specs = param_pspecs(params_shape, cfg=cfg, mesh=mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)

@@ -1,0 +1,3 @@
+"""repro.optim — sharded AdamW + gradient compression + int8 state."""
+from . import adamw, grad_compression, quant_state  # noqa: F401
+from .adamw import AdamWConfig, AdamWState  # noqa: F401

@@ -1,0 +1,154 @@
+"""Sharded AdamW with mixed-precision ZeRO-1 master weights.
+
+Model params are stored in bf16 (FULL configs); the optimizer keeps an
+fp32 master copy + two moments. State sharding extends each param's spec
+with the `data` axis on the first still-unsharded divisible dim — the
+ZeRO-1 partitioning — so optimizer memory scales with the FULL mesh, not
+just the model axis.
+
+Pure-jnp, jit-safe; no optax dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: dict   # fp32 master params
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def init(params) -> AdamWState:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), t)
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=f32(params),
+        mu=zeros,
+        nu=jax.tree_util.tree_map(jnp.copy, zeros),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params (model dtype), new_state, metrics)."""
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        new_m = m - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                          + cfg.weight_decay * m * (m.ndim >= 2))
+        return new_m, mu, nu
+
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    m_leaves = treedef.flatten_up_to(state.master)
+    mu_leaves = treedef.flatten_up_to(state.mu)
+    nu_leaves = treedef.flatten_up_to(state.nu)
+    out = [upd(*t) for t in zip(g_leaves, m_leaves, mu_leaves, nu_leaves)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree_util.tree_map(
+        lambda m, p: m.astype(p.dtype), new_master, params)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, AdamWState(step, new_master, new_mu, new_nu), metrics
+
+
+# ---------------------------------------------------------- ZeRO-1 specs
+def zero1_spec(param_spec: P, shape, data_axes=("data",),
+               mesh_shape: Optional[dict] = None) -> P:
+    """Extend a param PartitionSpec with the data axes on the first
+    unsharded dim whose size divides the data-axis product (ZeRO-1)."""
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    # A mesh axis may appear at most once in a spec: if the param is
+    # already (partially) FSDP-sharded over a data axis, leave it alone.
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is not None:
+                used.add(a)
+    if any(a in used for a in data_axes):
+        return P(*entries)
+    size = 1
+    if mesh_shape:
+        for a in data_axes:
+            size *= mesh_shape.get(a, 1)
+    if size <= 1:
+        return P(*entries)
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % size == 0 and dim >= size:
+            entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*entries)
+    return P(*entries)
+
+
+def state_shardings(mesh, param_shardings_tree, params_shape) -> AdamWState:
+    """NamedSharding tree for AdamWState given param shardings."""
+    from jax.sharding import NamedSharding
+
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def z1(sh, leaf):
+        spec = zero1_spec(sh.spec, leaf.shape, data_axes or ("data",),
+                          mesh_shape)
+        return NamedSharding(mesh, spec)
+
+    opt_tree = jax.tree_util.tree_map(z1, param_shardings_tree, params_shape)
+    scalar = NamedSharding(mesh, P())
+    return AdamWState(
+        step=scalar,
+        master=opt_tree,
+        mu=jax.tree_util.tree_map(lambda s: s, opt_tree),
+        nu=jax.tree_util.tree_map(lambda s: s, opt_tree),
+    )

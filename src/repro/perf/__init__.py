@@ -1,0 +1,2 @@
+"""repro.perf — roofline derivation from compiled artifacts."""
+from . import roofline  # noqa: F401

@@ -1,0 +1,115 @@
+"""End-to-end edge RAG pipeline (paper Fig. 1).
+
+    user query --embed--> query embedding
+      --DIRC retrieve--> top-k document ids (quantized CIM search)
+      --augment--> [doc1 SEP doc2 ... SEP query] prompt
+      --generate--> answer tokens
+
+The embedding model is a self-contained stub (seeded random projection of
+byte 4-gram features) standing in for all-MiniLM-L6-v2: deterministic,
+dimension-correct, and collision-behaved enough that identical texts map
+to identical embeddings — the retrieval math downstream is the real
+DIRC-RAG engine from repro.core.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.retrieval import DircRagIndex, RetrievalConfig
+from repro.core.simulator import simulate_query
+from repro.data.tokenizer import ByteTokenizer
+from .engine import GenerationEngine
+
+
+class HashEmbedder:
+    """Deterministic byte-4-gram hashing embedder (frontend stub)."""
+
+    def __init__(self, dim: int = 512, seed: int = 0, buckets: int = 8192):
+        self.dim = dim
+        self.buckets = buckets
+        rng = np.random.default_rng(seed)
+        self.proj = rng.normal(size=(buckets, dim)).astype(np.float32)
+        self.proj /= np.linalg.norm(self.proj, axis=-1, keepdims=True)
+
+    def embed(self, texts: Sequence[str]) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            b = t.encode("utf-8", errors="replace")
+            feats = np.zeros((self.buckets,), np.float32)
+            for j in range(max(len(b) - 3, 1)):
+                feats[hash(b[j : j + 4]) % self.buckets] += 1.0
+            v = feats @ self.proj
+            n = np.linalg.norm(v)
+            out[i] = v / n if n > 0 else v
+        return out
+
+
+@dataclasses.dataclass
+class RagResult:
+    doc_ids: np.ndarray
+    doc_scores: np.ndarray
+    retrieved_texts: list
+    answer_text: Optional[str]
+    answer_tokens: Optional[np.ndarray]
+    sim_latency_us: float
+    sim_energy_uj: float
+
+
+class RagPipeline:
+    def __init__(
+        self,
+        doc_texts: Sequence[str],
+        retrieval_config: RetrievalConfig,
+        model=None,
+        params=None,
+        embedder: Optional[HashEmbedder] = None,
+        dim: int = 512,
+        max_prompt_len: int = 512,
+    ):
+        self.tokenizer = ByteTokenizer()
+        self.embedder = embedder or HashEmbedder(dim=dim)
+        self.doc_texts = list(doc_texts)
+        embs = self.embedder.embed(self.doc_texts)
+        self.index = DircRagIndex.build(jnp.asarray(embs), retrieval_config)
+        self.engine = (
+            GenerationEngine(model, params) if model is not None else None
+        )
+        self.max_prompt_len = max_prompt_len
+
+    def query(self, text: str, k: int = 3, max_new_tokens: int = 32,
+              key: Optional[jax.Array] = None) -> RagResult:
+        q = jnp.asarray(self.embedder.embed([text]))
+        res = self.index.search(q, k=k, key=key)
+        ids = np.asarray(res.indices)[0]
+        scores = np.asarray(res.scores)[0]
+        texts = [self.doc_texts[i] for i in ids]
+
+        # DIRC hardware supports dims 128..1024 (paper Table I); round the
+        # simulated dim up to the nearest supported column folding.
+        sim_dim = min(max((self.index.dim + 127) // 128 * 128, 128), 1024)
+        sim = simulate_query(self.index.n_docs, sim_dim,
+                             bits=self.index.config.bits)
+
+        answer_text = answer_tokens = None
+        if self.engine is not None:
+            prompt = self.tokenizer.encode_rag_prompt(
+                text, texts, self.max_prompt_len)
+            vocab = self.engine.model.cfg.vocab_size
+            toks = jnp.asarray([t % vocab for t in prompt], jnp.int32)[None]
+            answer_tokens = self.engine.generate(
+                toks, max_new_tokens=max_new_tokens)
+            answer_text = self.tokenizer.decode(answer_tokens[0])
+        return RagResult(
+            doc_ids=ids,
+            doc_scores=scores,
+            retrieved_texts=texts,
+            answer_text=answer_text,
+            answer_tokens=answer_tokens,
+            sim_latency_us=sim.latency_s * 1e6,
+            sim_energy_uj=sim.energy_j * 1e6,
+        )

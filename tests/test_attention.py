@@ -1,0 +1,99 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import rope
+
+
+def _np_attention(q, k, v, causal=True):
+    b, sq, h, d = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    k2 = np.repeat(np.asarray(k, np.float32), g, axis=2)
+    v2 = np.repeat(np.asarray(v, np.float32), g, axis=2)
+    s = np.einsum("bqhd,bshd->bhqs", np.asarray(q, np.float32), k2) / np.sqrt(d)
+    if causal:
+        mask = np.arange(sq)[:, None] >= np.arange(skv)[None, :]
+        s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqs,bshd->bqhd", p, v2)
+
+
+@pytest.mark.parametrize("chunk", [0, 8, 16, 64])
+@pytest.mark.parametrize("h,kh", [(4, 4), (8, 2), (6, 1)])
+def test_chunked_flash_matches_dense_oracle(rng, chunk, h, kh):
+    b, s, d = 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kh, d)).astype(np.float32))
+    got = A._chunked_attention(q, k, v, chunk, chunk, causal=True)
+    want = _np_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_noncausal_cross(rng):
+    b, sq, skv, h, d = 2, 16, 40, 4, 8
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, skv, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, skv, h, d)).astype(np.float32))
+    got = A._chunked_attention(q, k, v, 8, 8, causal=False)
+    want = _np_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def _mini_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                head_dim=8, attn_chunk=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_decode_matches_prefill_suffix(rng):
+    """Prefill s tokens, then decode-step the next; must equal a full
+    causal pass over s+1 tokens (last-position output)."""
+    cfg = _mini_cfg()
+    key = jax.random.key(0)
+    params = A.init_attention(cfg, key)
+    b, s = 2, 24
+    x = jnp.asarray(rng.normal(size=(b, s + 1, cfg.d_model)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s + 1)[None], (b, s + 1))
+    angles = rope.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+
+    full = A.attend_train(cfg, params, x, angles)        # (b, s+1, d)
+
+    y_pre, cache = A.prefill(cfg, params, x[:, :s], angles[:, :s], s + 4)
+    ang1 = angles[:, s : s + 1]
+    y_dec, cache2 = A.decode_step(cfg, params, x[:, s : s + 1], cache, ang1)
+    np.testing.assert_allclose(
+        np.asarray(y_dec[:, 0], np.float32),
+        np.asarray(full[:, s], np.float32), rtol=3e-2, atol=3e-3)
+    assert (np.asarray(cache2.length) == s + 1).all()
+
+
+def test_rope_rotation_preserves_norm(rng):
+    x = jnp.asarray(rng.normal(size=(2, 8, 4, 16)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    ang = rope.rope_angles(pos, 16, 1e4)
+    y = rope.apply_rotary(x, ang)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_mrope_sections(rng):
+    pos = jnp.broadcast_to(jnp.arange(8)[None, None], (3, 2, 8))
+    ang = rope.mrope_angles(pos, 16, 1e4, (2, 3, 3))
+    # coincident positions == standard rope
+    std = rope.rope_angles(pos[0], 16, 1e4)
+    np.testing.assert_allclose(np.asarray(ang), np.asarray(std), rtol=1e-6)
+    # distinct positions differ
+    pos2 = pos.at[1].add(5)
+    ang2 = rope.mrope_angles(pos2, 16, 1e4, (2, 3, 3))
+    assert not np.allclose(np.asarray(ang2), np.asarray(std))

@@ -1,0 +1,61 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplane as B
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_plane_roundtrip(rng, bits):
+    lo, hi = (-8, 8) if bits == 4 else (-128, 128)
+    v = jnp.asarray(rng.integers(lo, hi, size=(37, 96)), jnp.int8)
+    planes = B.to_bitplanes(v, bits=bits)
+    back = B.from_bitplanes(planes, bits=bits)
+    assert (back == v).all()
+
+
+def test_pack_unpack_words(rng):
+    v = jnp.asarray(rng.integers(-128, 128, size=(10, 128)), jnp.int8)
+    planes = B.to_bitplanes(v)
+    w = B.pack_words(planes)
+    assert w.shape == (10, 8, 4)
+    assert (B.unpack_words(w) == planes).all()
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_bitserial_equals_int_dot(rng, bits):
+    lo, hi = (-8, 8) if bits == 4 else (-128, 128)
+    q = jnp.asarray(rng.integers(lo, hi, size=(3, 64)), jnp.int8)
+    d = jnp.asarray(rng.integers(lo, hi, size=(29, 64)), jnp.int8)
+    planes = B.to_bitplanes(d, bits=bits)
+    got = np.asarray(B.bitserial_dot(q, planes, bits=bits))
+    want = np.asarray(q, np.int64) @ np.asarray(d, np.int64).T
+    assert (got == want).all()
+
+
+def test_sum_d_lut(rng):
+    v = jnp.asarray(rng.integers(-128, 128, size=(5, 32)), jnp.int8)
+    planes = B.to_bitplanes(v)
+    lut = np.asarray(B.sum_d_lut(planes))
+    assert (lut == np.asarray(planes).sum(-1)).all()
+    assert lut.shape == (5, 8)
+
+
+def test_bit_weights_twos_complement():
+    w = np.asarray(B.bit_weights(8))
+    assert w[7] == -128 and (w[:7] == [1, 2, 4, 8, 16, 32, 64]).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]),
+       st.sampled_from([32, 64, 96]))
+def test_property_bitserial_exactness(seed, bits, dim):
+    rng = np.random.default_rng(seed)
+    lo, hi = (-8, 8) if bits == 4 else (-128, 128)
+    q = jnp.asarray(rng.integers(lo, hi, size=(2, dim)), jnp.int8)
+    d = jnp.asarray(rng.integers(lo, hi, size=(7, dim)), jnp.int8)
+    got = np.asarray(B.bitserial_dot(q, B.to_bitplanes(d, bits=bits), bits=bits))
+    want = np.asarray(q, np.int64) @ np.asarray(d, np.int64).T
+    assert (got == want).all()

@@ -1,0 +1,98 @@
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import CheckpointManager, StepWatchdog
+from repro.checkpointing import checkpoint as ckpt
+
+
+def _tree(rng):
+    return {"a": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                       "c": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}}
+
+
+def test_save_restore_roundtrip(tmp_path, rng):
+    t = _tree(rng)
+    ckpt.save(str(tmp_path / "x"), t, step=7)
+    r = ckpt.restore(str(tmp_path / "x"), t)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(r)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    m = ckpt.load_manifest(str(tmp_path / "x"))
+    assert m["step"] == 7
+
+
+def test_atomicity_no_partial_files(tmp_path, rng):
+    t = _tree(rng)
+    ckpt.save(str(tmp_path / "x"), t)
+    leftovers = glob.glob(str(tmp_path / "*.tmp.npz*"))
+    assert leftovers == []
+
+
+def test_shape_mismatch_rejected(tmp_path, rng):
+    t = _tree(rng)
+    ckpt.save(str(tmp_path / "x"), t)
+    bad = dict(t)
+    bad["a"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path / "x"), bad)
+
+
+def test_manager_rotation_and_latest(tmp_path, rng):
+    t = _tree(rng)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, t)
+    assert mgr.all_steps() == [30, 40]
+    step, _ = mgr.restore(t)
+    assert step == 40
+
+
+def test_manager_async(tmp_path, rng):
+    t = _tree(rng)
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, t)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_preemption_resume_ignores_garbage(tmp_path, rng):
+    """A torn write (stray tmp file) must not break resume."""
+    t = _tree(rng)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, t)
+    # simulate a preempted writer
+    with open(os.path.join(str(tmp_path), "ckpt_0000000009.npz"), "wb") as f:
+        f.write(b"garbage-no-manifest")
+    assert mgr.latest_step() == 5
+
+
+def test_elastic_restore_new_sharding(tmp_path, rng):
+    """Restore onto explicit (single-device) shardings — the mesh-agnostic
+    path used for elastic rescale."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    t = _tree(rng)
+    ckpt.save(str(tmp_path / "x"), t, step=1)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), t)
+    r = ckpt.restore(str(tmp_path / "x"), t, shardings=sh)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(r)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_watchdog_flags_stragglers(monkeypatch):
+    w = StepWatchdog(factor=3.0)
+    times = iter([0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 5.0])
+    monkeypatch.setattr("time.monotonic", lambda: next(times))
+    for step in range(3):
+        w.start()
+        w.stop(step)
+    w.start()
+    assert w.stop(3) is True
+    assert w.stragglers and w.stragglers[0][0] == 3

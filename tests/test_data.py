@@ -1,0 +1,80 @@
+import numpy as np
+
+from repro.data import BigramLM, ByteTokenizer, DataPipeline, make_ir_dataset
+from repro.data.synthetic import beir_analogue
+
+
+def test_pipeline_deterministic():
+    p1 = DataPipeline(512, batch=4, seq=16, seed=3)
+    p2 = DataPipeline(512, batch=4, seq=16, seed=3)
+    b1, b2 = p1.batch_at(7), p2.batch_at(7)
+    assert (b1["tokens"] == b2["tokens"]).all()
+    assert (b1["labels"] == b1["tokens"] * 0 + b1["labels"]).all()
+
+
+def test_pipeline_resume_bit_exact():
+    p = DataPipeline(512, batch=2, seq=8, seed=0)
+    it = iter(p)
+    for _ in range(5):
+        next(it)
+    state = p.state()
+    want = next(iter(p))  # step 5's batch... careful: iter advanced
+    p2 = DataPipeline.restore(state, 512, 2, 8)
+    got = next(iter(p2))
+    assert (got["tokens"] == p.batch_at(state.step)["tokens"]).all()
+    assert (got["tokens"] == p2.batch_at(state.step)["tokens"]).all()
+
+
+def test_labels_are_shifted_tokens():
+    p = DataPipeline(512, batch=2, seq=8, seed=1)
+    b = p.batch_at(0)
+    # labels[t] == tokens[t+1] in the underlying stream
+    assert b["tokens"].shape == b["labels"].shape == (2, 8)
+    assert (b["tokens"][:, 1:] == b["labels"][:, :-1]).all()
+
+
+def test_shard_slice():
+    p = DataPipeline(512, batch=8, seq=4, seed=0)
+    b = p.batch_at(0)
+    parts = [p.shard_slice(b, i, 4) for i in range(4)]
+    rec = np.concatenate([x["tokens"] for x in parts], axis=0)
+    assert (rec == b["tokens"]).all()
+
+
+def test_bigram_has_structure():
+    lm = BigramLM(128, seed=0)
+    rng = np.random.default_rng(0)
+    toks = lm.sample(rng, 64, 64)
+    assert toks.shape == (64, 64)
+    assert toks.min() >= 0 and toks.max() < 128
+    # conditional entropy < unconditional entropy (structure exists)
+    H_cond = -np.mean(np.sum(lm.probs * np.log(lm.probs + 1e-12), -1))
+    assert H_cond < np.log(128) - 0.5
+
+
+def test_ir_dataset_planted_relevance():
+    ds = make_ir_dataset(n_docs=512, dim=64, n_queries=16, seed=2)
+    assert ds.doc_embeddings.shape == (512, 64)
+    norms = np.linalg.norm(ds.doc_embeddings, axis=-1)
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-5)
+    assert (ds.relevant >= -1).all() and (ds.relevant < 512).all()
+    # relevant docs really are closer on average
+    for qi in range(4):
+        rel = ds.relevant[qi][ds.relevant[qi] >= 0]
+        s = ds.query_embeddings[qi] @ ds.doc_embeddings.T
+        assert s[rel].mean() > s.mean() + 0.1
+
+
+def test_beir_analogue_sizes():
+    ds = beir_analogue("synth-scifact")
+    assert abs(ds.doc_embeddings.shape[0] * 512 / 2**20 - 1.9) < 0.05  # INT8 MB
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    text = "DIRC-RAG: edge retrieval π ≈ 3.14159"
+    ids = tok.encode(text, bos=True, eos=True)
+    assert ids[0] == tok.bos_id and ids[-1] == tok.eos_id
+    assert tok.decode(ids) == text
+    prompt = tok.encode_rag_prompt("q", ["d1", "d2"], max_len=64)
+    assert len(prompt) <= 64

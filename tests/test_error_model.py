@@ -1,0 +1,52 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import error_model as E
+from repro.core import remapping as R
+
+
+def test_lsb_map_shape_and_range():
+    cfg = E.ErrorModelConfig(p_min=1e-3, p_max=5e-2)
+    m = E.lsb_error_map(cfg)
+    assert m.shape == (8, 8)
+    assert m.min() == pytest.approx(1e-3)
+    assert m.max() == pytest.approx(5e-2)
+
+
+def test_spatial_pattern_matches_paper():
+    """Fig 5a: cells near the VSS rails (left/right columns) are more
+    reliable than center columns; right (readout side) beats left."""
+    m = E.lsb_error_map(E.ErrorModelConfig())
+    assert m[:, 0].mean() < m[:, 3].mean()   # rail beats center
+    assert m[:, 7].mean() < m[:, 3].mean()
+    assert m[:, 7].mean() < m[:, 0].mean()   # readout side is best
+
+
+def test_msb_error_free():
+    assert (E.msb_error_map(E.ErrorModelConfig()) == 0).all()
+
+
+def test_flip_probs_for_mapping():
+    cfg = E.ErrorModelConfig()
+    mp = R.build_mapping("grouped", bits=8, error_cfg=cfg)
+    probs = E.flip_probs_for_mapping(mp, cfg)
+    assert probs.shape == (16, 8)
+    assert (probs[:, 4:] == 0).all()         # MSB-group bits error-free
+    assert (probs[:, :4] > 0).all()          # LSB-group bits fallible
+
+
+def test_apply_sense_errors_rate(rng):
+    planes = jnp.asarray(rng.integers(0, 2, size=(16, 8, 512)), jnp.uint8)
+    probs = jnp.full((16, 8), 0.1, jnp.float32)
+    out = E.apply_sense_errors(planes, probs, jax.random.key(0))
+    rate = float(jnp.mean((out != planes).astype(jnp.float32)))
+    assert 0.07 < rate < 0.13                # ~10% flips
+
+
+def test_zero_prob_no_flips(rng):
+    planes = jnp.asarray(rng.integers(0, 2, size=(4, 8, 128)), jnp.uint8)
+    probs = jnp.zeros((4, 8), jnp.float32)
+    out = E.apply_sense_errors(planes, probs, jax.random.key(1))
+    assert (out == planes).all()

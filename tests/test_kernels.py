@@ -1,0 +1,81 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplane as B
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("b,n,dim,bits", [
+    (1, 128, 128, 8), (2, 300, 128, 8), (4, 515, 512, 4),
+    (3, 130, 1024, 8), (1, 64, 256, 4), (8, 256, 128, 8),
+])
+def test_dirc_mac_sweep(rng, b, n, dim, bits):
+    lo, hi = (-8, 8) if bits == 4 else (-128, 128)
+    q = jnp.asarray(rng.integers(lo, hi, size=(b, dim)), jnp.int8)
+    d = jnp.asarray(rng.integers(lo, hi, size=(n, dim)), jnp.int8)
+    planes = B.to_bitplanes(d, bits=bits)
+    got = np.asarray(ops.dirc_mac(q, B.pack_words(planes), bits=bits))
+    want = np.asarray(ref.dirc_mac(q, planes, bits=bits))
+    assert (got == want).all()
+
+
+def test_dirc_mac_1d_query(rng):
+    q = jnp.asarray(rng.integers(-128, 128, size=(128,)), jnp.int8)
+    d = jnp.asarray(rng.integers(-128, 128, size=(100, 128)), jnp.int8)
+    packed = B.pack_words(B.to_bitplanes(d))
+    got = np.asarray(ops.dirc_mac(q, packed))
+    assert got.shape == (100,)
+    want = np.asarray(q, np.int64) @ np.asarray(d, np.int64).T
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("b,n,dim", [(1, 128, 128), (3, 257, 384),
+                                     (2, 1000, 512)])
+def test_score_matmul_sweep(rng, b, n, dim):
+    q = jnp.asarray(rng.integers(-128, 128, size=(b, dim)), jnp.int8)
+    d = jnp.asarray(rng.integers(-128, 128, size=(n, dim)), jnp.int8)
+    got = np.asarray(ops.score_matmul(q, d))
+    want = np.asarray(ref.score_matmul_int(q, d))
+    assert (got == want).all()
+
+
+def test_score_matmul_cosine(rng):
+    q = jnp.asarray(rng.integers(-128, 128, size=(2, 128)), jnp.int8)
+    d = jnp.asarray(rng.integers(-128, 128, size=(300, 128)), jnp.int8)
+    dn = jnp.sqrt(jnp.sum(d.astype(jnp.float32) ** 2, -1))
+    got = ops.score_matmul_cosine(q, d, dn)
+    qn = jnp.sqrt(jnp.sum(q.astype(jnp.float32) ** 2, -1, keepdims=True))
+    want = ref.score_matmul_cosine(q, d, qn, dn[None, :])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("b,n,k", [(1, 512, 1), (3, 1200, 7), (2, 2048, 64)])
+def test_topk_kernel_sweep(rng, b, n, k):
+    s = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+    fv, fi = ops.local_topk_blocks(s, k=k)
+    rv, ri = jax.lax.top_k(s, k)
+    assert (fi == ri).all()
+    np.testing.assert_allclose(np.asarray(fv), np.asarray(rv))
+
+
+def test_topk_kernel_ties():
+    s = jnp.zeros((2, 1024))
+    fv, fi = ops.local_topk_blocks(s, k=4)
+    assert (np.asarray(fi) == np.arange(4)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]))
+def test_property_kernel_exactness(seed, bits):
+    rng = np.random.default_rng(seed)
+    lo, hi = (-8, 8) if bits == 4 else (-128, 128)
+    q = jnp.asarray(rng.integers(lo, hi, size=(2, 128)), jnp.int8)
+    d = jnp.asarray(rng.integers(lo, hi, size=(96, 128)), jnp.int8)
+    planes = B.to_bitplanes(d, bits=bits)
+    got = np.asarray(ops.dirc_mac(q, B.pack_words(planes), bits=bits))
+    want = np.asarray(q, np.int64) @ np.asarray(d, np.int64).T
+    assert (got == want).all()

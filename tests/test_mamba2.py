@@ -1,0 +1,80 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import mamba2 as M
+
+
+def _naive_ssd(x, dt, A, B, C):
+    b, s, h, p = x.shape
+    g, n = B.shape[-2:]
+    r = h // g
+    state = np.zeros((b, h, p, n))
+    ys = np.zeros((b, s, h, p))
+    Bh = np.repeat(np.asarray(B), r, axis=2)
+    Ch = np.repeat(np.asarray(C), r, axis=2)
+    for t in range(s):
+        dA = np.exp(np.asarray(dt)[:, t] * np.asarray(A))
+        state = state * dA[..., None, None] + (
+            np.asarray(dt)[:, t, :, None, None]
+            * np.asarray(x)[:, t, :, :, None] * Bh[:, t, :, None, :])
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, Ch[:, t])
+    return ys, state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_chunked_vs_recurrence(rng, chunk, g):
+    b, s, h, p, n = 2, 32, 4, 8, 16
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, s, h)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.5, 2, size=(h,)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(b, s, g, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(b, s, g, n)).astype(np.float32))
+    y, st = M.ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    y_ref, st_ref = _naive_ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=3e-4, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(st), st_ref, rtol=3e-4, atol=3e-5)
+
+
+def test_block_prefill_decode_continuity(rng):
+    cfg = ModelConfig(name="m", family="ssm", n_layers=1, d_model=32,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=64,
+                      ssm=SSMConfig(state_dim=8, head_dim=8, chunk_size=8))
+    params = M.init_mamba_block(cfg, jax.random.key(0))
+    b, s = 2, 24
+    x = jnp.asarray(rng.normal(size=(b, s, 32)).astype(np.float32))
+    full = M.apply_mamba_block(cfg, params, x)
+
+    y1, st = M.apply_mamba_block(cfg, params, x[:, :16], return_state=True)
+    outs = [y1]
+    for t in range(16, s):
+        y_t, st = M.decode_mamba_block(cfg, params, x[:, t : t + 1], st)
+        outs.append(y_t)
+    stitched = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(stitched, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=3e-2, atol=3e-3)
+
+
+def test_conv_state_continuity(rng):
+    x = jnp.asarray(rng.normal(size=(2, 12, 6)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 6)).astype(np.float32))
+    b = jnp.zeros((6,))
+    y_full, _ = M._causal_conv(x, w, b)
+    y1, st = M._causal_conv(x[:, :7], w, b)
+    y2, _ = M._causal_conv(x[:, 7:], w, b, state=st)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_decay_is_contractive(rng):
+    """A < 0 and dt > 0 => per-step decay in (0, 1): states cannot blow up."""
+    h = 4
+    A = -jnp.exp(jnp.asarray(rng.normal(size=(h,)).astype(np.float32)))
+    dt = jnp.asarray(rng.uniform(1e-3, 0.1, size=(2, h)).astype(np.float32))
+    dA = np.asarray(jnp.exp(dt * A))
+    assert (dA > 0).all() and (dA < 1).all()

@@ -1,0 +1,89 @@
+"""Per-arch smoke: reduced config, one forward/train step, one decode step.
+
+Required by the assignment: every architecture instantiates a REDUCED
+same-family config on CPU, runs a step, and asserts output shapes + no
+NaNs. The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.models import build_model
+from repro.optim import adamw
+
+
+def _batch(cfg, b=2, s=32, key=1):
+    toks = jax.random.randint(jax.random.key(key), (b, s), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.key(key + 1),
+            (b, cfg.encoder.n_frames, cfg.encoder.d_model),
+            dtype=jnp.bfloat16)
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+        batch["positions"] = pos
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_forward_loss_and_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)), (arch, loss)
+    if cfg.family == "audio":
+        logits, _ = model.forward(params, batch["tokens"], batch["frames"])
+    else:
+        logits, _ = model.forward(params, tokens=batch["tokens"])
+    assert logits.shape == (2, 32, cfg.padded_vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_train_step_no_nans(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    state = adamw.init(params)
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, st, b):
+        (loss, m), g = jax.value_and_grad(model.loss, has_aux=True)(p, b)
+        np_, nst, _ = adamw.update(ocfg, g, st, p)
+        return np_, nst, loss
+
+    p2, st2, loss = step(params, state, batch)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree_util.tree_leaves(p2):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    b = 2
+    caches = model.init_caches(b, 64, 32)
+    tok = jax.random.randint(jax.random.key(5), (b, 1), 0, cfg.vocab_size)
+    logits, new = model.decode_step(params, caches, tok)
+    assert logits.shape == (b, cfg.padded_vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # length advanced
+    ln_old = np.asarray(caches.length)
+    ln_new = np.asarray(new.length)
+    assert (ln_new == ln_old + 1).all()
+
+
+def test_registry_complete():
+    assert len(all_archs()) == 10
+    with pytest.raises(KeyError):
+        get_config("nonexistent-model")

@@ -1,0 +1,80 @@
+"""Cross-cutting hypothesis property tests on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core import bitplane as B
+from repro.core import quantization as Q
+from repro.core import topk as T
+from repro.models import layers
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(2, 6))
+def test_head_loss_equals_reference_ce(seed, b, s):
+    """lm_head_loss == cross_entropy_loss(fp32 logits) for fp32 models,
+    including padded-vocab masking."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=300,
+                      head_dim=8, compute_dtype="float32",
+                      param_dtype="float32")
+    rng = np.random.default_rng(seed)
+    hidden = jnp.asarray(rng.normal(size=(b, s, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(cfg.padded_vocab_size, 16)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 300, size=(b, s)), jnp.int32)
+    params = {"embed": w}
+    got = float(layers.lm_head_loss(cfg, params, hidden, labels))
+    logits = layers.logits_from_hidden(cfg, params, hidden)
+    want = float(layers.cross_entropy_loss(logits, labels))
+    assert abs(got - want) < 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantized_retrieval_recall_monotone_in_bits(seed):
+    """INT8 recall of FP32's top-1 is >= INT4's (more bits never hurt,
+    statistically; we assert non-strict on a single draw)."""
+    rng = np.random.default_rng(seed)
+    emb = rng.normal(size=(256, 64)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=-1, keepdims=True)
+    q = emb[:8] + 0.3 * rng.normal(size=(8, 64)).astype(np.float32)
+    fp_top = (q @ emb.T).argmax(-1)
+
+    def recall(bits):
+        d = Q.quantize(jnp.asarray(emb), bits=bits)
+        qq = Q.quantize_query(jnp.asarray(q), bits=bits)
+        s = np.asarray(Q.quantized_scores(qq, d, metric="cosine"))
+        return (s.argmax(-1) == fp_top).mean()
+
+    assert recall(8) >= recall(4) - 0.13  # tolerance for single-draw noise
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8]))
+def test_bitplane_negation_symmetry(seed, bits):
+    """dot(q, -d) == -dot(q, d) survives the bit-plane path (two's
+    complement negation is exact except at the range minimum)."""
+    rng = np.random.default_rng(seed)
+    lo, hi = (-7, 8) if bits == 4 else (-127, 128)
+    q = jnp.asarray(rng.integers(lo, hi, size=(2, 32)), jnp.int8)
+    d = jnp.asarray(rng.integers(lo, hi, size=(9, 32)), jnp.int8)
+    pos = np.asarray(B.bitserial_dot(q, B.to_bitplanes(d, bits=bits), bits=bits))
+    neg = np.asarray(B.bitserial_dot(q, B.to_bitplanes(-d, bits=bits), bits=bits))
+    assert (pos == -neg).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8))
+def test_topk_scores_sorted_and_indices_valid(seed, k):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+    r = T.hierarchical_topk(s, k, n_cores=4)
+    v = np.asarray(r.scores)
+    assert (np.diff(v, axis=-1) <= 1e-7).all()          # descending
+    i = np.asarray(r.indices)
+    assert (i >= 0).all() and (i < 64).all()
+    assert all(len(set(row)) == k for row in i)          # distinct

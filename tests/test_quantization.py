@@ -1,0 +1,76 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_roundtrip_error_bound(rng, bits):
+    x = rng.normal(size=(64, 128)).astype(np.float32)
+    qt = Q.quantize(jnp.asarray(x), bits=bits)
+    err = np.abs(np.asarray(qt.dequantize()) - x)
+    # symmetric quant: |err| <= scale/2 per row
+    bound = np.asarray(qt.scale) / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_code_range(rng, bits):
+    x = rng.normal(size=(32, 64)).astype(np.float32) * 10
+    qt = Q.quantize(jnp.asarray(x), bits=bits)
+    lo, hi = (-8, 7) if bits == 4 else (-128, 127)
+    v = np.asarray(qt.values)
+    assert v.min() >= lo and v.max() <= hi
+
+
+def test_zero_vector_safe():
+    x = jnp.zeros((4, 16))
+    qt = Q.quantize(x, bits=8)
+    assert np.isfinite(np.asarray(qt.scale)).all()
+    assert (np.asarray(qt.values) == 0).all()
+
+
+def test_int_inner_product_exact(rng):
+    q = rng.integers(-128, 128, size=(3, 64)).astype(np.int8)
+    d = rng.integers(-128, 128, size=(100, 64)).astype(np.int8)
+    got = np.asarray(Q.int_inner_product(jnp.asarray(q), jnp.asarray(d)))
+    want = q.astype(np.int64) @ d.astype(np.int64).T
+    assert (got == want).all()
+
+
+def test_cosine_scores_match_fp32_ranking(rng):
+    emb = rng.normal(size=(200, 128)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=-1, keepdims=True)
+    q = emb[:4] + 0.05 * rng.normal(size=(4, 128)).astype(np.float32)
+    docs = Q.quantize(jnp.asarray(emb), bits=8)
+    qq = Q.quantize_query(jnp.asarray(q), bits=8)
+    s_int = np.asarray(Q.quantized_scores(qq, docs, metric="cosine"))
+    s_fp = (q / np.linalg.norm(q, axis=-1, keepdims=True)) @ emb.T
+    # top-1 agreement between INT8 and FP32 cosine
+    assert (s_int.argmax(-1) == s_fp.argmax(-1)).all()
+
+
+def test_mips_scale_correct(rng):
+    emb = (rng.normal(size=(50, 32)) * 3).astype(np.float32)
+    q = (rng.normal(size=(2, 32)) * 2).astype(np.float32)
+    docs = Q.quantize(jnp.asarray(emb), bits=8)
+    qq = Q.quantize_query(jnp.asarray(q), bits=8)
+    s = np.asarray(Q.quantized_scores(qq, docs, metric="mips"))
+    want = q @ emb.T
+    np.testing.assert_allclose(s, want, rtol=0.05, atol=1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 8), st.integers(8, 64), st.sampled_from([4, 8]))
+def test_property_quant_idempotent(b, d, bits):
+    """quantize(dequantize(quantize(x))) == quantize(x)."""
+    key = jax.random.key(b * 1000 + d)
+    x = jax.random.normal(key, (b, d))
+    q1 = Q.quantize(x, bits=bits)
+    q2 = Q.quantize(q1.dequantize(), bits=bits)
+    assert (np.asarray(q1.values) == np.asarray(q2.values)).all()

@@ -1,0 +1,50 @@
+import numpy as np
+import pytest
+
+from repro.core import error_model as E
+from repro.core import remapping as R
+
+
+@pytest.mark.parametrize("strategy", R.STRATEGIES)
+@pytest.mark.parametrize("bits", [4, 8])
+def test_mapping_valid(strategy, bits):
+    mp = R.build_mapping(strategy, bits=bits, error_cfg=E.ErrorModelConfig())
+    R.validate_mapping(mp, bits)
+
+
+def test_grouped_puts_high_bits_on_msb():
+    mp = R.build_mapping("grouped", bits=8)
+    assert (mp[:, 4:, 2] == 0).all()   # bits 4-7 (incl sign) -> MSB level
+    assert (mp[:, :4, 2] == 1).all()   # bits 0-3 -> LSB level
+
+
+def test_interleaved_exposes_sign_bit():
+    """The naive layout puts odd bits (incl bit 7, the sign) on LSBs —
+    the failure mode the paper's remapping eliminates."""
+    mp = R.build_mapping("interleaved", bits=8)
+    assert (mp[:, 7, 2] == 1).all()
+
+
+def test_error_aware_orders_by_reliability():
+    cfg = E.ErrorModelConfig()
+    emap = E.lsb_error_map(cfg)
+    mp = R.build_mapping("error_aware", bits=8, error_cfg=cfg)
+    for s in range(16):
+        errs = [emap[mp[s, b, 0], mp[s, b, 1]] for b in range(4)]
+        # bit 3 gets the most reliable LSB cell, bit 0 the least
+        assert errs[3] <= errs[2] <= errs[1] <= errs[0]
+
+
+def test_error_aware_beats_grouped_in_expected_error():
+    """Expected weighted bit error (weight 2^b) must be lowest for
+    error_aware: the quantity the remapping minimizes."""
+    cfg = E.ErrorModelConfig()
+
+    def weighted(strategy):
+        mp = R.build_mapping(strategy, bits=8, error_cfg=cfg)
+        probs = E.flip_probs_for_mapping(mp, cfg)
+        w = 2.0 ** np.arange(8)
+        return float((probs * w).sum())
+
+    assert weighted("error_aware") < weighted("grouped")
+    assert weighted("grouped") < weighted("interleaved")

@@ -1,0 +1,99 @@
+"""End-to-end DircRagIndex behaviour: the paper's system-level claims."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import error_model as E
+from repro.core.retrieval import DircRagIndex, RetrievalConfig
+from repro.core.topk import precision_at_k
+from repro.data.synthetic import make_ir_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_ir_dataset(n_docs=1024, dim=128, n_queries=48,
+                           n_clusters=32, seed=7)
+
+
+def _pk(ds, cfg, k=5, key=None):
+    idx = DircRagIndex.build(jnp.asarray(ds.doc_embeddings), cfg)
+    res = idx.search(jnp.asarray(ds.query_embeddings), k=k, key=key)
+    return float(precision_at_k(res.indices, jnp.asarray(ds.relevant), k))
+
+
+def test_paths_agree_exactly(ds):
+    """int_exact, bitserial, kernel_bitserial, kernel_mxu produce identical
+    scores (the digital-CIM arithmetic identity)."""
+    q = jnp.asarray(ds.query_embeddings[:4])
+    base = None
+    for path in ("int_exact", "bitserial", "kernel_bitserial", "kernel_mxu"):
+        cfg = RetrievalConfig(bits=8, metric="cosine", path=path)
+        idx = DircRagIndex.build(jnp.asarray(ds.doc_embeddings), cfg)
+        s = np.asarray(idx.scores(q))
+        if base is None:
+            base = s
+        else:
+            np.testing.assert_allclose(s, base, rtol=1e-5, atol=1e-6)
+
+
+def test_int8_matches_fp32_precision(ds):
+    p_fp = _pk(ds, RetrievalConfig(bits=8, path="reference"))
+    p_i8 = _pk(ds, RetrievalConfig(bits=8, path="int_exact"))
+    p_i4 = _pk(ds, RetrievalConfig(bits=4, path="int_exact"))
+    # Table II trend: INT8 ~ FP32; INT4 within a modest drop.
+    assert abs(p_i8 - p_fp) < 0.02
+    assert p_i4 > p_fp - 0.15
+    assert p_fp > 0.3  # dataset is actually solvable
+
+
+def test_error_injection_hurts_and_mitigation_recovers(ds):
+    """Fig. 6 ladder: errors degrade P@k; error-aware remap + Sigma-D
+    detection recover most of it."""
+    err = E.ErrorModelConfig(enabled=True, p_min=5e-3, p_max=8e-2)
+    key = jax.random.key(3)
+    base = _pk(ds, RetrievalConfig(bits=8, path="int_exact"))
+    naive = _pk(ds, RetrievalConfig(
+        bits=8, path="bitserial", mapping="interleaved", error=err,
+        detect=False), key=key)
+    remap = _pk(ds, RetrievalConfig(
+        bits=8, path="bitserial", mapping="error_aware", error=err,
+        detect=False), key=key)
+    full = _pk(ds, RetrievalConfig(
+        bits=8, path="bitserial", mapping="error_aware", error=err,
+        detect=True, max_retries=3), key=key)
+    assert naive < base - 0.05          # errors visibly hurt
+    assert remap > naive                # remapping recovers
+    assert full >= remap                # detection recovers further
+    assert full > base - 0.08           # near error-free
+
+
+def test_hierarchical_cores_match_flat(ds):
+    cfg16 = RetrievalConfig(bits=8, path="int_exact", n_cores=16)
+    cfg1 = RetrievalConfig(bits=8, path="int_exact", n_cores=1)
+    i16 = DircRagIndex.build(jnp.asarray(ds.doc_embeddings), cfg16)
+    i1 = DircRagIndex.build(jnp.asarray(ds.doc_embeddings), cfg1)
+    q = jnp.asarray(ds.query_embeddings[:8])
+    r16 = i16.search(q, k=5)
+    r1 = i1.search(q, k=5)
+    assert (r16.indices == r1.indices).all()
+
+
+def test_mips_metric(ds):
+    cfg = RetrievalConfig(bits=8, metric="mips", path="int_exact")
+    idx = DircRagIndex.build(jnp.asarray(ds.doc_embeddings), cfg)
+    res = idx.search(jnp.asarray(ds.query_embeddings[:4]), k=3)
+    s = np.asarray(ds.query_embeddings[:4]) @ ds.doc_embeddings.T
+    want = np.argsort(-s, -1, kind="stable")[:, :3]
+    # quantized MIPS top-3 should mostly agree with fp32 MIPS
+    agree = (np.asarray(res.indices) == want).mean()
+    assert agree > 0.8
+
+
+def test_storage_accounting(ds):
+    cfg = RetrievalConfig(bits=8)
+    idx = DircRagIndex.build(jnp.asarray(ds.doc_embeddings), cfg)
+    sb = idx.storage_bytes()
+    assert sb["embeddings"] == 1024 * 128  # n_docs * dim * 1 byte

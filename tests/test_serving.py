@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.retrieval import RetrievalConfig
+from repro.models import build_model
+from repro.serving import GenerationEngine, HashEmbedder, RagPipeline
+
+
+def test_greedy_generation_deterministic():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = GenerationEngine(model, params, temperature=0.0)
+    prompts = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
+    a = eng.generate(prompts, max_new_tokens=6, cache_len=16)
+    b = eng.generate(prompts, max_new_tokens=6, cache_len=16)
+    assert (a == b).all()
+    assert a.shape == (2, 6)
+    assert (a < cfg.vocab_size).all()  # padded-vocab slots never sampled
+
+
+def test_ssm_generation_path():
+    cfg = get_config("mamba2-2.7b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = GenerationEngine(model, params)
+    prompts = jax.random.randint(jax.random.key(2), (2, 4), 0, cfg.vocab_size)
+    out = eng.generate(prompts, max_new_tokens=4, cache_len=16)
+    assert out.shape == (2, 4)
+
+
+def test_hash_embedder_deterministic():
+    e = HashEmbedder(dim=64)
+    a = e.embed(["hello world", "foo"])
+    b = e.embed(["hello world", "foo"])
+    np.testing.assert_allclose(a, b)
+    assert np.allclose(np.linalg.norm(a, axis=-1), 1.0, rtol=1e-5)
+    # different texts -> different embeddings
+    assert not np.allclose(a[0], a[1])
+
+
+def test_rag_pipeline_end_to_end():
+    docs = [f"document about topic {i}: " + "x" * i for i in range(64)]
+    docs[17] = "the secret ingredient of dirc rag is reram compute"
+    pipe = RagPipeline(
+        docs,
+        RetrievalConfig(bits=8, metric="cosine", path="int_exact"),
+        dim=64,
+        embedder=HashEmbedder(dim=64),
+    )
+    res = pipe.query("secret ingredient of dirc rag?", k=3)
+    assert 17 in list(res.doc_ids)
+    assert res.sim_latency_us > 0 and res.sim_energy_uj > 0
+    assert len(res.retrieved_texts) == 3
+
+
+def test_rag_pipeline_with_generator():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    docs = [f"doc {i}" for i in range(32)]
+    pipe = RagPipeline(
+        docs, RetrievalConfig(bits=8, path="int_exact"),
+        model=model, params=params, dim=64,
+        embedder=HashEmbedder(dim=64), max_prompt_len=32)
+    res = pipe.query("what is doc 3?", k=2, max_new_tokens=4)
+    assert res.answer_tokens is not None
+    assert res.answer_tokens.shape[1] == 4

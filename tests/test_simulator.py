@@ -1,0 +1,66 @@
+"""The calibrated model must reproduce the paper's published numbers."""
+import pytest
+
+from repro.core import dataflow, simulator
+
+
+def test_table1_numbers():
+    t = simulator.table1_spec()
+    assert t["retrieval_latency_us_4mb"] == pytest.approx(5.6, rel=0.03)
+    assert t["energy_per_query_uj_4mb"] == pytest.approx(0.956, rel=0.03)
+    assert t["total_density_mb_per_mm2"] == pytest.approx(5.178, rel=0.01)
+    assert t["macro_tops_per_w"] == pytest.approx(1176, rel=0.01)
+    assert t["throughput_tops"] == pytest.approx(131, rel=0.01)
+    assert t["area_mm2"] == pytest.approx(6.18, rel=0.01)
+    assert t["macro_nvm_mb"] == pytest.approx(2 / 8 * 8, rel=0.01)  # 2 Mb
+
+
+def test_table3_scifact_point():
+    rep = simulator.simulate_database_mb(1.9, dim=512, bits=8)
+    assert rep.latency_s * 1e6 == pytest.approx(2.77, rel=0.05)
+    assert rep.energy_j * 1e6 == pytest.approx(0.46, rel=0.05)
+
+
+def test_linear_scaling():
+    """Paper §IV-B: latency and energy scale linearly with database size."""
+    r1 = simulator.simulate_database_mb(1.0)
+    r2 = simulator.simulate_database_mb(2.0)
+    r4 = simulator.simulate_database_mb(4.0)
+    d21 = r2.latency_s - r1.latency_s
+    d42 = (r4.latency_s - r2.latency_s) / 2
+    assert d21 == pytest.approx(d42, rel=0.05)
+    e21 = r2.energy_j - r1.energy_j
+    e42 = (r4.energy_j - r2.energy_j) / 2
+    assert e21 == pytest.approx(e42, rel=0.05)
+
+
+def test_cycle_schedule_matches_fig4():
+    """16 slots x 8 bit-planes: 128 sense + 128 detect + 1024 MAC cycles."""
+    plan = dataflow.plan_retrieval(n_docs=2048 * 16, dim=128, bits=8)
+    assert plan.sense_cycles == 128
+    assert plan.detect_cycles == 128
+    assert plan.mac_cycles == 1024
+    assert plan.slots_per_column == 16
+
+
+def test_int4_doubles_capacity():
+    p8 = dataflow.plan_retrieval(1024, dim=512, bits=8)
+    p4 = dataflow.plan_retrieval(1024, dim=512, bits=4)
+    assert p4.slots_per_column == 2 * p8.slots_per_column
+
+
+def test_dim_folding():
+    for dim in (128, 256, 512, 1024):
+        p = dataflow.plan_retrieval(512, dim=dim, bits=8)
+        assert p.folds == dim // 128
+        # cycles per stored bit are fold-invariant
+        assert p.sense_cycles == 128
+    with pytest.raises(ValueError):
+        dataflow.plan_retrieval(10, dim=192)
+
+
+def test_detect_off_saves_cycles():
+    on = simulator.simulate_database_mb(4.0, detect=True)
+    off = simulator.simulate_database_mb(4.0, detect=False)
+    assert off.latency_s < on.latency_s
+    assert off.energy_j < on.energy_j

@@ -1,0 +1,54 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk as T
+
+
+@pytest.mark.parametrize("n_cores", [1, 4, 16])
+@pytest.mark.parametrize("k", [1, 5, 16])
+def test_hierarchical_equals_flat(rng, n_cores, k):
+    s = jnp.asarray(rng.normal(size=(3, 256)).astype(np.float32))
+    h = T.hierarchical_topk(s, k, n_cores=n_cores)
+    f = T.local_topk(s, k)
+    assert (h.indices == f.indices).all()
+    np.testing.assert_allclose(np.asarray(h.scores), np.asarray(f.scores))
+
+
+def test_tie_break_low_index():
+    s = jnp.zeros((1, 64))
+    h = T.hierarchical_topk(s, 4, n_cores=16)
+    assert (np.asarray(h.indices)[0] == [0, 1, 2, 3]).all()
+
+
+def test_merge_topk(rng):
+    s = jnp.asarray(rng.normal(size=(2, 128)).astype(np.float32))
+    a = T.local_topk(s[:, :64], 8)
+    b_ = T.local_topk(s[:, 64:], 8)
+    b_fixed = T.TopK(scores=b_.scores, indices=b_.indices + 64)
+    m = T.merge_topk(a, b_fixed, 8)
+    f = T.local_topk(s, 8)
+    assert (m.indices == f.indices).all()
+
+
+def test_precision_at_k():
+    retrieved = jnp.asarray([[0, 1, 2], [5, 6, 7]])
+    relevant = jnp.asarray([[0, 2, -1], [9, 8, -1]])
+    p1 = float(T.precision_at_k(retrieved, relevant, 1))
+    p3 = float(T.precision_at_k(retrieved, relevant, 3))
+    assert p1 == pytest.approx(0.5)       # q0 hits, q1 misses
+    assert p3 == pytest.approx((2 / 3 + 0) / 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4, 8, 16]),
+       st.integers(1, 10))
+def test_property_hierarchical_matches_numpy(seed, n_cores, k):
+    rng = np.random.default_rng(seed)
+    n = 160
+    s = rng.normal(size=(2, n)).astype(np.float32)
+    h = T.hierarchical_topk(jnp.asarray(s), k, n_cores=n_cores)
+    want = np.argsort(-s, axis=-1, kind="stable")[:, :k]
+    assert (np.asarray(h.indices) == want).all()
