@@ -1,0 +1,74 @@
+"""Sharded multi-macro retrieval throughput: queries/sec vs n_shards and
+batch size.
+
+Sweeps ShardedDircIndex over shard counts and serving batch sizes on the
+int_exact path (the production score path) and reports steady-state
+queries/sec, plus the monolithic DircRagIndex baseline at each batch size.
+Larger batches amortize dispatch exactly like the BatchScheduler's flushed
+(b, dim) calls do in serving.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_sharded
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.retrieval import DircRagIndex, RetrievalConfig
+from repro.core.sharded_index import ShardedDircIndex
+
+N_DOCS = 4096
+DIM = 256
+K = 5
+SHARDS = (1, 4, 8)
+BATCHES = (1, 8, 32)
+REPS = 10
+
+
+def _measure(search, queries) -> float:
+    """Steady-state seconds per search call (warmup excluded)."""
+    search(queries).indices.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        search(queries).indices.block_until_ready()
+    return (time.perf_counter() - t0) / REPS
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(0)
+    emb = jnp.asarray(rng.normal(size=(N_DOCS, DIM)).astype(np.float32))
+    cfg = RetrievalConfig(bits=8, metric="cosine", path="int_exact")
+    rows = []
+
+    mono = DircRagIndex.build(emb, cfg)
+    for b in BATCHES:
+        q = jnp.asarray(rng.normal(size=(b, DIM)).astype(np.float32))
+        dt = _measure(lambda x: mono.search(x, k=K), q)
+        rows.append({"index": "monolithic", "n_shards": 0, "batch": b,
+                     "qps": b / dt, "ms_per_call": dt * 1e3})
+
+    for s in SHARDS:
+        idx = ShardedDircIndex.build(emb, cfg, n_shards=s)
+        for b in BATCHES:
+            q = jnp.asarray(rng.normal(size=(b, DIM)).astype(np.float32))
+            dt = _measure(lambda x: idx.search(x, k=K), q)
+            rows.append({"index": "sharded", "n_shards": s, "batch": b,
+                         "qps": b / dt, "ms_per_call": dt * 1e3})
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print(f"n_docs={N_DOCS} dim={DIM} k={K} path=int_exact "
+          f"devices={len(jax.devices())}")
+    print("index,n_shards,batch,qps,ms_per_call")
+    for r in rows:
+        print(f"{r['index']},{r['n_shards']},{r['batch']},"
+              f"{r['qps']:.1f},{r['ms_per_call']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

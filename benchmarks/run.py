@@ -5,6 +5,7 @@
   bench_latency    -> Table III (DIRC vs baselines)
   bench_error_opt  -> Fig. 6    (error-aware optimization ladder)
   bench_kernels    -> kernel micro-benchmarks
+  bench_sharded    -> multi-macro sharded retrieval throughput
   roofline_report  -> dry-run roofline tables (EXPERIMENTS.md source)
 
 Run: PYTHONPATH=src python -m benchmarks.run
@@ -14,7 +15,8 @@ from __future__ import annotations
 import time
 
 from . import (bench_error_opt, bench_kernels, bench_latency,
-               bench_precision, bench_simulator, roofline_report)
+               bench_precision, bench_sharded, bench_simulator,
+               roofline_report)
 
 SECTIONS = [
     ("Table I — DIRC-RAG spec (calibrated model)", bench_simulator),
@@ -22,6 +24,7 @@ SECTIONS = [
     ("Table III — latency/energy vs baselines", bench_latency),
     ("Fig. 6 — error-aware optimization ladder", bench_error_opt),
     ("Kernel micro-benchmarks", bench_kernels),
+    ("Sharded multi-macro throughput", bench_sharded),
     ("Roofline (from multi-pod dry-run)", roofline_report),
 ]
 

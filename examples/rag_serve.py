@@ -1,5 +1,6 @@
-"""End-to-end edge RAG serving: embed -> DIRC retrieve -> augment ->
-generate, with batched requests against a small LM (paper Fig. 1).
+"""End-to-end edge RAG serving: embed -> sharded DIRC retrieve -> augment ->
+generate, with micro-batched requests against a small LM (paper Fig. 1,
+scaled to a 4-macro ShardedDircIndex) plus live corpus updates.
 
 Run: PYTHONPATH=src python examples/rag_serve.py
 """
@@ -30,30 +31,58 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 
-    print("== building RAG pipeline over", len(CORPUS), "documents ==")
+    print("== building 4-shard RAG pipeline over", len(CORPUS), "documents ==")
     pipe = RagPipeline(
         CORPUS,
         RetrievalConfig(bits=8, metric="cosine", path="int_exact"),
         model=model, params=params,
         dim=256, embedder=HashEmbedder(dim=256),
         max_prompt_len=96,
+        n_shards=4,
     )
+    print("   shard loads:", pipe.index.shard_loads())
 
     queries = [
         "how does the error detection work?",
         "what dataflow does DIRC use for retrieval?",
         "how fast is a 4MB database search?",
     ]
-    for q in queries:
-        t0 = time.time()
-        res = pipe.query(q, k=2, max_new_tokens=12)
+    t0 = time.time()
+    results = pipe.query_many(queries, k=2, max_new_tokens=12)
+    for q, res in zip(queries, results):
         print(f"\nQ: {q}")
         for i, t in zip(res.doc_ids, res.retrieved_texts):
             print(f"   retrieved[{i}]: {t[:70]}")
         print(f"   DIRC sim: {res.sim_latency_us:.2f} us, "
               f"{res.sim_energy_uj:.3f} uJ per query")
         print(f"   generated {res.answer_tokens.shape[1]} tokens "
-              f"(wall {time.time() - t0:.2f}s, untrained model -> noise)")
+              f"(untrained model -> noise)")
+    print(f"\nbatched wave of {len(queries)} queries: "
+          f"{time.time() - t0:.2f}s wall (ONE embed + ONE search)")
+
+    print("\n== live corpus update: add a doc, retrieve it, tombstone it ==")
+    new_ids = pipe.add_docs(
+        ["The global comparator merges per-macro candidate lists by score."])
+    res = pipe.query("who merges the per-macro candidate lists?", k=1,
+                     max_new_tokens=0)
+    print(f"   added id {new_ids[0]}, retrieved id {res.doc_ids[0]}: "
+          f"{res.retrieved_texts[0][:60]}")
+    pipe.delete_docs(new_ids.tolist())
+    res = pipe.query("who merges the per-macro candidate lists?", k=1,
+                     max_new_tokens=0)
+    print(f"   after delete, retrieved id {res.doc_ids[0]} "
+          f"(tombstone never returned)")
+
+    print("\n== micro-batching scheduler (max_batch=2) ==")
+    sched = pipe.scheduler(max_batch=2)
+    tickets = [sched.submit(q, k=1) for q in queries]
+    print(f"   queued {sched.pending()} queries")
+    sched.flush()
+    for q, t in zip(queries, tickets):
+        ids, scores = t.result()
+        print(f"   [{ids[0]:3d}] score {scores[0]:+.3f}  <- {q}")
+    print(f"   served {sched.n_served} queries in {sched.n_flushes} "
+          f"batched flushes")
 
 
 if __name__ == "__main__":

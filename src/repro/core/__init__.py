@@ -8,6 +8,7 @@ The paper's contribution as a composable JAX library:
   error_detection Sigma-D checksum + re-sense (Fig. 5b)
   topk            hierarchical local/global top-k (Fig. 3a)
   retrieval       DircRagIndex build/search
+  sharded_index   ShardedDircIndex: multi-macro shards + incremental updates
   distributed     pod-scale shard_map retrieval (local top-k + global merge)
   dataflow        query-stationary cycle schedule (Fig. 4)
   simulator       calibrated cycle/energy/area model (Tables I & III)
@@ -21,9 +22,11 @@ from . import (  # noqa: F401
     quantization,
     remapping,
     retrieval,
+    sharded_index,
     simulator,
     topk,
 )
 from .quantization import QuantizedTensor, quantize  # noqa: F401
 from .retrieval import DircRagIndex, RetrievalConfig  # noqa: F401
+from .sharded_index import ShardedDircIndex  # noqa: F401
 from .topk import TopK, hierarchical_topk, local_topk  # noqa: F401

@@ -1,0 +1,37 @@
+"""Version portability for the moving parts of the JAX API.
+
+`shard_map` graduated from `jax.experimental.shard_map` to `jax.shard_map`,
+and its replication-checker kwarg was renamed `check_rep` -> `check_vma`
+along the way. Every in-repo caller goes through this wrapper so the repo
+runs on both sides of the migration.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_replication: bool = False):
+    """`jax.shard_map` across JAX versions.
+
+    check_replication=False disables the static replication checker (the
+    usual setting here: outputs ARE replicated via all_gather, but the
+    checker cannot prove it through top_k)."""
+    try:
+        sm = jax.shard_map
+    except AttributeError:  # older jax keeps it in experimental
+        from jax.experimental.shard_map import shard_map as sm
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return sm(f, **kwargs, check_vma=check_replication)
+    except TypeError:
+        return sm(f, **kwargs, check_rep=check_replication)
+
+
+def axis_size(name):
+    """`jax.lax.axis_size` across JAX versions (inside shard_map/pmap).
+
+    Older jax has no axis_size; psum of 1 over the axis is the identity."""
+    try:
+        return jax.lax.axis_size(name)
+    except AttributeError:
+        return jax.lax.psum(1, name)

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ._compat import axis_size, shard_map
 from .topk import TopK
 
 
@@ -35,7 +36,7 @@ def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
     """Linear device index over (possibly multiple) mesh axes."""
     idx = jnp.int32(0)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
@@ -84,14 +85,14 @@ def make_distributed_searcher(
     doc_axes = tuple(doc_axes if doc_axes is not None else mesh.axis_names)
     doc_spec = P(doc_axes)
     body = partial(_local_search, k=k, metric=metric, axis_names=doc_axes)
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), doc_spec, doc_spec),
         out_specs=(P(), P()),
-        check_vma=False,  # outputs ARE replicated (all_gather over all
-                          # doc axes + identical top_k); the static
-                          # checker cannot prove it through top_k
+        check_replication=False,  # outputs ARE replicated (all_gather over
+                                  # all doc axes + identical top_k); the
+                                  # checker cannot prove it through top_k
     )
 
     @jax.jit

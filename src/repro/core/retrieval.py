@@ -29,6 +29,57 @@ from . import bitplane, error_detection, error_model, quantization, remapping, t
 PATHS = ("reference", "int_exact", "bitserial", "kernel_bitserial", "kernel_mxu")
 
 
+def score_image(
+    config: "RetrievalConfig",
+    q: quantization.QuantizedTensor,
+    queries_f32: jax.Array,
+    values: jax.Array,      # (n, dim) int8 codes
+    scales: jax.Array,      # (n, 1) or () fp32 quantization scales
+    planes: jax.Array,      # (n, bits, dim) uint8 {0,1}, already sensed
+    norms: jax.Array,       # (n,) fp32 integer norms
+) -> jax.Array:
+    """Score one ReRAM image: (b, n) fp32 under `config.path`/`metric`.
+
+    The single source of the five-path score math — `DircRagIndex` calls it
+    on its whole image, `ShardedDircIndex` maps it over per-macro images,
+    which is what keeps sharded==monolithic parity a structural fact."""
+    if config.metric not in ("cosine", "mips"):
+        raise ValueError(f"unknown metric {config.metric!r}")
+    if config.path == "reference":
+        d = values.astype(jnp.float32) * scales
+        qf = queries_f32.astype(jnp.float32)
+        ip = qf @ d.T
+        if config.metric == "cosine":
+            qn = jnp.linalg.norm(qf, axis=-1, keepdims=True)
+            dn = jnp.linalg.norm(d, axis=-1)
+            return ip / jnp.maximum(qn * dn, 1e-12)
+        return ip
+
+    if config.path == "int_exact" and not config.error.enabled:
+        ip = quantization.int_inner_product(q.values, values)
+    elif config.path in ("bitserial", "int_exact"):
+        ip = bitplane.bitserial_dot(q.values, planes, bits=config.bits)
+    elif config.path == "kernel_bitserial":
+        from repro.kernels import ops as kops
+
+        packed = bitplane.pack_words(planes)
+        ip = kops.dirc_mac(q.values, packed, bits=config.bits)
+    elif config.path == "kernel_mxu":
+        from repro.kernels import ops as kops
+
+        vals = bitplane.from_bitplanes(planes, bits=config.bits)
+        ip = kops.score_matmul(q.values, vals)
+    else:
+        raise ValueError(f"unknown path {config.path!r}")
+
+    ip = ip.astype(jnp.float32)
+    if config.metric == "mips":
+        d_scale = jnp.reshape(scales, (-1,)) if scales.ndim else scales
+        return ip * q.scale * d_scale
+    qn = jnp.sqrt(jnp.sum(q.values.astype(jnp.float32) ** 2, -1, keepdims=True))
+    return ip / jnp.maximum(qn * norms, 1e-12)
+
+
 @dataclasses.dataclass(frozen=True)
 class RetrievalConfig:
     bits: int = 8
@@ -111,49 +162,13 @@ class DircRagIndex:
         if queries.ndim == 1:
             queries = queries[None]
         q = quantization.quantize_query(queries, bits=cfg.bits)
-
-        if cfg.path == "reference":
-            d = self.docs.dequantize()
-            qf = queries.astype(jnp.float32)
-            ip = qf @ d.T
-            if cfg.metric == "cosine":
-                qn = jnp.linalg.norm(qf, axis=-1, keepdims=True)
-                dn = jnp.linalg.norm(d, axis=-1)
-                return ip / jnp.maximum(qn * dn, 1e-12)
-            return ip
-
-        if cfg.path == "int_exact" and not cfg.error.enabled:
-            return quantization.quantized_scores(
-                q, self.docs, doc_norms=self.doc_norms, metric=cfg.metric
-            )
-
-        # Bit-plane paths (support the error channel).
-        planes, _ = self.sensed_planes(key)
-        if cfg.path in ("bitserial", "int_exact"):
-            ip = bitplane.bitserial_dot(q.values, planes, bits=cfg.bits)
-        elif cfg.path == "kernel_bitserial":
-            from repro.kernels import ops as kops
-
-            packed = bitplane.pack_words(planes)
-            ip = kops.dirc_mac(q.values, packed, bits=cfg.bits)
-        elif cfg.path == "kernel_mxu":
-            from repro.kernels import ops as kops
-
-            values = bitplane.from_bitplanes(planes, bits=cfg.bits)
-            ip = kops.score_matmul(q.values, values)
-        else:
-            raise ValueError(f"unknown path {self.config.path!r}")
-        return self._finalize(ip.astype(jnp.float32), q)
-
-    def _finalize(
-        self, ip: jax.Array, q: quantization.QuantizedTensor
-    ) -> jax.Array:
-        cfg = self.config
-        if cfg.metric == "mips":
-            d_scale = jnp.reshape(self.docs.scale, (-1,))
-            return ip * q.scale * d_scale
-        qn = jnp.sqrt(jnp.sum(q.values.astype(jnp.float32) ** 2, -1, keepdims=True))
-        return ip / jnp.maximum(qn * self.doc_norms, 1e-12)
+        # Sensing (the error channel) only touches the bit-plane paths.
+        uses_planes = cfg.path in (
+            "bitserial", "kernel_bitserial", "kernel_mxu"
+        ) or (cfg.path == "int_exact" and cfg.error.enabled)
+        planes = self.sensed_planes(key)[0] if uses_planes else self.planes
+        return score_image(cfg, q, queries, self.docs.values, self.docs.scale,
+                           planes, self.doc_norms)
 
     # --------------------------------------------------------------- search
     def search(

@@ -1,0 +1,370 @@
+"""ShardedDircIndex — multi-macro DIRC-RAG retrieval with incremental updates.
+
+The paper's system is sixteen DIRC cores inside ONE macro (handled by
+`topk.hierarchical_topk`); scaling past a single macro means replicating the
+whole macro and splitting the corpus across macros. This module models that
+outer level:
+
+  shard s  <->  one DIRC macro: its own per-document (per-"row") quantization
+                scales, two's-complement bit-plane image, D-Sum LUT and
+                integer-norm ReRAM buffer. All shard images are stacked on a
+                leading axis, e.g. planes (n_shards, capacity, bits, dim),
+                so shard-parallel scoring is a `vmap` (or `lax.map` /
+                `shard_map`) over axis 0 — the QS dataflow per macro is
+                unchanged: the query is broadcast (query-stationary), the
+                documents never move.
+
+Top-k is a three-level comparator tree: per-core local top-k and per-macro
+merge via the existing `hierarchical_topk` (paper Fig. 3a), then a cross-
+macro global comparator that sorts the tiny candidate list by
+(-score, doc_id) — exactly `jax.lax.top_k`'s lower-index tie-break, so a
+sharded search equals a monolithic `DircRagIndex.search` up to fp reduction
+order (bit-exact on the integer paths).
+
+Incremental updates (the corpus is no longer build-once):
+  * `add_docs` appends each new document to the least-loaded shard, writing
+    its codes/planes/LUT/norm into a free slot (capacity doubles by padding
+    every shard image when the macro set is full);
+  * `delete_docs` clears the slot's `alive` bit — a TOMBSTONE. Tombstoned
+    slots are masked to -inf before the local comparator, so their ids can
+    never be returned, and the slot is reused by a later `add_docs`. Global
+    doc ids are never reused: `ids[s, slot]` maps slots to stable ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitplane, error_detection, error_model, quantization, remapping, topk
+from .retrieval import RetrievalConfig, score_image
+
+PARALLELISM = ("vmap", "map", "shard_map")
+
+_NEG_INF = jnp.float32(-jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("cfg", "parallelism"))
+def _scores_impl(queries, values, scales, planes, norms, alive,
+                 *, cfg: RetrievalConfig, parallelism: str) -> jax.Array:
+    """All-shard scores (S, b, cap), dead slots -inf. One XLA program per
+    (config, parallelism, shape) combination — RetrievalConfig is frozen
+    and hashable, so it rides along as a static argument."""
+    q = quantization.quantize_query(queries, bits=cfg.bits)
+
+    def shard_fn(values_s, scales_s, planes_s, norms_s):
+        return score_image(cfg, q, queries, values_s, scales_s,
+                           planes_s, norms_s)
+
+    args = (values, scales, planes, norms)
+    if parallelism == "map":
+        s = jax.lax.map(lambda t: shard_fn(*t), args)
+    elif parallelism == "shard_map" and cfg.path not in (
+        "kernel_bitserial", "kernel_mxu",
+    ):
+        s = _shard_map_scores(shard_fn, args)
+    else:  # "vmap", and shard_map's fallback for the Pallas paths
+        s = jax.vmap(shard_fn)(*args)
+    return jnp.where(alive[:, None, :], s, _NEG_INF)
+
+
+def _shard_map_scores(shard_fn, args) -> jax.Array:
+    """Distribute macros over the available devices along a 1-D mesh.
+
+    Each device scores its local block of shards (vmap inside the body)
+    and the (S, b, cap) result is all-gathered back — candidate-list
+    merging stays tiny exactly as in `core.distributed`. Falls back to
+    plain vmap when the device count does not divide n_shards.
+    """
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ._compat import shard_map
+
+    devs = jax.devices()
+    if args[0].shape[0] % len(devs):
+        return jax.vmap(shard_fn)(*args)
+    mesh = Mesh(np.asarray(devs), ("macro",))
+
+    def body(values, scales, planes_s, norms):
+        local = jax.vmap(shard_fn)(values, scales, planes_s, norms)
+        return jax.lax.all_gather(local, "macro", axis=0, tiled=True)
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("macro"), P("macro"), P("macro"), P("macro")),
+        out_specs=P(),
+        check_replication=False,
+    )
+    return mapped(*args)
+
+
+@partial(jax.jit, static_argnames=("k", "kk", "n_cores"))
+def _merge_impl(s, ids, alive, *, k: int, kk: int, n_cores: int) -> topk.TopK:
+    """Per-macro top-k (16-core comparator tree when the capacity folds)
+    then the cross-macro global comparator."""
+    capacity = s.shape[-1]
+    if capacity % n_cores == 0:
+        per_shard = jax.vmap(
+            lambda x: topk.hierarchical_topk(x, kk, n_cores=n_cores))(s)
+    else:
+        per_shard = jax.vmap(lambda x: topk.local_topk(x, kk))(s)
+    lv, li = per_shard.scores, per_shard.indices          # (S, b, kk)
+    # slot -> stable global id; dead slots surface as -1
+    masked_ids = jnp.where(alive, ids, -1)                # (S, cap)
+    gid = jax.vmap(lambda idv, lidx: idv[lidx])(masked_ids, li)
+    b = lv.shape[1]
+    cand_v = jnp.transpose(lv, (1, 0, 2)).reshape(b, -1)  # (b, S*kk)
+    cand_i = jnp.transpose(gid, (1, 0, 2)).reshape(b, -1)
+    # Global comparator: (-score, id) order matches jax.lax.top_k's
+    # lower-index tie-break over a monolithic score row.
+    merged = topk.merge_candidates(cand_v, cand_i, k)
+    return topk.TopK(scores=merged.scores,
+                     indices=merged.indices.astype(jnp.int32))
+
+
+@dataclasses.dataclass
+class ShardedDircIndex:
+    """Corpus partitioned over `n_shards` simulated DIRC macros.
+
+    All per-shard arrays are stacked on a leading shard axis and padded to a
+    common `capacity`; `alive` masks padding and tombstones, `ids` maps
+    (shard, slot) to stable global document ids (-1 = never written).
+    """
+
+    config: RetrievalConfig
+    n_shards: int
+    capacity: int
+    values: jax.Array           # (S, cap, dim) int8 codes
+    scales: jax.Array           # (S, cap, 1) fp32 per-document scales
+    planes: jax.Array           # (S, cap, bits, dim) uint8 {0,1}
+    lut: jax.Array              # (S, cap, bits) int32 D-Sum LUT
+    norms: jax.Array            # (S, cap) fp32 integer norms
+    ids: jax.Array              # (S, cap) int32 global doc ids, -1 = empty
+    alive: jax.Array            # (S, cap) bool
+    mapping: np.ndarray         # (slots, bits, 3) bit->cell map (shared)
+    flip_probs: jax.Array       # (slots, bits) fp32 (shared across macros)
+    dim: int
+    next_id: int
+    parallelism: str = "vmap"
+
+    # ---------------------------------------------------------------- build
+    @classmethod
+    def build(
+        cls,
+        embeddings: jax.Array,
+        config: RetrievalConfig,
+        n_shards: int = 4,
+        parallelism: str = "vmap",
+    ) -> "ShardedDircIndex":
+        if parallelism not in PARALLELISM:
+            raise ValueError(f"parallelism must be one of {PARALLELISM}")
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        emb = np.asarray(embeddings, np.float32)
+        n, dim = emb.shape
+        chunks = np.array_split(np.arange(n), n_shards)  # contiguous shards
+        cap = max(1, max(len(c) for c in chunks))
+        stacked = np.zeros((n_shards, cap, dim), np.float32)
+        ids = np.full((n_shards, cap), -1, np.int32)
+        alive = np.zeros((n_shards, cap), bool)
+        for s, c in enumerate(chunks):
+            stacked[s, : len(c)] = emb[c]
+            ids[s, : len(c)] = c
+            alive[s, : len(c)] = True
+
+        docs = quantization.quantize(jnp.asarray(stacked), bits=config.bits,
+                                     per_row=True)
+        planes = bitplane.to_bitplanes(docs.values, bits=config.bits)
+        mapping = remapping.build_mapping(
+            config.mapping, bits=config.bits, error_cfg=config.error
+        )
+        probs = jnp.asarray(
+            error_model.flip_probs_for_mapping(mapping, config.error),
+            dtype=jnp.float32,
+        )
+        return cls(
+            config=config,
+            n_shards=n_shards,
+            capacity=cap,
+            values=docs.values,
+            scales=docs.scale,
+            planes=planes,
+            lut=bitplane.sum_d_lut(planes),
+            norms=quantization.doc_int_norms(docs),
+            ids=jnp.asarray(ids),
+            alive=jnp.asarray(alive),
+            mapping=mapping,
+            flip_probs=probs,
+            dim=dim,
+            next_id=n,
+            parallelism=parallelism,
+        )
+
+    # ------------------------------------------------------------- counters
+    @property
+    def n_docs(self) -> int:
+        """Live (non-tombstoned) documents across all shards."""
+        return int(jnp.sum(self.alive))
+
+    def shard_loads(self) -> np.ndarray:
+        """(S,) live docs per shard — the add_docs balancing signal."""
+        return np.asarray(jnp.sum(self.alive, axis=1))
+
+    # ---------------------------------------------------------------- sense
+    def _sensed_planes(self, key: Optional[jax.Array]) -> jax.Array:
+        """Per-query transient sensing, one independent channel per macro."""
+        cfg = self.config
+        if not cfg.error.enabled or key is None:
+            return self.planes
+        keys = jax.random.split(key, self.n_shards)
+        retries = cfg.max_retries if cfg.detect else 0
+
+        def sense(planes, lut, k):
+            return error_detection.sense_with_detection(
+                planes, lut, self.flip_probs, k,
+                max_retries=retries, detect=cfg.detect,
+            ).planes
+
+        if self.parallelism == "map":
+            return jax.lax.map(lambda t: sense(*t), (self.planes, self.lut, keys))
+        return jax.vmap(sense)(self.planes, self.lut, keys)
+
+    # ---------------------------------------------------------------- score
+    def scores(
+        self, queries: jax.Array, key: Optional[jax.Array] = None
+    ) -> jax.Array:
+        """(b, dim) fp32 queries -> (S, b, cap) per-macro scores.
+
+        Dead slots (padding/tombstones) are -inf.
+        """
+        if queries.ndim == 1:
+            queries = queries[None]
+        cfg = self.config
+        # Same sensing gate as DircRagIndex.scores: the reference path
+        # never reads planes, so don't pay the per-shard sense/detect loop.
+        uses_planes = cfg.path in (
+            "bitserial", "kernel_bitserial", "kernel_mxu"
+        ) or (cfg.path == "int_exact" and cfg.error.enabled)
+        planes = self._sensed_planes(key) if uses_planes else self.planes
+        return _scores_impl(queries, self.values, self.scales, planes,
+                            self.norms, self.alive, cfg=self.config,
+                            parallelism=self.parallelism)
+
+    # --------------------------------------------------------------- search
+    def search(
+        self, queries: jax.Array, k: int, key: Optional[jax.Array] = None
+    ) -> topk.TopK:
+        """Three-level comparator tree: cores -> macro -> global merge.
+
+        Returns global doc ids; id -1 marks "fewer than k live documents".
+        """
+        if k > self.n_shards * self.capacity:
+            raise ValueError(
+                f"k={k} exceeds total slots {self.n_shards * self.capacity}")
+        s = self.scores(queries, key=key)                    # (S, b, cap)
+        return _merge_impl(s, self.ids, self.alive, k=k,
+                           kk=min(k, self.capacity),
+                           n_cores=self.config.n_cores)
+
+    # --------------------------------------------------------------- update
+    def _grow(self, extra: int) -> None:
+        """Double capacity (at least `extra` new slots/shard) by padding."""
+        new_cap = max(self.capacity * 2, self.capacity + extra)
+        pad = new_cap - self.capacity
+
+        def pad1(x, value=0):
+            widths = [(0, 0)] * x.ndim
+            widths[1] = (0, pad)
+            return jnp.pad(x, widths, constant_values=value)
+
+        self.values = pad1(self.values)
+        self.scales = pad1(self.scales.astype(jnp.float32))
+        self.scales = self.scales.at[:, self.capacity:].set(1.0)
+        self.planes = pad1(self.planes)
+        self.lut = pad1(self.lut)
+        self.norms = pad1(self.norms)
+        self.ids = pad1(self.ids, value=-1)
+        self.alive = pad1(self.alive, value=False)
+        self.capacity = new_cap
+
+    def add_docs(self, embeddings: jax.Array) -> np.ndarray:
+        """Write new documents into the least-loaded macros.
+
+        Each row is quantized per-macro-row (scale, planes, LUT entry, norm
+        recomputed for its slot), appended to the shard with the fewest live
+        documents, reusing tombstoned slots first. Returns the new stable
+        global ids, (m,) int32.
+        """
+        emb = jnp.atleast_2d(jnp.asarray(embeddings, jnp.float32))
+        m = emb.shape[0]
+        if emb.shape[1] != self.dim:
+            raise ValueError(f"dim mismatch: got {emb.shape[1]}, want {self.dim}")
+
+        loads = self.shard_loads().astype(np.int64)
+        free = self.capacity - loads
+        # Greedy balance on the host: always the least-loaded shard with a
+        # free slot; grow every shard when the whole macro set is full.
+        targets = np.empty((m,), np.int64)
+        for j in range(m):
+            open_shards = np.flatnonzero(free > 0)
+            if open_shards.size == 0:
+                self._grow(1)
+                free = self.capacity - loads
+                open_shards = np.flatnonzero(free > 0)
+            s = open_shards[np.argmin(loads[open_shards])]
+            targets[j] = s
+            loads[s] += 1
+            free[s] -= 1
+
+        # One free slot per assignment, in target order (reuse tombstones).
+        alive = np.array(self.alive)  # mutable host copy
+        slots = np.empty((m,), np.int64)
+        cursor: dict[int, int] = {}
+        for j, s in enumerate(targets):
+            start = cursor.get(s, 0)
+            dead = np.flatnonzero(~alive[s, start:])
+            slot = start + int(dead[0])
+            slots[j] = slot
+            alive[s, slot] = True
+            cursor[s] = slot + 1
+
+        docs = quantization.quantize(emb, bits=self.config.bits, per_row=True)
+        new_planes = bitplane.to_bitplanes(docs.values, bits=self.config.bits)
+        t = jnp.asarray(targets)
+        sl = jnp.asarray(slots)
+        new_ids = np.arange(self.next_id, self.next_id + m, dtype=np.int32)
+        self.values = self.values.at[t, sl].set(docs.values)
+        self.scales = self.scales.at[t, sl].set(docs.scale)
+        self.planes = self.planes.at[t, sl].set(new_planes)
+        self.lut = self.lut.at[t, sl].set(bitplane.sum_d_lut(new_planes))
+        self.norms = self.norms.at[t, sl].set(quantization.doc_int_norms(docs))
+        self.ids = self.ids.at[t, sl].set(jnp.asarray(new_ids))
+        self.alive = self.alive.at[t, sl].set(True)
+        self.next_id += m
+        return new_ids
+
+    def delete_docs(self, doc_ids: Sequence[int]) -> int:
+        """Tombstone documents by stable global id. Returns #deleted.
+
+        The ReRAM image is untouched (a real macro would not erase cells);
+        only the alive bit flips, so the slot is masked out of every later
+        search and becomes reusable by `add_docs`.
+        """
+        targets = jnp.asarray(np.asarray(list(doc_ids), np.int32))
+        hit = jnp.isin(self.ids, targets) & self.alive
+        n = int(jnp.sum(hit))
+        self.alive = self.alive & ~hit
+        return n
+
+    # --------------------------------------------------------------- memory
+    def storage_bytes(self) -> dict:
+        """Per-macro ReRAM image + buffer, summed over allocated slots."""
+        slots = self.n_shards * self.capacity
+        emb = slots * self.dim * self.config.bits // 8
+        buffer = slots * (4 + 4 + self.config.bits * 4 // 8)
+        return {"embeddings": emb, "reram_buffer": buffer,
+                "live_docs": self.n_docs}

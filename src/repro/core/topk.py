@@ -58,19 +58,27 @@ def hierarchical_topk(scores: jax.Array, k: int, n_cores: int = 16) -> TopK:
     return TopK(scores=gv, indices=gid)
 
 
+def merge_candidates(scores: jax.Array, indices: jax.Array, k: int) -> TopK:
+    """Top-k over a (..., m) candidate list by (-score, index).
+
+    The double stable argsort reproduces `jax.lax.top_k`'s lower-index
+    tie-break for candidates in ANY order — the global comparator shared by
+    `merge_topk` and the cross-macro merge in `sharded_index`."""
+    key = jnp.argsort(indices, axis=-1, stable=True)
+    v = jnp.take_along_axis(scores, key, axis=-1)
+    i = jnp.take_along_axis(indices, key, axis=-1)
+    order = jnp.argsort(-v, axis=-1, stable=True)
+    v = jnp.take_along_axis(v, order, axis=-1)[..., :k]
+    i = jnp.take_along_axis(i, order, axis=-1)[..., :k]
+    return TopK(scores=v, indices=i)
+
+
 @partial(jax.jit, static_argnames=("k",))
 def merge_topk(a: TopK, b: TopK, k: int) -> TopK:
     """Merge two candidate lists into a single top-k (global comparator)."""
     v = jnp.concatenate([a.scores, b.scores], axis=-1)
     i = jnp.concatenate([a.indices, b.indices], axis=-1)
-    # Sort by (-score, index) to keep the lower-index tie-break.
-    key = jnp.argsort(i, axis=-1, stable=True)
-    v = jnp.take_along_axis(v, key, axis=-1)
-    i = jnp.take_along_axis(i, key, axis=-1)
-    order = jnp.argsort(-v, axis=-1, stable=True)
-    v = jnp.take_along_axis(v, order, axis=-1)[..., :k]
-    i = jnp.take_along_axis(i, order, axis=-1)[..., :k]
-    return TopK(scores=v, indices=i)
+    return merge_candidates(v, i, k)
 
 
 def precision_at_k(retrieved: jax.Array, relevant: jax.Array, k: int) -> jax.Array:

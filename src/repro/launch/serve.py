@@ -1,12 +1,17 @@
-"""Serving driver: batched generation with any --arch (smoke on CPU).
+"""Serving driver: batched generation with any --arch (smoke on CPU),
+or batched sharded retrieval with --rag.
 
 Wraps serving.GenerationEngine over the Model protocol; the production
 decode program for the big shapes is exercised via the dry-run
-(serve_step_lowered in steps.py).
+(serve_step_lowered in steps.py). The --rag mode instead stands up a
+ShardedDircIndex-backed RagPipeline plus a BatchScheduler and reports
+retrieval queries/sec under micro-batched traffic.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
       --batch 4 --prompt-len 16 --new-tokens 32
+  PYTHONPATH=src python -m repro.launch.serve --rag --n-shards 4 \
+      --rag-docs 1024 --batch 16 --rag-queries 64
 """
 from __future__ import annotations
 
@@ -17,8 +22,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.retrieval import RetrievalConfig
 from repro.models import build_model
-from repro.serving import GenerationEngine
+from repro.serving import GenerationEngine, HashEmbedder, RagPipeline
 
 
 def serve(arch: str, smoke: bool = True, batch: int = 4,
@@ -39,15 +45,59 @@ def serve(arch: str, smoke: bool = True, batch: int = 4,
     return {"tokens": toks, "wall_s": dt, "tok_per_s": n / dt}
 
 
+def serve_rag(n_docs: int = 1024, n_shards: int = 4, dim: int = 256,
+              batch: int = 16, n_queries: int = 64, k: int = 3,
+              path: str = "int_exact", seed: int = 0) -> dict:
+    """Stand up a sharded RAG front end and drive micro-batched traffic."""
+    rng = np.random.default_rng(seed)
+    corpus = [f"document {i}: " + " ".join(
+        f"w{rng.integers(0, 997)}" for _ in range(12)) for i in range(n_docs)]
+    pipe = RagPipeline(
+        corpus,
+        RetrievalConfig(bits=8, metric="cosine", path=path),
+        dim=dim, embedder=HashEmbedder(dim=dim),
+        n_shards=n_shards,
+    )
+    queries = [corpus[rng.integers(0, n_docs)] for _ in range(n_queries)]
+    sched = pipe.scheduler(max_batch=batch)
+    tickets = [sched.submit(q, k=k) for q in queries]
+    sched.flush()  # warmup/compile on the first full traffic wave
+    warmup_flushes = sched.n_flushes
+    t0 = time.time()
+    tickets = [sched.submit(q, k=k) for q in queries]
+    sched.flush()
+    dt = time.time() - t0
+    exact = sum(corpus[int(t.result()[0][0])] == q
+                for t, q in zip(tickets, queries))
+    return {"wall_s": dt, "qps": n_queries / dt,
+            "flushes": sched.n_flushes - warmup_flushes,
+            "self_retrieval": exact / n_queries}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--rag", action="store_true",
+                    help="serve sharded batched retrieval instead of an LM")
+    ap.add_argument("--rag-docs", type=int, default=1024)
+    ap.add_argument("--rag-queries", type=int, default=64)
+    ap.add_argument("--n-shards", type=int, default=4)
+    ap.add_argument("--k", type=int, default=3)
     args = ap.parse_args()
+    if args.rag:
+        out = serve_rag(n_docs=args.rag_docs, n_shards=args.n_shards,
+                        batch=args.batch, n_queries=args.rag_queries, k=args.k)
+        print(f"served {args.rag_queries} queries in {out['wall_s']:.3f}s "
+              f"({out['qps']:.0f} q/s, {out['flushes']} flushes, "
+              f"self-retrieval {out['self_retrieval']:.2f})")
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --rag is set")
     out = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                 new_tokens=args.new_tokens, temperature=args.temperature)
     print(f"generated {out['tokens'].shape} tokens in {out['wall_s']:.2f}s "

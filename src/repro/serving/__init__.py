@@ -1,3 +1,3 @@
-"""repro.serving — generation engine + end-to-end RAG pipeline."""
-from .engine import GenerationEngine  # noqa: F401
+"""repro.serving — generation engine, batch scheduler, end-to-end RAG."""
+from .engine import BatchScheduler, BatchTicket, GenerationEngine  # noqa: F401
 from .rag_pipeline import HashEmbedder, RagPipeline, RagResult  # noqa: F401

@@ -21,9 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.retrieval import DircRagIndex, RetrievalConfig
+from repro.core.sharded_index import ShardedDircIndex
 from repro.core.simulator import simulate_query
 from repro.data.tokenizer import ByteTokenizer
-from .engine import GenerationEngine
+from .engine import BatchScheduler, GenerationEngine
 
 
 class HashEmbedder:
@@ -70,24 +71,88 @@ class RagPipeline:
         embedder: Optional[HashEmbedder] = None,
         dim: int = 512,
         max_prompt_len: int = 512,
+        n_shards: int = 0,
     ):
+        """n_shards=0 builds the monolithic single-macro DircRagIndex;
+        n_shards>=1 builds a ShardedDircIndex, which also unlocks
+        add_docs/delete_docs (incremental corpus updates)."""
         self.tokenizer = ByteTokenizer()
         self.embedder = embedder or HashEmbedder(dim=dim)
         self.doc_texts = list(doc_texts)
         embs = self.embedder.embed(self.doc_texts)
-        self.index = DircRagIndex.build(jnp.asarray(embs), retrieval_config)
+        if n_shards > 0:
+            self.index = ShardedDircIndex.build(
+                jnp.asarray(embs), retrieval_config, n_shards=n_shards)
+        else:
+            self.index = DircRagIndex.build(jnp.asarray(embs), retrieval_config)
         self.engine = (
             GenerationEngine(model, params) if model is not None else None
         )
         self.max_prompt_len = max_prompt_len
 
+    # ------------------------------------------------------------ retrieval
+    def search_batch(
+        self, texts: Sequence[str], k: int,
+        key: Optional[jax.Array] = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Embed + search a whole batch as one (b, dim) call.
+
+        Returns (ids (b, k) int32, scores (b, k) fp32). This is the unit
+        the BatchScheduler flushes."""
+        q = jnp.asarray(self.embedder.embed(list(texts)))
+        res = self.index.search(q, k=k, key=key)
+        return np.asarray(res.indices), np.asarray(res.scores)
+
+    def scheduler(self, max_batch: int = 32,
+                  key: Optional[jax.Array] = None) -> BatchScheduler:
+        """A BatchScheduler whose flushes run through this pipeline."""
+        return BatchScheduler(
+            lambda texts, k: self.search_batch(texts, k, key=key),
+            max_batch=max_batch,
+        )
+
+    # ------------------------------------------------------ corpus updates
+    def add_docs(self, texts: Sequence[str]) -> np.ndarray:
+        """Embed and append new documents (sharded index only)."""
+        if not isinstance(self.index, ShardedDircIndex):
+            raise TypeError("add_docs requires n_shards >= 1 "
+                            "(ShardedDircIndex); the monolithic ReRAM image "
+                            "is build-once")
+        texts = list(texts)
+        if not texts:
+            return np.zeros((0,), np.int32)
+        # Stable ids are append-ordered, so position in doc_texts == id.
+        # Reject BEFORE mutating the index, or the new batch would land in
+        # the index with no doc_texts entries.
+        if self.index.next_id != len(self.doc_texts):
+            raise RuntimeError(
+                "doc_texts out of sync with index ids (documents were added "
+                "directly on pipe.index, bypassing pipe.add_docs)")
+        ids = self.index.add_docs(jnp.asarray(self.embedder.embed(texts)))
+        self.doc_texts.extend(texts)
+        return ids
+
+    def delete_docs(self, doc_ids: Sequence[int]) -> int:
+        """Tombstone documents by id (sharded index only)."""
+        if not isinstance(self.index, ShardedDircIndex):
+            raise TypeError("delete_docs requires n_shards >= 1")
+        return self.index.delete_docs(doc_ids)
+
+    # --------------------------------------------------------------- query
     def query(self, text: str, k: int = 3, max_new_tokens: int = 32,
               key: Optional[jax.Array] = None) -> RagResult:
-        q = jnp.asarray(self.embedder.embed([text]))
-        res = self.index.search(q, k=k, key=key)
-        ids = np.asarray(res.indices)[0]
-        scores = np.asarray(res.scores)[0]
-        texts = [self.doc_texts[i] for i in ids]
+        return self.query_many([text], k=k, max_new_tokens=max_new_tokens,
+                               key=key)[0]
+
+    def query_many(self, texts: Sequence[str], k: int = 3,
+                   max_new_tokens: int = 32,
+                   key: Optional[jax.Array] = None) -> list:
+        """Serve a batch of queries with ONE embed + ONE batched search.
+
+        Equals per-query `query` results row for row (same index, same
+        key); generation (if a model is attached) still runs per query
+        since prompt lengths differ."""
+        ids_b, scores_b = self.search_batch(texts, k, key=key)
 
         # DIRC hardware supports dims 128..1024 (paper Table I); round the
         # simulated dim up to the nearest supported column folding.
@@ -95,21 +160,25 @@ class RagPipeline:
         sim = simulate_query(self.index.n_docs, sim_dim,
                              bits=self.index.config.bits)
 
-        answer_text = answer_tokens = None
-        if self.engine is not None:
-            prompt = self.tokenizer.encode_rag_prompt(
-                text, texts, self.max_prompt_len)
-            vocab = self.engine.model.cfg.vocab_size
-            toks = jnp.asarray([t % vocab for t in prompt], jnp.int32)[None]
-            answer_tokens = self.engine.generate(
-                toks, max_new_tokens=max_new_tokens)
-            answer_text = self.tokenizer.decode(answer_tokens[0])
-        return RagResult(
-            doc_ids=ids,
-            doc_scores=scores,
-            retrieved_texts=texts,
-            answer_text=answer_text,
-            answer_tokens=answer_tokens,
-            sim_latency_us=sim.latency_s * 1e6,
-            sim_energy_uj=sim.energy_j * 1e6,
-        )
+        results = []
+        for text, ids, scores in zip(texts, ids_b, scores_b):
+            texts_k = [self.doc_texts[i] for i in ids if i >= 0]
+            answer_text = answer_tokens = None
+            if self.engine is not None and max_new_tokens > 0:
+                prompt = self.tokenizer.encode_rag_prompt(
+                    text, texts_k, self.max_prompt_len)
+                vocab = self.engine.model.cfg.vocab_size
+                toks = jnp.asarray([t % vocab for t in prompt], jnp.int32)[None]
+                answer_tokens = self.engine.generate(
+                    toks, max_new_tokens=max_new_tokens)
+                answer_text = self.tokenizer.decode(answer_tokens[0])
+            results.append(RagResult(
+                doc_ids=ids,
+                doc_scores=scores,
+                retrieved_texts=texts_k,
+                answer_text=answer_text,
+                answer_tokens=answer_tokens,
+                sim_latency_us=sim.latency_s * 1e6,
+                sim_energy_uj=sim.energy_j * 1e6,
+            ))
+        return results

@@ -1,0 +1,45 @@
+"""Optional-import shim for `hypothesis`.
+
+Property tests import `given`/`settings`/`st` from here instead of from
+`hypothesis` directly. When hypothesis is installed the real objects are
+re-exported and behaviour is identical. When it is absent (the minimal
+container image), `given` decorates the test with `pytest.mark.skip` so the
+property cases skip gracefully instead of erroring at collection time.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Placeholder for `hypothesis.strategies`: any attribute access or
+        call returns another placeholder, so module-level strategy
+        construction (`st.integers(0, 7)`, `st.lists(...)`) never fails."""
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+        def __call__(self, *args, **kwargs):
+            return _Strategy()
+
+    st = _Strategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+
+strategies = st
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "strategies"]

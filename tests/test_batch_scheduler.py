@@ -1,0 +1,90 @@
+"""BatchScheduler + RagPipeline batched serving and incremental updates."""
+import numpy as np
+import pytest
+
+from repro.core.retrieval import RetrievalConfig
+from repro.serving import BatchScheduler, HashEmbedder, RagPipeline
+
+CORPUS = [f"document number {i} talks about topic {i % 7}" for i in range(40)]
+CORPUS[3] = "the sigma-d checksum detects reram sensing errors"
+CORPUS[11] = "query stationary dataflow pins the query registers"
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return RagPipeline(
+        CORPUS,
+        RetrievalConfig(bits=8, metric="cosine", path="int_exact"),
+        dim=128, embedder=HashEmbedder(dim=128),
+        n_shards=4,
+    )
+
+
+def test_query_many_equals_per_query(pipe):
+    queries = ["sigma-d checksum errors", "query stationary dataflow",
+               "topic 3 document"]
+    batched = pipe.query_many(queries, k=3)
+    for q, b in zip(queries, batched):
+        single = pipe.query(q, k=3)
+        assert np.array_equal(single.doc_ids, b.doc_ids)
+        np.testing.assert_allclose(single.doc_scores, b.doc_scores)
+        assert single.retrieved_texts == b.retrieved_texts
+
+
+def test_scheduler_matches_direct_search(pipe):
+    queries = [f"topic {i} document" for i in range(7)]
+    sched = pipe.scheduler(max_batch=3)
+    tickets = [sched.submit(q, k=2) for q in queries]
+    assert sched.pending() == 7
+    served = sched.flush()
+    assert served == 7
+    assert sched.n_flushes == 3  # ceil(7 / 3) batched search calls
+    ids_direct, scores_direct = pipe.search_batch(queries, k=2)
+    for row, t in enumerate(tickets):
+        ids, scores = t.result()
+        assert np.array_equal(ids, ids_direct[row])
+        np.testing.assert_allclose(scores, scores_direct[row])
+
+
+def test_scheduler_mixed_k_and_autoflush(pipe):
+    sched = pipe.scheduler(max_batch=8)
+    t1 = sched.submit("sigma-d checksum errors", k=1)
+    t2 = sched.submit("query stationary dataflow", k=3)
+    ids1, _ = t1.result()  # result() triggers the flush
+    ids2, _ = t2.result()
+    assert sched.pending() == 0
+    assert len(ids1) == 1 and len(ids2) == 3
+    single = pipe.query("query stationary dataflow", k=3)
+    assert np.array_equal(ids2, single.doc_ids)
+
+
+def test_add_then_search_finds_new_doc(pipe):
+    new_text = "the global comparator merges per macro candidate lists"
+    (new_id,) = pipe.add_docs([new_text])
+    res = pipe.query(new_text, k=1)
+    assert res.doc_ids[0] == new_id
+    assert res.retrieved_texts == [new_text]
+    pipe.delete_docs([int(new_id)])
+
+
+def test_delete_then_search_never_returns_tombstone(pipe):
+    ids = pipe.add_docs(["ephemeral doc one", "ephemeral doc two"])
+    assert pipe.delete_docs([int(i) for i in ids]) == 2
+    ids_b, _ = pipe.search_batch(["ephemeral doc one", "ephemeral doc two"],
+                                 k=10)
+    assert not np.isin(ids_b, ids).any()
+
+
+def test_monolithic_pipeline_rejects_updates():
+    mono = RagPipeline(CORPUS[:8],
+                       RetrievalConfig(bits=8, path="int_exact"),
+                       dim=128, embedder=HashEmbedder(dim=128))
+    with pytest.raises(TypeError):
+        mono.add_docs(["x"])
+    with pytest.raises(TypeError):
+        mono.delete_docs([0])
+
+
+def test_scheduler_rejects_bad_batch():
+    with pytest.raises(ValueError):
+        BatchScheduler(lambda texts, k: (None, None), max_batch=0)

@@ -1,0 +1,152 @@
+"""ShardedDircIndex: sharded-vs-monolithic parity and incremental updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import error_model as E
+from repro.core import retrieval
+from repro.core.retrieval import DircRagIndex, RetrievalConfig
+from repro.core.sharded_index import ShardedDircIndex
+from repro.data.synthetic import make_ir_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_ir_dataset(n_docs=512, dim=128, n_queries=8,
+                           n_clusters=16, seed=7)
+
+
+def _assert_parity(mono, sharded, atol=0.0, rtol=0.0):
+    assert np.array_equal(np.asarray(mono.indices), np.asarray(sharded.indices))
+    np.testing.assert_allclose(np.asarray(mono.scores),
+                               np.asarray(sharded.scores),
+                               rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("path", retrieval.PATHS)
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_parity_all_paths(ds, path, n_shards):
+    """Every compute path: sharded search == monolithic search (bit-exact
+    ranks; scores exact on integer paths, fp-reduction-tolerant on
+    reference)."""
+    cfg = RetrievalConfig(bits=8, metric="cosine", path=path)
+    emb = jnp.asarray(ds.doc_embeddings)
+    q = jnp.asarray(ds.query_embeddings)
+    mono = DircRagIndex.build(emb, cfg).search(q, k=5)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=n_shards).search(q, k=5)
+    tol = 1e-6 if path == "reference" else 0.0
+    _assert_parity(mono, sh, atol=tol, rtol=1e-5 if tol else 0.0)
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_parity_error_channel_with_detection(ds, n_shards):
+    """The error-channel + Sigma-D detection path stays shard-invariant.
+
+    p=0 keeps the channel deterministic (the full sense/detect/re-sense
+    machinery still runs per macro), so parity is exact."""
+    err = E.ErrorModelConfig(enabled=True, p_min=0.0, p_max=0.0)
+    cfg = RetrievalConfig(bits=8, path="bitserial", mapping="error_aware",
+                          error=err, detect=True, max_retries=2)
+    emb = jnp.asarray(ds.doc_embeddings)
+    q = jnp.asarray(ds.query_embeddings)
+    key = jax.random.key(3)
+    mono = DircRagIndex.build(emb, cfg).search(q, k=5, key=key)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=n_shards).search(
+        q, k=5, key=key)
+    _assert_parity(mono, sh)
+
+
+def test_parity_mips_metric(ds):
+    cfg = RetrievalConfig(bits=8, metric="mips", path="int_exact")
+    emb = jnp.asarray(ds.doc_embeddings)
+    q = jnp.asarray(ds.query_embeddings)
+    mono = DircRagIndex.build(emb, cfg).search(q, k=5)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=4).search(q, k=5)
+    _assert_parity(mono, sh, atol=1e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("parallelism", ["vmap", "map", "shard_map"])
+def test_parallelism_modes_agree(ds, parallelism):
+    cfg = RetrievalConfig(bits=8, path="int_exact")
+    emb = jnp.asarray(ds.doc_embeddings)
+    q = jnp.asarray(ds.query_embeddings)
+    mono = DircRagIndex.build(emb, cfg).search(q, k=5)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=4,
+                                parallelism=parallelism).search(q, k=5)
+    _assert_parity(mono, sh)
+
+
+def test_ragged_corpus_shards(ds):
+    """A corpus size not divisible by n_shards still matches monolithic."""
+    cfg = RetrievalConfig(bits=8, path="int_exact")
+    emb = jnp.asarray(ds.doc_embeddings[:509])  # prime-ish, ragged shards
+    q = jnp.asarray(ds.query_embeddings)
+    mono = DircRagIndex.build(emb, cfg).search(q, k=5)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=4).search(q, k=5)
+    _assert_parity(mono, sh)
+
+
+def test_add_docs_balances_and_retrieves(ds):
+    cfg = RetrievalConfig(bits=8, path="int_exact")
+    sh = ShardedDircIndex.build(jnp.asarray(ds.doc_embeddings), cfg,
+                                n_shards=4)
+    n0 = sh.n_docs
+    new = sh.add_docs(jnp.asarray(ds.query_embeddings[:3]))
+    assert list(new) == [n0, n0 + 1, n0 + 2]  # stable append-ordered ids
+    assert sh.n_docs == n0 + 3
+    # An added document is its own nearest neighbour.
+    res = sh.search(jnp.asarray(ds.query_embeddings[:3]), k=1)
+    assert np.array_equal(np.asarray(res.indices).ravel(), new)
+    # Load stays balanced: max-min live docs per shard <= 1 after appends.
+    loads = sh.shard_loads()
+    assert loads.max() - loads.min() <= 1
+
+
+def test_delete_docs_tombstones(ds):
+    cfg = RetrievalConfig(bits=8, path="int_exact")
+    sh = ShardedDircIndex.build(jnp.asarray(ds.doc_embeddings), cfg,
+                                n_shards=4)
+    new = sh.add_docs(jnp.asarray(ds.query_embeddings[:3]))
+    assert sh.delete_docs(new.tolist()) == 3
+    assert sh.delete_docs(new.tolist()) == 0  # idempotent
+    res = sh.search(jnp.asarray(ds.query_embeddings), k=10)
+    assert not np.isin(np.asarray(res.indices), new).any()
+
+
+def test_tombstone_slot_reuse_and_growth(ds):
+    cfg = RetrievalConfig(bits=8, path="int_exact")
+    emb = jnp.asarray(ds.doc_embeddings)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=4)
+    cap0 = sh.capacity
+    # Delete two docs; the next adds must reuse their slots (no growth).
+    sh.delete_docs([0, 1])
+    ids = sh.add_docs(jnp.asarray(ds.query_embeddings[:2]))
+    assert sh.capacity == cap0  # built full, so the adds reused tombstones
+    assert sh.n_docs == 512
+    # Filling every remaining slot forces capacity growth, search survives.
+    free = sh.n_shards * sh.capacity - sh.n_docs
+    sh.add_docs(jnp.tile(jnp.asarray(ds.query_embeddings[:1]), (free + 2, 1)))
+    assert sh.capacity > cap0
+    res = sh.search(jnp.asarray(ds.query_embeddings[:2]), k=3)
+    assert (np.asarray(res.indices) >= 0).all()
+    assert np.isin(ids, np.asarray(sh.ids)).all()
+
+
+def test_deleted_ids_never_reused(ds):
+    cfg = RetrievalConfig(bits=8, path="int_exact")
+    sh = ShardedDircIndex.build(jnp.asarray(ds.doc_embeddings[:64]), cfg,
+                                n_shards=4)
+    a = sh.add_docs(jnp.asarray(ds.query_embeddings[:1]))
+    sh.delete_docs(a.tolist())
+    b = sh.add_docs(jnp.asarray(ds.query_embeddings[1:2]))
+    assert b[0] > a[0]
+
+
+def test_storage_accounting(ds):
+    cfg = RetrievalConfig(bits=8)
+    sh = ShardedDircIndex.build(jnp.asarray(ds.doc_embeddings), cfg,
+                                n_shards=4)
+    sb = sh.storage_bytes()
+    assert sb["embeddings"] == 512 * 128  # slots * dim * 1 byte
+    assert sb["live_docs"] == 512

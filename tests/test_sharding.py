@@ -102,15 +102,15 @@ _SUBPROC = textwrap.dedent("""
 
     # 3) grad compression inside shard_map
     from repro.optim.grad_compression import compressed_psum
-    from jax.sharding import Mesh
+    from repro.core._compat import shard_map
     gmesh = jax.make_mesh((8,), ("data",))
     g = {"w": jnp.arange(8.0).reshape(8, 1) * jnp.ones((8, 4))}
     e = {"w": jnp.zeros((8, 4))}
     def body(gl, el):
         return compressed_psum(gl, el, ("data",))
-    out, new_e = jax.shard_map(
+    out, new_e = shard_map(
         body, mesh=gmesh, in_specs=(P("data"), P("data")),
-        out_specs=(P("data"), P("data")))(g, e)
+        out_specs=(P("data"), P("data")), check_replication=True)(g, e)
     # mean over 8 shards of rows 0..7 -> 3.5 everywhere (within int8 quant)
     ok3 = bool(np.allclose(np.asarray(out["w"]), 3.5, atol=0.05))
 
