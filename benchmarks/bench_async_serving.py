@@ -1,0 +1,98 @@
+"""Async streaming serving: latency percentiles and achieved batch size
+vs offered load, flush deadline, and tenant count.
+
+Sweeps `max_wait_ms x offered-qps x n_tenants` over the open-loop Poisson
+traffic driver (`repro.launch.serve.serve_rag_open_loop`): every config
+replays a stream of single-query arrivals into the AsyncBatchScheduler's
+background flush loop and records p50/p95/p99 submit->serve latency, the
+achieved batch-size histogram, and per-tenant p95 under a 10:1 skew
+(tenant 0 is the chatty one). The tradeoff this charts is the paper's
+query-stationary batching story under ONLINE traffic: a larger deadline
+buys fuller (b, dim) batches for the macro at the cost of tail latency.
+
+Emits BENCH_async_serving.json (rows + config) for the CI perf artifact.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_async_serving [--tiny]
+         [--out BENCH_async_serving.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.serve import build_rag_pipeline, serve_rag_open_loop
+
+FULL = {
+    "n_docs": 1024,
+    "dim": 256,
+    "n_shards": 4,
+    "max_batch": 16,
+    "n_queries": 200,
+    "waits_ms": (1.0, 5.0, 20.0),
+    "loads_qps": (100.0, 400.0, 1200.0),
+    "tenants": (1, 4),
+    "skew": 10.0,
+}
+
+TINY = {
+    "n_docs": 128,
+    "dim": 128,
+    "n_shards": 2,
+    "max_batch": 8,
+    "n_queries": 48,
+    "waits_ms": (2.0, 10.0),
+    "loads_qps": (200.0, 800.0),
+    "tenants": (1, 4),
+    "skew": 10.0,
+}
+
+
+def run(cfg: dict) -> list[dict]:
+    pipe = build_rag_pipeline(
+        n_docs=cfg["n_docs"], n_shards=cfg["n_shards"], dim=cfg["dim"], seed=0
+    )
+    rows = []
+    for n_tenants in cfg["tenants"]:
+        for wait_ms in cfg["waits_ms"]:
+            for qps in cfg["loads_qps"]:
+                rows.append(
+                    serve_rag_open_loop(
+                        max_batch=cfg["max_batch"],
+                        max_wait_ms=wait_ms,
+                        n_tenants=n_tenants,
+                        skew=cfg["skew"] if n_tenants > 1 else 1.0,
+                        offered_qps=qps,
+                        n_queries=cfg["n_queries"],
+                        pipe=pipe,
+                    )
+                )
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true", help="CI smoke shapes")
+    ap.add_argument("--out", default="BENCH_async_serving.json")
+    args = ap.parse_args(argv)
+    cfg = TINY if args.tiny else FULL
+    rows = run(cfg)
+
+    print(
+        "n_tenants,max_wait_ms,offered_qps,achieved_qps,"
+        "p50_ms,p95_ms,p99_ms,mean_batch"
+    )
+    for r in rows:
+        print(
+            f"{r['n_tenants']},{r['max_wait_ms']},{r['offered_qps']:.0f},"
+            f"{r['achieved_qps']:.0f},{r['p50_ms']:.2f},{r['p95_ms']:.2f},"
+            f"{r['p99_ms']:.2f},{r['mean_batch']:.2f}"
+        )
+    cfg_json = {k: list(v) if isinstance(v, tuple) else v for k, v in cfg.items()}
+    with open(args.out, "w") as f:
+        json.dump({"config": cfg_json, "rows": rows}, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,13 @@ queries/sec, plus the monolithic DircRagIndex baseline at each batch size.
 Larger batches amortize dispatch exactly like the BatchScheduler's flushed
 (b, dim) calls do in serving.
 
-Run: PYTHONPATH=src python -m benchmarks.bench_sharded
+Run: PYTHONPATH=src python -m benchmarks.bench_sharded [--tiny]
+         [--json BENCH_sharded.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -20,54 +23,66 @@ import numpy as np
 from repro.core.retrieval import DircRagIndex, RetrievalConfig
 from repro.core.sharded_index import ShardedDircIndex
 
-N_DOCS = 4096
-DIM = 256
-K = 5
-SHARDS = (1, 4, 8)
-BATCHES = (1, 8, 32)
-REPS = 10
+FULL = {"n_docs": 4096, "dim": 256, "k": 5, "shards": (1, 4, 8),
+        "batches": (1, 8, 32), "reps": 10}
+TINY = {"n_docs": 256, "dim": 128, "k": 3, "shards": (1, 2),
+        "batches": (1, 8), "reps": 2}
 
 
-def _measure(search, queries) -> float:
+def _measure(search, queries, reps: int) -> float:
     """Steady-state seconds per search call (warmup excluded)."""
     search(queries).indices.block_until_ready()
     t0 = time.perf_counter()
-    for _ in range(REPS):
+    for _ in range(reps):
         search(queries).indices.block_until_ready()
-    return (time.perf_counter() - t0) / REPS
+    return (time.perf_counter() - t0) / reps
 
 
-def run() -> list[dict]:
+def run(cfg_bench: dict = FULL) -> list[dict]:
+    n_docs, dim, k = cfg_bench["n_docs"], cfg_bench["dim"], cfg_bench["k"]
+    reps = cfg_bench["reps"]
     rng = np.random.default_rng(0)
-    emb = jnp.asarray(rng.normal(size=(N_DOCS, DIM)).astype(np.float32))
+    emb = jnp.asarray(rng.normal(size=(n_docs, dim)).astype(np.float32))
     cfg = RetrievalConfig(bits=8, metric="cosine", path="int_exact")
     rows = []
 
     mono = DircRagIndex.build(emb, cfg)
-    for b in BATCHES:
-        q = jnp.asarray(rng.normal(size=(b, DIM)).astype(np.float32))
-        dt = _measure(lambda x: mono.search(x, k=K), q)
+    for b in cfg_bench["batches"]:
+        q = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+        dt = _measure(lambda x: mono.search(x, k=k), q, reps)
         rows.append({"index": "monolithic", "n_shards": 0, "batch": b,
                      "qps": b / dt, "ms_per_call": dt * 1e3})
 
-    for s in SHARDS:
+    for s in cfg_bench["shards"]:
         idx = ShardedDircIndex.build(emb, cfg, n_shards=s)
-        for b in BATCHES:
-            q = jnp.asarray(rng.normal(size=(b, DIM)).astype(np.float32))
-            dt = _measure(lambda x: idx.search(x, k=K), q)
+        for b in cfg_bench["batches"]:
+            q = jnp.asarray(rng.normal(size=(b, dim)).astype(np.float32))
+            dt = _measure(lambda x: idx.search(x, k=k), q, reps)
             rows.append({"index": "sharded", "n_shards": s, "batch": b,
                          "qps": b / dt, "ms_per_call": dt * 1e3})
     return rows
 
 
-def main() -> None:
-    rows = run()
-    print(f"n_docs={N_DOCS} dim={DIM} k={K} path=int_exact "
-          f"devices={len(jax.devices())}")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true", help="CI smoke shapes")
+    ap.add_argument("--json", default=None,
+                    help="also write rows to this JSON path")
+    args = ap.parse_args(argv)
+    cfg_bench = TINY if args.tiny else FULL
+    rows = run(cfg_bench)
+    print(f"n_docs={cfg_bench['n_docs']} dim={cfg_bench['dim']} "
+          f"k={cfg_bench['k']} path=int_exact devices={len(jax.devices())}")
     print("index,n_shards,batch,qps,ms_per_call")
     for r in rows:
         print(f"{r['index']},{r['n_shards']},{r['batch']},"
               f"{r['qps']:.1f},{r['ms_per_call']:.3f}")
+    if args.json:
+        cfg_json = {kk: list(v) if isinstance(v, tuple) else v
+                    for kk, v in cfg_bench.items()}
+        with open(args.json, "w") as f:
+            json.dump({"config": cfg_json, "rows": rows}, f, indent=1)
+        print(f"wrote {args.json} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

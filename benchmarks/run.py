@@ -6,6 +6,7 @@
   bench_error_opt  -> Fig. 6    (error-aware optimization ladder)
   bench_kernels    -> kernel micro-benchmarks
   bench_sharded    -> multi-macro sharded retrieval throughput
+  bench_async_serving -> open-loop streaming latency vs flush deadline
   roofline_report  -> dry-run roofline tables (EXPERIMENTS.md source)
 
 Run: PYTHONPATH=src python -m benchmarks.run
@@ -14,9 +15,9 @@ from __future__ import annotations
 
 import time
 
-from . import (bench_error_opt, bench_kernels, bench_latency,
-               bench_precision, bench_sharded, bench_simulator,
-               roofline_report)
+from . import (bench_async_serving, bench_error_opt, bench_kernels,
+               bench_latency, bench_precision, bench_sharded,
+               bench_simulator, roofline_report)
 
 SECTIONS = [
     ("Table I — DIRC-RAG spec (calibrated model)", bench_simulator),
@@ -25,6 +26,7 @@ SECTIONS = [
     ("Fig. 6 — error-aware optimization ladder", bench_error_opt),
     ("Kernel micro-benchmarks", bench_kernels),
     ("Sharded multi-macro throughput", bench_sharded),
+    ("Async open-loop serving latency", bench_async_serving),
     ("Roofline (from multi-pod dry-run)", roofline_report),
 ]
 

@@ -2,6 +2,22 @@
 generate, with micro-batched requests against a small LM (paper Fig. 1,
 scaled to a 4-macro ShardedDircIndex) plus live corpus updates.
 
+Serving model (PR 2): the async scheduler replaces pull-based batching.
+`pipe.scheduler(max_wait_ms=...)` starts a background flush loop with a
+DUAL trigger — a batch is formed the moment `max_batch` tickets are
+pending OR the oldest ticket has waited `max_wait_ms` — so the DIRC
+macro sees full (b, dim) query-stationary batches under streaming
+traffic while nobody blocks. Each `submit(..., tenant=...)` lands in a
+per-tenant queue drained deficit-round-robin, so one chatty tenant
+cannot starve others; `pipe.query_stream` wraps the same machinery as a
+results-as-they-complete generator (and `aquery_stream` for asyncio).
+For an offered-load sweep (Poisson arrivals, p50/p95/p99 latency,
+batch-size histogram) run the open-loop bench:
+
+  PYTHONPATH=src python -m repro.launch.serve --rag --open-loop \
+      --offered-qps 500 --n-tenants 4 --skew 10 --max-wait-ms 5
+  PYTHONPATH=src python -m benchmarks.bench_async_serving
+
 Run: PYTHONPATH=src python examples/rag_serve.py
 """
 import time
@@ -73,7 +89,7 @@ def main() -> None:
     print(f"   after delete, retrieved id {res.doc_ids[0]} "
           f"(tombstone never returned)")
 
-    print("\n== micro-batching scheduler (max_batch=2) ==")
+    print("\n== micro-batching scheduler (max_batch=2, pull-based) ==")
     sched = pipe.scheduler(max_batch=2)
     tickets = [sched.submit(q, k=1) for q in queries]
     print(f"   queued {sched.pending()} queries")
@@ -83,6 +99,23 @@ def main() -> None:
         print(f"   [{ids[0]:3d}] score {scores[0]:+.3f}  <- {q}")
     print(f"   served {sched.n_served} queries in {sched.n_flushes} "
           f"batched flushes")
+
+    print("\n== async scheduler (max_wait_ms=10, two tenants, no blocking) ==")
+    sched = pipe.scheduler(max_batch=16, max_wait_ms=10.0)
+    tickets = [sched.submit(q, k=1, tenant=f"user{i % 2}")
+               for i, q in enumerate(queries)]
+    # nobody calls result(): the background loop's deadline trigger fires
+    for t in tickets:
+        t.result(timeout=30.0)
+    for t in tickets:
+        print(f"   tenant {t.tenant}: [{t.doc_ids[0]:3d}] after "
+              f"{t.wait_s * 1e3:.1f} ms (batch of {t.batch_size})")
+    sched.close()
+
+    print("\n== query_stream: results in completion order ==")
+    for t in pipe.query_stream([("alice", q) for q in queries], k=1,
+                               max_wait_ms=5.0):
+        print(f"   {t.tenant}: [{t.doc_ids[0]:3d}] <- {t.text[:50]}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,6 @@ floor (~3.1 nats).
 Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 import argparse
-import dataclasses
 
 from repro.configs.base import ModelConfig
 from repro.launch import train as train_mod
@@ -35,8 +34,11 @@ def main() -> None:
     # monkey-patch the registry lookup so the driver trains THIS config
     import repro.configs.registry as reg
     orig = reg.get_config
-    reg.get_config = lambda a, smoke=False: CFG_100M \
-        if a == "granite-100m" else orig(a, smoke)
+
+    def patched_get_config(a, smoke=False):
+        return CFG_100M if a == "granite-100m" else orig(a, smoke)
+
+    reg.get_config = patched_get_config
     import repro.launch.train as t
     t.get_config = reg.get_config
 

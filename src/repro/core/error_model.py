@@ -16,7 +16,6 @@ flip channel is resampled per query / per retry with a fresh PRNG key.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

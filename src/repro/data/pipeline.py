@@ -11,7 +11,7 @@ of (seed, t), which gives three production properties for free:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -4,19 +4,26 @@ or batched sharded retrieval with --rag.
 Wraps serving.GenerationEngine over the Model protocol; the production
 decode program for the big shapes is exercised via the dry-run
 (serve_step_lowered in steps.py). The --rag mode instead stands up a
-ShardedDircIndex-backed RagPipeline plus a BatchScheduler and reports
-retrieval queries/sec under micro-batched traffic.
+ShardedDircIndex-backed RagPipeline plus a batch scheduler and reports
+retrieval queries/sec under micro-batched traffic. Adding --open-loop
+switches to simulated streaming traffic: Poisson arrivals from several
+tenants (one optionally --skew times chattier) submitted to the
+AsyncBatchScheduler's background flush loop, reporting p50/p95/p99
+latency and the achieved batch-size histogram.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
       --batch 4 --prompt-len 16 --new-tokens 32
   PYTHONPATH=src python -m repro.launch.serve --rag --n-shards 4 \
       --rag-docs 1024 --batch 16 --rag-queries 64
+  PYTHONPATH=src python -m repro.launch.serve --rag --open-loop \
+      --offered-qps 500 --n-tenants 4 --skew 10 --max-wait-ms 5
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 import numpy as np
@@ -24,7 +31,13 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.retrieval import RetrievalConfig
 from repro.models import build_model
-from repro.serving import GenerationEngine, HashEmbedder, RagPipeline
+from repro.serving import (
+    AsyncBatchScheduler,
+    GenerationEngine,
+    HashEmbedder,
+    RagPipeline,
+    SchedulerError,
+)
 
 
 def serve(arch: str, smoke: bool = True, batch: int = 4,
@@ -50,14 +63,9 @@ def serve_rag(n_docs: int = 1024, n_shards: int = 4, dim: int = 256,
               path: str = "int_exact", seed: int = 0) -> dict:
     """Stand up a sharded RAG front end and drive micro-batched traffic."""
     rng = np.random.default_rng(seed)
-    corpus = [f"document {i}: " + " ".join(
-        f"w{rng.integers(0, 997)}" for _ in range(12)) for i in range(n_docs)]
-    pipe = RagPipeline(
-        corpus,
-        RetrievalConfig(bits=8, metric="cosine", path=path),
-        dim=dim, embedder=HashEmbedder(dim=dim),
-        n_shards=n_shards,
-    )
+    pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
+                              path=path, seed=seed)
+    corpus = pipe.doc_texts
     queries = [corpus[rng.integers(0, n_docs)] for _ in range(n_queries)]
     sched = pipe.scheduler(max_batch=batch)
     tickets = [sched.submit(q, k=k) for q in queries]
@@ -74,6 +82,112 @@ def serve_rag(n_docs: int = 1024, n_shards: int = 4, dim: int = 256,
             "self_retrieval": exact / n_queries}
 
 
+def _percentiles_ms(wait_s) -> dict:
+    lat = np.asarray(wait_s, np.float64) * 1e3
+    return {
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p95_ms": float(np.percentile(lat, 95)),
+        "p99_ms": float(np.percentile(lat, 99)),
+        "mean_ms": float(lat.mean()),
+    }
+
+
+def build_rag_pipeline(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
+                       path: str = "int_exact", seed: int = 0) -> RagPipeline:
+    """A ShardedDircIndex-backed pipeline over a synthetic corpus."""
+    rng = np.random.default_rng(seed)
+    corpus = [f"document {i}: " + " ".join(
+        f"w{rng.integers(0, 997)}" for _ in range(12)) for i in range(n_docs)]
+    return RagPipeline(
+        corpus,
+        RetrievalConfig(bits=8, metric="cosine", path=path),
+        dim=dim, embedder=HashEmbedder(dim=dim),
+        n_shards=n_shards,
+    )
+
+
+def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
+                        max_batch: int = 16, max_wait_ms: float = 5.0,
+                        n_tenants: int = 4, skew: float = 1.0,
+                        offered_qps: float = 500.0, n_queries: int = 200,
+                        k: int = 3, path: str = "int_exact", seed: int = 0,
+                        pipe: Optional[RagPipeline] = None) -> dict:
+    """Open-loop streaming traffic against the async dual-trigger scheduler.
+
+    Arrivals are one aggregate Poisson process at `offered_qps`
+    (exponential inter-arrival gaps); each arrival is assigned to one of
+    `n_tenants` tenants, tenant 0 receiving `skew`x the probability mass
+    of each other tenant (skew=10 == the 10:1 chatty-tenant case). No
+    caller ever blocks: tickets complete via the background flush loop's
+    dual trigger, and latency is each ticket's submit->serve wait.
+
+    Batches are padded to the fixed `max_batch` serving shape before the
+    index search so XLA compiles exactly one (max_batch, dim) program —
+    the static-shape discipline the GenerationEngine already uses.
+    """
+    if pipe is None:
+        pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
+                                  path=path, seed=seed)
+    n_docs = len(pipe.doc_texts)
+    rng = np.random.default_rng(seed + 1)
+    queries = [pipe.doc_texts[rng.integers(0, n_docs)] for _ in range(n_queries)]
+    weights = np.array([skew] + [1.0] * max(n_tenants - 1, 0), np.float64)
+    weights /= weights.sum()
+    arrival_tenant = rng.choice(n_tenants, size=n_queries, p=weights)
+    gaps = rng.exponential(1.0 / offered_qps, size=n_queries)
+
+    def padded_search(texts, kk):
+        pad = max_batch - len(texts)
+        ids, scores = pipe.search_batch(list(texts) + [texts[0]] * pad, kk)
+        return ids[: len(texts)], scores[: len(texts)]
+
+    padded_search([queries[0]], k)  # compile the serving shape off-clock
+    sched = AsyncBatchScheduler(padded_search, max_batch=max_batch,
+                                max_wait_ms=max_wait_ms, start=True)
+    tickets = []
+    t0 = time.perf_counter()
+    next_arrival = t0
+    for gap, tenant in zip(gaps, arrival_tenant):
+        next_arrival += gap
+        delay = next_arrival - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        tickets.append(sched.submit(
+            queries[len(tickets)], k=k, tenant=f"tenant{tenant}"))
+    sched.close(drain=True)
+    wall = time.perf_counter() - t0
+
+    # a failed flush leaves wait_s=None on its tickets; report them as
+    # n_failed instead of poisoning the percentile math
+    served = [t for t in tickets if t.wait_s is not None]
+    if not served:
+        raise SchedulerError(
+            f"open-loop run served 0/{n_queries} queries "
+            f"({sched.n_failed} failed)")
+    per_tenant = {}
+    for t in served:
+        per_tenant.setdefault(t.tenant, []).append(t.wait_s)
+    out = {
+        "offered_qps": offered_qps,
+        "achieved_qps": n_queries / wall,
+        "n_queries": n_queries,
+        "n_failed": sched.n_failed,
+        "n_tenants": n_tenants,
+        "skew": skew,
+        "max_batch": max_batch,
+        "max_wait_ms": max_wait_ms,
+        "n_flushes": sched.n_flushes,
+        "mean_batch": sched.stats()["mean_batch"],
+        "batch_hist": sched.batch_size_hist(),
+        "per_tenant_p95_ms": {
+            name: float(np.percentile(np.asarray(w) * 1e3, 95))
+            for name, w in sorted(per_tenant.items())
+        },
+    }
+    out.update(_percentiles_ms([t.wait_s for t in served]))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch")
@@ -88,7 +202,30 @@ def main() -> None:
     ap.add_argument("--rag-queries", type=int, default=64)
     ap.add_argument("--n-shards", type=int, default=4)
     ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--open-loop", action="store_true",
+                    help="--rag: simulated Poisson open-loop streaming "
+                         "traffic against the async scheduler")
+    ap.add_argument("--offered-qps", type=float, default=500.0)
+    ap.add_argument("--n-tenants", type=int, default=4)
+    ap.add_argument("--skew", type=float, default=1.0,
+                    help="tenant 0 arrival-rate multiple vs the others")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     args = ap.parse_args()
+    if args.rag and args.open_loop:
+        out = serve_rag_open_loop(
+            n_docs=args.rag_docs, n_shards=args.n_shards,
+            max_batch=args.batch, max_wait_ms=args.max_wait_ms,
+            n_tenants=args.n_tenants, skew=args.skew,
+            offered_qps=args.offered_qps, n_queries=args.rag_queries,
+            k=args.k)
+        print(f"open-loop: offered {out['offered_qps']:.0f} q/s, achieved "
+              f"{out['achieved_qps']:.0f} q/s over {out['n_queries']} queries")
+        print(f"latency ms: p50 {out['p50_ms']:.2f}  p95 {out['p95_ms']:.2f} "
+              f"p99 {out['p99_ms']:.2f}  (max_wait_ms={out['max_wait_ms']})")
+        print(f"batches: {out['n_flushes']} flushes, mean size "
+              f"{out['mean_batch']:.1f}, hist {out['batch_hist']}")
+        print(f"per-tenant p95 ms: {out['per_tenant_p95_ms']}")
+        return
     if args.rag:
         out = serve_rag(n_docs=args.rag_docs, n_shards=args.n_shards,
                         batch=args.batch, n_queries=args.rag_queries, k=args.k)

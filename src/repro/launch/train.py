@@ -30,7 +30,7 @@ from repro.models import build_model
 from repro.models import sharding as shmod
 from repro.optim import adamw
 from .mesh import make_local_mesh
-from .steps import batch_shardings, build_train_step
+from .steps import build_train_step
 
 
 def train(arch: str, smoke: bool = True, steps: int = 100,

@@ -13,7 +13,7 @@ zero device allocation — exactly what the multi-pod dry-run lowers with.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

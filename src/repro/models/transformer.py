@@ -14,7 +14,6 @@ Supports:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Optional
 
 import jax

@@ -11,7 +11,7 @@ Pure-jnp, jit-safe; no optax dependency.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,8 +51,8 @@ def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def init(params) -> AdamWState:
-    f32 = lambda t: jax.tree_util.tree_map(
-        lambda x: x.astype(jnp.float32), t)
+    def f32(t):
+        return jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), t)
     zeros = jax.tree_util.tree_map(
         lambda x: jnp.zeros(x.shape, jnp.float32), params)
     return AdamWState(

@@ -39,7 +39,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

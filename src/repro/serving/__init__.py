@@ -1,3 +1,8 @@
-"""repro.serving — generation engine, batch scheduler, end-to-end RAG."""
+"""repro.serving — generation engine, async batch scheduler, end-to-end RAG."""
+from .async_scheduler import (  # noqa: F401
+    AsyncBatchScheduler,
+    AsyncTicket,
+    SchedulerError,
+)
 from .engine import BatchScheduler, BatchTicket, GenerationEngine  # noqa: F401
 from .rag_pipeline import HashEmbedder, RagPipeline, RagResult  # noqa: F401

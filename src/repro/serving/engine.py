@@ -1,52 +1,42 @@
-"""Batched generation engine + retrieval batch scheduler.
+"""Batched generation engine + deprecated pull-based scheduler shim.
 
 GenerationEngine: greedy or temperature sampling over any model exposing
 the Model protocol (prefill/init_caches/decode_step). The decode step is
 compiled once and reused; batching is static (the dry-run shapes are the
 serving shapes).
 
-BatchScheduler: a micro-batching front door for retrieval. Callers submit
-queries one at a time; the scheduler queues them and, on flush, embeds and
-searches a whole chunk as ONE batched (b, dim) call — the shape the DIRC
-macro (and the XLA score matmul) actually wants under multi-user traffic —
-then splits the result rows back to each caller's ticket.
+BatchScheduler: the PR 1 pull-based micro-batcher, now a thin DEPRECATED
+shim over `async_scheduler.AsyncBatchScheduler` in manual mode (no
+background thread, no deadline): batches form only on explicit `flush()`
+or a blocking `ticket.result()`. New code should use AsyncBatchScheduler
+(or `RagPipeline.scheduler(max_wait_ms=...)`) and get dual-trigger time-
+based flushing plus multi-tenant fairness.
 """
 from __future__ import annotations
 
-from collections import deque
-from functools import partial
+import warnings
 from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-class BatchTicket:
-    """Handle for one queued query; `result()` flushes the queue if needed."""
-
-    def __init__(self, scheduler: "BatchScheduler", text: str, k: int):
-        self._scheduler = scheduler
-        self.text = text
-        self.k = k
-        self.done = False
-        self.doc_ids: Optional[np.ndarray] = None
-        self.doc_scores: Optional[np.ndarray] = None
-
-    def result(self) -> tuple[np.ndarray, np.ndarray]:
-        if not self.done:
-            self._scheduler.flush()
-        assert self.done, "scheduler flush did not serve this ticket"
-        return self.doc_ids, self.doc_scores
+from .async_scheduler import (  # noqa: F401 - re-exported for back-compat
+    AsyncBatchScheduler,
+    AsyncTicket,
+    BatchTicket,
+    SchedulerError,
+)
 
 
-class BatchScheduler:
-    """Queue queries; serve them in batched search calls of <= max_batch.
+class BatchScheduler(AsyncBatchScheduler):
+    """DEPRECATED pull-based scheduler (PR 1 API); see AsyncBatchScheduler.
 
-    batch_search: fn(texts: list[str], k: int) -> (ids (b, >=k) int,
-        scores (b, >=k) fp32). Tickets requesting a smaller k get their
-        rows truncated, so mixed-k traffic batches together (the search
-        runs at the max k in the chunk).
+    Behaviour changes from PR 1, per the scheduler-error fix: `result()`
+    on an unservable ticket raises `SchedulerError` (it used to assert),
+    a failing `batch_search` fails that chunk's tickets instead of
+    leaving them queued, and empty/double `flush()` are defined no-ops
+    returning 0.
     """
 
     def __init__(
@@ -54,46 +44,15 @@ class BatchScheduler:
         batch_search: Callable[[Sequence[str], int], tuple[np.ndarray, np.ndarray]],
         max_batch: int = 32,
     ):
-        if max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
-        self._search = batch_search
-        self.max_batch = max_batch
-        self._queue: deque[BatchTicket] = deque()
-        self.n_flushes = 0
-        self.n_served = 0
-
-    def submit(self, text: str, k: int = 3) -> BatchTicket:
-        t = BatchTicket(self, text, k)
-        self._queue.append(t)
-        return t
-
-    def pending(self) -> int:
-        return len(self._queue)
-
-    def flush(self) -> int:
-        """Drain the queue; returns the number of queries served.
-
-        Tickets stay queued until their batched search succeeds, so a
-        raising batch_search leaves the queue intact for a retry instead
-        of silently dropping the whole chunk."""
-        served = 0
-        while self._queue:
-            n = min(self.max_batch, len(self._queue))
-            chunk = [self._queue[i] for i in range(n)]
-            k = max(t.k for t in chunk)
-            ids, scores = self._search([t.text for t in chunk], k)
-            for _ in range(n):
-                self._queue.popleft()
-            ids = np.asarray(ids)
-            scores = np.asarray(scores)
-            for row, t in enumerate(chunk):
-                t.doc_ids = ids[row, : t.k]
-                t.doc_scores = scores[row, : t.k]
-                t.done = True
-            self.n_flushes += 1
-            self.n_served += n
-            served += n
-        return served
+        warnings.warn(
+            "BatchScheduler is deprecated; use AsyncBatchScheduler (or "
+            "RagPipeline.scheduler(max_wait_ms=...)) for streaming serving",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(
+            batch_search, max_batch=max_batch, max_wait_ms=None, start=False
+        )
 
 
 class GenerationEngine:

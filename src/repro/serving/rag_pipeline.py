@@ -24,7 +24,8 @@ from repro.core.retrieval import DircRagIndex, RetrievalConfig
 from repro.core.sharded_index import ShardedDircIndex
 from repro.core.simulator import simulate_query
 from repro.data.tokenizer import ByteTokenizer
-from .engine import BatchScheduler, GenerationEngine
+from .async_scheduler import DEFAULT_TENANT, AsyncBatchScheduler
+from .engine import GenerationEngine
 
 
 class HashEmbedder:
@@ -104,12 +105,83 @@ class RagPipeline:
         return np.asarray(res.indices), np.asarray(res.scores)
 
     def scheduler(self, max_batch: int = 32,
-                  key: Optional[jax.Array] = None) -> BatchScheduler:
-        """A BatchScheduler whose flushes run through this pipeline."""
-        return BatchScheduler(
+                  key: Optional[jax.Array] = None,
+                  max_wait_ms: Optional[float] = None,
+                  tenant_quantum: int = 1,
+                  start: Optional[bool] = None) -> AsyncBatchScheduler:
+        """An AsyncBatchScheduler whose flushes run through this pipeline.
+
+        Default (max_wait_ms=None) is the PR 1 pull-based behaviour:
+        manual mode, batches form on flush()/result(). Passing
+        max_wait_ms starts the background flush loop: batches then form
+        on the dual trigger (max_batch reached OR oldest ticket older
+        than max_wait_ms) with no caller blocking, and per-tenant queues
+        are drained deficit-round-robin (`tenant_quantum` tickets per
+        visit). `start` overrides the thread choice explicitly."""
+        if start is None:
+            start = max_wait_ms is not None
+        return AsyncBatchScheduler(
             lambda texts, k: self.search_batch(texts, k, key=key),
             max_batch=max_batch,
+            max_wait_ms=max_wait_ms,
+            quantum=tenant_quantum,
+            start=start,
         )
+
+    def query_stream(self, requests, k: int = 3, max_batch: int = 32,
+                     max_wait_ms: float = 5.0,
+                     key: Optional[jax.Array] = None):
+        """Stream retrieval results as they are served (completion order).
+
+        `requests` is an iterable of query strings or (tenant, text)
+        pairs. Each request is submitted to a live AsyncBatchScheduler
+        (background flush loop, dual trigger) and completed tickets are
+        yielded as soon as their batch lands — callers never block the
+        batch formation. Yields AsyncTicket objects: `.text`, `.tenant`,
+        `.doc_ids`, `.doc_scores`, `.wait_s`, `.batch_size`."""
+        import queue as _queue
+
+        done_q: "_queue.Queue" = _queue.Queue()
+        sched = self.scheduler(max_batch=max_batch, key=key,
+                               max_wait_ms=max_wait_ms, start=True)
+        n_submitted = n_yielded = 0
+        try:
+            for req in requests:
+                tenant, text = (req if isinstance(req, tuple)
+                                else (DEFAULT_TENANT, req))
+                sched.submit(text, k=k, tenant=tenant) \
+                     .add_done_callback(done_q.put)
+                n_submitted += 1
+                while True:  # opportunistically drain while submitting
+                    try:
+                        yield done_q.get_nowait()
+                        n_yielded += 1
+                    except _queue.Empty:
+                        break
+            while n_yielded < n_submitted:
+                yield done_q.get()
+                n_yielded += 1
+        finally:
+            sched.close(drain=True)
+
+    async def aquery_stream(self, requests, k: int = 3, max_batch: int = 32,
+                            max_wait_ms: float = 5.0,
+                            key: Optional[jax.Array] = None):
+        """Async-generator twin of `query_stream` for asyncio servers.
+
+        The blocking waits happen on worker threads via
+        `asyncio.to_thread`, so the event loop stays free while the
+        background scheduler forms batches."""
+        import asyncio
+
+        it = self.query_stream(requests, k=k, max_batch=max_batch,
+                               max_wait_ms=max_wait_ms, key=key)
+        sentinel = object()
+        while True:
+            ticket = await asyncio.to_thread(next, it, sentinel)
+            if ticket is sentinel:
+                return
+            yield ticket
 
     # ------------------------------------------------------ corpus updates
     def add_docs(self, texts: Sequence[str]) -> np.ndarray:

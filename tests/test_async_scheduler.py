@@ -1,0 +1,302 @@
+"""AsyncBatchScheduler: dual-trigger flush, DRR fairness, error paths.
+
+The scheduler-unit tests use a pure-numpy echo backend and an injected
+fake clock, so deadline behaviour is tested deterministically with zero
+sleeps and no background thread (manual mode + `poll()`). Thread-mode
+tests use the real clock with generous timeouts; the stress test is
+marked slow.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving import AsyncBatchScheduler, SchedulerError
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, s):
+        self.t += s
+
+
+def value_search(texts, k):
+    """Row i gets ids [v*100 .. v*100+k-1] where v encodes the query."""
+    vals = np.array([int(t.rsplit("#", 1)[1]) for t in texts])
+    ids = vals[:, None] * 100 + np.arange(k)[None, :]
+    return ids, ids.astype(np.float32) / 100.0
+
+
+def make(max_batch=8, max_wait_ms=10.0, search=value_search, **kw):
+    clock = FakeClock()
+    sched = AsyncBatchScheduler(
+        search, max_batch=max_batch, max_wait_ms=max_wait_ms, clock=clock, **kw
+    )
+    return sched, clock
+
+
+# ----------------------------------------------------------- dual trigger
+def test_deadline_flush_fake_clock_no_blocking():
+    sched, clock = make(max_batch=8, max_wait_ms=10.0)
+    t = sched.submit("q#7", k=2)
+    assert sched.poll() == 0 and not t.done()  # not due yet
+    clock.advance(0.009)
+    assert sched.poll() == 0 and not t.done()  # 9ms < 10ms
+    clock.advance(0.002)
+    assert sched.poll() == 1  # 11ms >= 10ms: deadline trigger
+    assert t.done()  # served without anyone calling result()
+    ids, scores = t.result(timeout=0)
+    assert list(ids) == [700, 701]
+    assert t.wait_s == pytest.approx(0.011)
+    assert t.batch_size == 1 and t.flush_seq == 0
+
+
+def test_deadline_is_oldest_ticket_not_newest():
+    sched, clock = make(max_batch=8, max_wait_ms=10.0)
+    old = sched.submit("q#1", k=1)
+    clock.advance(0.008)
+    young = sched.submit("q#2", k=1)  # only 2ms old at the deadline
+    clock.advance(0.003)
+    assert sched.poll() == 2  # oldest crossed 10ms -> both flushed together
+    assert old.batch_size == 2 and young.batch_size == 2
+
+
+def test_max_batch_trigger_before_deadline():
+    sched, clock = make(max_batch=3, max_wait_ms=10_000.0)
+    tickets = [sched.submit(f"q#{i}", k=1) for i in range(7)]
+    assert sched.poll() == 6  # two full batches due; 7th waits for deadline
+    assert [t.done() for t in tickets] == [True] * 6 + [False]
+    assert sched.pending() == 1
+    clock.advance(10.1)
+    assert sched.poll() == 1 and tickets[-1].done()
+
+
+def test_no_deadline_when_max_wait_none():
+    sched, clock = make(max_batch=8, max_wait_ms=None)
+    t = sched.submit("q#0", k=1)
+    clock.advance(1e6)
+    assert sched.poll() == 0 and not t.done()  # only size/explicit triggers
+    assert sched.flush() == 1 and t.done()
+
+
+# ------------------------------------------------------------ DRR fairness
+def test_drr_bounds_starved_tenant_under_10to1_skew():
+    sched, _ = make(max_batch=8, max_wait_ms=None)
+    heavy = [sched.submit(f"h#{i}", k=1, tenant="heavy") for i in range(40)]
+    light = [sched.submit(f"l#{i}", k=1, tenant="light") for i in range(4)]
+    assert sched.flush() == 44
+    # DRR interleaves: every light ticket rides the FIRST flush even though
+    # 40 heavy tickets were queued ahead of it (FIFO would serve light in
+    # the last flush). flush_seq is the serving flush's index.
+    assert all(t.flush_seq == 0 for t in light)
+    assert max(t.flush_seq for t in heavy) == 5  # ceil(44/8) flushes total
+    # per-tenant FIFO order is preserved within the interleave
+    for ts in (heavy, light):
+        served_order = sorted(ts, key=lambda t: (t.flush_seq, list(t.doc_ids)))
+        assert [t.text for t in served_order] == [t.text for t in ts]
+
+
+def test_drr_rotation_does_not_starve_tenants_beyond_max_batch():
+    sched, _ = make(max_batch=4, max_wait_ms=None)
+    firsts = {}
+    for tenant in range(6):
+        for i in range(4):
+            t = sched.submit(f"q#{tenant * 10 + i}", k=1, tenant=f"t{tenant}")
+            firsts.setdefault(f"t{tenant}", t)
+    sched.flush()
+    # a fixed visit order would serve tenants 0-3 every flush and starve
+    # t4/t5; the rotating DRR pointer serves every tenant's head within
+    # the first two flushes.
+    first_flush = [firsts[f"t{i}"].flush_seq for i in range(6)]
+    assert first_flush == [0, 0, 0, 0, 1, 1]
+
+
+def test_quantum_batches_per_tenant():
+    sched, _ = make(max_batch=4, max_wait_ms=None, quantum=2)
+    a = [sched.submit(f"a#{i}", k=1, tenant="a") for i in range(4)]
+    b = [sched.submit(f"b#{i}", k=1, tenant="b") for i in range(4)]
+    sched.flush()
+    # quantum=2 -> chunks are [a,a,b,b]: both tenants appear in each flush
+    assert [t.flush_seq for t in a] == [0, 0, 1, 1]
+    assert [t.flush_seq for t in b] == [0, 0, 1, 1]
+
+
+# ------------------------------------------------------- mixed-k batching
+def test_mixed_k_single_batch_truncates_rows():
+    seen_k = []
+
+    def spy_search(texts, k):
+        seen_k.append(k)
+        return value_search(texts, k)
+
+    sched, _ = make(max_batch=8, search=spy_search)
+    t1 = sched.submit("q#1", k=1)
+    t5 = sched.submit("q#2", k=5)
+    assert sched.flush() == 2
+    assert seen_k == [5]  # ONE search at the chunk's max k
+    assert list(t1.result(timeout=0)[0]) == [100]
+    assert list(t5.result(timeout=0)[0]) == [200, 201, 202, 203, 204]
+
+
+# ----------------------------------------------------------- error paths
+def test_failing_search_raises_scheduler_error_and_fails_tickets():
+    def bad(texts, k):
+        raise RuntimeError("sense amp fault")
+
+    sched, _ = make(search=bad)
+    t = sched.submit("q#0", k=1)
+    with pytest.raises(SchedulerError, match="sense amp fault"):
+        sched.flush()
+    assert t.done()
+    with pytest.raises(SchedulerError, match="sense amp fault"):
+        t.result(timeout=0)
+    assert sched.n_failed == 1
+    assert sched.flush() == 0  # failed tickets are not retried
+
+
+def test_partial_flush_failure_still_serves_later_chunks():
+    calls = [0]
+
+    def flaky(texts, k):
+        calls[0] += 1
+        if calls[0] == 1:
+            raise RuntimeError("transient fault")
+        return value_search(texts, k)
+
+    sched, _ = make(max_batch=2, search=flaky)
+    first = [sched.submit(f"q#{i}", k=1) for i in range(2)]
+    later = sched.submit("q#9", k=1)
+    # later's result() must keep flushing past the failed first chunk and
+    # return ITS chunk's outcome, not a generic "not served" error
+    assert list(later.result(timeout=0)[0]) == [900]
+    for t in first:
+        with pytest.raises(SchedulerError, match="transient fault"):
+            t.result(timeout=0)
+    assert sched.n_failed == 2 and sched.n_served == 1
+
+
+def test_empty_and_double_flush_are_noops():
+    sched, _ = make()
+    assert sched.flush() == 0
+    sched.submit("q#0", k=1)
+    assert sched.flush() == 1
+    assert sched.flush() == 0
+    assert sched.poll() == 0
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        AsyncBatchScheduler(value_search, max_batch=0)
+    with pytest.raises(ValueError):
+        AsyncBatchScheduler(value_search, max_wait_ms=-1.0)
+    with pytest.raises(ValueError):
+        AsyncBatchScheduler(value_search, quantum=0)
+
+
+# --------------------------------------------------- callbacks and close
+def test_done_callback_fires_on_serve_and_immediately_if_done():
+    sched, _ = make()
+    got = []
+    t = sched.submit("q#3", k=1)
+    t.add_done_callback(lambda tk: got.append(("pre", tk.doc_ids[0])))
+    sched.flush()
+    t.add_done_callback(lambda tk: got.append(("post", tk.doc_ids[0])))
+    assert got == [("pre", 300), ("post", 300)]
+
+
+def test_close_drains_manual_mode():
+    sched, _ = make(max_batch=100, max_wait_ms=None)
+    tickets = [sched.submit(f"q#{i}", k=1) for i in range(5)]
+    sched.close(drain=True)
+    assert all(t.done() for t in tickets)
+    assert sched.n_served == 5
+    with pytest.raises(SchedulerError):
+        sched.submit("q#9", k=1)
+    sched.close()  # idempotent
+
+
+def test_close_without_drain_fails_pending():
+    sched, _ = make(max_batch=100, max_wait_ms=None)
+    t = sched.submit("q#0", k=1)
+    sched.close(drain=False)
+    with pytest.raises(SchedulerError, match="closed"):
+        t.result(timeout=0)
+    assert sched.n_failed == 1
+
+
+# ------------------------------------------------------ background thread
+def test_thread_deadline_flush_without_any_caller_blocking():
+    done_evt = threading.Event()
+    sched = AsyncBatchScheduler(
+        value_search, max_batch=64, max_wait_ms=15.0, start=True
+    )
+    try:
+        t = sched.submit("q#5", k=2)
+        t.add_done_callback(lambda tk: done_evt.set())
+        # nobody calls result(); the flush loop's deadline must fire
+        assert done_evt.wait(5.0), "deadline flush never fired"
+        assert list(t.doc_ids) == [500, 501]
+        assert t.wait_s >= 0.015 * 0.5  # served around the deadline, not at 0
+    finally:
+        sched.close()
+
+
+def test_thread_max_batch_flush_and_result_timeout():
+    sched = AsyncBatchScheduler(value_search, max_batch=2, max_wait_ms=None, start=True)
+    try:
+        lone = sched.submit("q#1", k=1)
+        with pytest.raises(TimeoutError):
+            lone.result(timeout=0.05)  # no deadline, batch not full
+        other = sched.submit("q#2", k=1)
+        assert list(lone.result(timeout=5.0)[0]) == [100]
+        assert list(other.result(timeout=5.0)[0]) == [200]
+        assert lone.batch_size == 2
+    finally:
+        sched.close()
+
+
+def test_thread_close_drains_pending():
+    sched = AsyncBatchScheduler(
+        value_search, max_batch=100, max_wait_ms=10_000.0, start=True
+    )
+    tickets = [sched.submit(f"q#{i}", k=1) for i in range(7)]
+    sched.close(drain=True)
+    assert all(t.done() for t in tickets)
+    assert [t.doc_ids[0] for t in tickets] == [i * 100 for i in range(7)]
+
+
+@pytest.mark.slow
+def test_thread_stress_many_producers_all_rows_correct():
+    sched = AsyncBatchScheduler(value_search, max_batch=16, max_wait_ms=2.0, start=True)
+    per_thread = 50
+    results = [None] * (8 * per_thread)
+
+    def producer(base):
+        tickets = [
+            sched.submit(f"q#{base + i}", k=3, tenant=f"user{base % 3}")
+            for i in range(per_thread)
+        ]
+        for i, t in enumerate(tickets):
+            results[base + i] = t.result(timeout=30.0)
+
+    threads = [
+        threading.Thread(target=producer, args=(n * per_thread,))
+        for n in range(8)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(60.0)
+    sched.close()
+    for v, (ids, scores) in enumerate(results):
+        assert list(ids) == [v * 100, v * 100 + 1, v * 100 + 2]
+    assert sched.n_served == 8 * per_thread
+    hist = sched.batch_size_hist()
+    assert sum(size * n for size, n in hist.items()) == 8 * per_thread
+    assert max(hist) > 1  # traffic actually batched, not all b=1 flushes

@@ -1,9 +1,19 @@
-"""BatchScheduler + RagPipeline batched serving and incremental updates."""
+"""Batch scheduling + RagPipeline batched serving and incremental updates.
+
+`pipe.scheduler()` without max_wait_ms keeps the PR 1 pull-based
+behaviour (manual AsyncBatchScheduler); the streaming/deadline paths are
+covered here end-to-end through the pipeline and in depth (fake clock,
+DRR, error paths) in test_async_scheduler.py.
+"""
+import asyncio
+import time
+
 import numpy as np
 import pytest
 
 from repro.core.retrieval import RetrievalConfig
-from repro.serving import BatchScheduler, HashEmbedder, RagPipeline
+from repro.serving import (AsyncBatchScheduler, BatchScheduler, HashEmbedder,
+                           RagPipeline, SchedulerError)
 
 CORPUS = [f"document number {i} talks about topic {i % 7}" for i in range(40)]
 CORPUS[3] = "the sigma-d checksum detects reram sensing errors"
@@ -88,3 +98,77 @@ def test_monolithic_pipeline_rejects_updates():
 def test_scheduler_rejects_bad_batch():
     with pytest.raises(ValueError):
         BatchScheduler(lambda texts, k: (None, None), max_batch=0)
+
+
+def test_batch_scheduler_is_deprecated_async_shim():
+    def search(texts, k):
+        n = len(texts)
+        ids = np.tile(np.arange(k), (n, 1))
+        return ids, ids.astype(np.float32)
+
+    with pytest.warns(DeprecationWarning, match="AsyncBatchScheduler"):
+        sched = BatchScheduler(search, max_batch=4)
+    assert isinstance(sched, AsyncBatchScheduler)
+    t = sched.submit("q", k=2)
+    assert list(t.result()[0]) == [0, 1]  # result() still pull-flushes
+
+
+def test_failing_search_raises_scheduler_error_not_assert(pipe):
+    def bad(texts, k):
+        raise RuntimeError("sense amp fault")
+
+    sched = AsyncBatchScheduler(bad, max_batch=4)
+    t = sched.submit("q", k=1)
+    with pytest.raises(SchedulerError, match="sense amp fault"):
+        t.result()
+
+
+def test_empty_and_double_flush_are_noops(pipe):
+    sched = pipe.scheduler(max_batch=4)
+    assert sched.flush() == 0
+    sched.submit("topic 1 document", k=1)
+    assert sched.flush() == 1
+    assert sched.flush() == 0  # drained queue: defined no-op
+
+
+# ------------------------------------------------- async streaming paths
+def test_pipeline_deadline_flush_serves_without_blocking(pipe):
+    queries = [f"topic {i} document" for i in range(5)]
+    sched = pipe.scheduler(max_batch=16, max_wait_ms=10.0)  # starts thread
+    try:
+        tickets = [sched.submit(q, k=2, tenant=f"u{i % 2}")
+                   for i, q in enumerate(queries)]
+        deadline = time.time() + 30.0
+        while not all(t.done() for t in tickets) and time.time() < deadline:
+            time.sleep(0.005)  # nobody calls result(); deadline must fire
+        assert all(t.done() for t in tickets)
+    finally:
+        sched.close()
+    ids_direct, _ = pipe.search_batch(queries, k=2)
+    for row, t in enumerate(tickets):
+        assert np.array_equal(t.doc_ids, ids_direct[row])
+
+
+def test_query_stream_matches_search_batch(pipe):
+    reqs = [("u1", "topic 1 document"), ("u2", "topic 2 document"),
+            ("u1", "sigma-d checksum errors")]
+    got = {t.text: t for t in pipe.query_stream(reqs, k=2, max_wait_ms=5.0)}
+    assert {t.tenant for t in got.values()} == {"u1", "u2"}
+    ids_direct, _ = pipe.search_batch([text for _, text in reqs], k=2)
+    for (_, text), row in zip(reqs, ids_direct):
+        assert np.array_equal(got[text].doc_ids, row)
+        assert got[text].wait_s is not None
+
+
+def test_aquery_stream_async_iteration(pipe):
+    queries = ["topic 3 document", "topic 4 document"]
+
+    async def drive():
+        out = []
+        async for t in pipe.aquery_stream(queries, k=1, max_wait_ms=3.0):
+            out.append(t)
+        return out
+
+    out = asyncio.run(drive())
+    assert sorted(t.text for t in out) == sorted(queries)
+    assert all(t.done() and len(t.doc_ids) == 1 for t in out)

@@ -1,5 +1,4 @@
 """Cross-cutting hypothesis property tests on system invariants."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

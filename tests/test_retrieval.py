@@ -1,5 +1,4 @@
 """End-to-end DircRagIndex behaviour: the paper's system-level claims."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,4 @@
 """Training-driver integration: learning, preemption resume, determinism."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
