@@ -7,6 +7,7 @@
   bench_kernels    -> kernel micro-benchmarks
   bench_sharded    -> multi-macro sharded retrieval throughput
   bench_async_serving -> open-loop streaming latency vs flush deadline
+  bench_continuous_batching -> decode throughput vs per-query generation
   roofline_report  -> dry-run roofline tables (EXPERIMENTS.md source)
 
 Run: PYTHONPATH=src python -m benchmarks.run
@@ -15,9 +16,10 @@ from __future__ import annotations
 
 import time
 
-from . import (bench_async_serving, bench_error_opt, bench_kernels,
-               bench_latency, bench_precision, bench_sharded,
-               bench_simulator, roofline_report)
+from . import (bench_async_serving, bench_continuous_batching,
+               bench_error_opt, bench_kernels, bench_latency,
+               bench_precision, bench_sharded, bench_simulator,
+               roofline_report)
 
 SECTIONS = [
     ("Table I — DIRC-RAG spec (calibrated model)", bench_simulator),
@@ -27,6 +29,7 @@ SECTIONS = [
     ("Kernel micro-benchmarks", bench_kernels),
     ("Sharded multi-macro throughput", bench_sharded),
     ("Async open-loop serving latency", bench_async_serving),
+    ("Continuous-batching decode throughput", bench_continuous_batching),
     ("Roofline (from multi-pod dry-run)", roofline_report),
 ]
 

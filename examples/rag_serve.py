@@ -11,12 +11,24 @@ traffic while nobody blocks. Each `submit(..., tenant=...)` lands in a
 per-tenant queue drained deficit-round-robin, so one chatty tenant
 cannot starve others; `pipe.query_stream` wraps the same machinery as a
 results-as-they-complete generator (and `aquery_stream` for asyncio).
-For an offered-load sweep (Poisson arrivals, p50/p95/p99 latency,
-batch-size histogram) run the open-loop bench:
+
+Generation rides the same front door (PR 3): `pipe.query_stream(...,
+generate=True)` submits each completed retrieval's augmented prompt into
+a `ContinuousBatchingEngine` decode slot — sequences join and leave the
+`n_slots`-wide decode batch at token boundaries (Orca/vLLM-style
+continuous batching), so short answers never wait for long ones and the
+batch stays full under streaming traffic. Tickets are futures with
+`result()`, `done()`, `add_done_callback()` and a `token_stream()`
+iterator for live per-token output; `pipe.generate_stream` is the
+retrieval-free variant and `pipe.decode_engine()` hands out the engine
+directly. For offered-load sweeps run the open-loop benches:
 
   PYTHONPATH=src python -m repro.launch.serve --rag --open-loop \
       --offered-qps 500 --n-tenants 4 --skew 10 --max-wait-ms 5
+  PYTHONPATH=src python -m repro.launch.serve --rag --open-loop \
+      --generate --offered-qps 20 --rag-queries 32 --new-tokens 16
   PYTHONPATH=src python -m benchmarks.bench_async_serving
+  PYTHONPATH=src python -m benchmarks.bench_continuous_batching
 
 Run: PYTHONPATH=src python examples/rag_serve.py
 """
@@ -116,6 +128,26 @@ def main() -> None:
     for t in pipe.query_stream([("alice", q) for q in queries], k=1,
                                max_wait_ms=5.0):
         print(f"   {t.tenant}: [{t.doc_ids[0]:3d}] <- {t.text[:50]}")
+
+    print("\n== continuous batching: retrieval chained into decode slots ==")
+    # generate=True: each completed retrieval's augmented prompt joins the
+    # n_slots-wide decode batch at the next token boundary; answers stream
+    # back in completion order with TTFT/e2e stamps per ticket
+    for t in pipe.query_stream(queries, k=2, max_wait_ms=5.0, generate=True,
+                               max_new_tokens=8, n_slots=2):
+        print(f"   slot {t.slot}: {len(t.tokens)} tokens in "
+              f"{t.wait_s * 1e3:.0f} ms (TTFT {t.first_token_s * 1e3:.0f} ms)"
+              f" <- {t.text[:40]}")
+
+    print("\n== token_stream: live per-token consumption ==")
+    engine = pipe.decode_engine(n_slots=2, max_new_tokens=8, start=True)
+    try:
+        prompt = pipe.encode_prompt(queries[0], [CORPUS[0]])
+        ticket = engine.submit(prompt, max_new_tokens=8)
+        toks = [tok for tok in ticket.token_stream(timeout=60.0)]
+        print(f"   streamed {len(toks)} tokens one at a time: {toks}")
+    finally:
+        engine.close()
 
 
 if __name__ == "__main__":

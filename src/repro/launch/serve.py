@@ -11,6 +11,11 @@ tenants (one optionally --skew times chattier) submitted to the
 AsyncBatchScheduler's background flush loop, reporting p50/p95/p99
 latency and the achieved batch-size histogram.
 
+Adding --generate to --open-loop chains every completed retrieval into a
+ContinuousBatchingEngine decode slot (requests join/leave the decode
+batch at token boundaries), reporting end-to-end + time-to-first-token +
+per-token latency and decode slot occupancy.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
       --batch 4 --prompt-len 16 --new-tokens 32
@@ -18,6 +23,8 @@ Usage:
       --rag-docs 1024 --batch 16 --rag-queries 64
   PYTHONPATH=src python -m repro.launch.serve --rag --open-loop \
       --offered-qps 500 --n-tenants 4 --skew 10 --max-wait-ms 5
+  PYTHONPATH=src python -m repro.launch.serve --rag --open-loop --generate \
+      --offered-qps 20 --rag-queries 32 --new-tokens 16 --n-slots 4
 """
 from __future__ import annotations
 
@@ -93,17 +100,72 @@ def _percentiles_ms(wait_s) -> dict:
 
 
 def build_rag_pipeline(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
-                       path: str = "int_exact", seed: int = 0) -> RagPipeline:
-    """A ShardedDircIndex-backed pipeline over a synthetic corpus."""
+                       path: str = "int_exact", seed: int = 0,
+                       arch: Optional[str] = None,
+                       max_prompt_len: int = 96) -> RagPipeline:
+    """A ShardedDircIndex-backed pipeline over a synthetic corpus.
+
+    Passing `arch` attaches a smoke-size generator model, enabling the
+    generation paths (`query_stream(generate=True)`, `decode_engine`)."""
     rng = np.random.default_rng(seed)
     corpus = [f"document {i}: " + " ".join(
         f"w{rng.integers(0, 997)}" for _ in range(12)) for i in range(n_docs)]
+    model = params = None
+    if arch is not None:
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(seed))
     return RagPipeline(
         corpus,
         RetrievalConfig(bits=8, metric="cosine", path=path),
+        model=model, params=params,
         dim=dim, embedder=HashEmbedder(dim=dim),
+        max_prompt_len=max_prompt_len,
         n_shards=n_shards,
     )
+
+
+def _padded_search(pipe: RagPipeline, max_batch: int):
+    """Pad retrieval batches to one static (max_batch, dim) XLA program."""
+
+    def padded(texts, kk):
+        pad = max_batch - len(texts)
+        ids, scores = pipe.search_batch(list(texts) + [texts[0]] * pad, kk)
+        return ids[: len(texts)], scores[: len(texts)]
+
+    return padded
+
+
+def _poisson_arrivals(pipe: RagPipeline, n_tenants: int, skew: float,
+                      offered_qps: float, n_queries: int, seed: int):
+    """Sampled corpus queries, per-arrival tenant ids, and Poisson gaps.
+
+    One aggregate Poisson process at `offered_qps` (exponential
+    inter-arrival gaps); each arrival lands on one of `n_tenants`
+    tenants, tenant 0 receiving `skew`x the probability mass of each
+    other tenant."""
+    n_docs = len(pipe.doc_texts)
+    rng = np.random.default_rng(seed + 1)
+    queries = [pipe.doc_texts[rng.integers(0, n_docs)]
+               for _ in range(n_queries)]
+    weights = np.array([skew] + [1.0] * max(n_tenants - 1, 0), np.float64)
+    weights /= weights.sum()
+    tenants = rng.choice(n_tenants, size=n_queries, p=weights)
+    gaps = rng.exponential(1.0 / offered_qps, size=n_queries)
+    return queries, tenants, gaps
+
+
+def _pace_arrivals(gaps, submit) -> float:
+    """Open-loop pacing: sleep to each arrival, call submit(i); returns t0."""
+    t0 = time.perf_counter()
+    next_arrival = t0
+    for i, gap in enumerate(gaps):
+        next_arrival += gap
+        delay = next_arrival - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        submit(i)
+    return t0
 
 
 def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
@@ -128,32 +190,20 @@ def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
                                   path=path, seed=seed)
-    n_docs = len(pipe.doc_texts)
-    rng = np.random.default_rng(seed + 1)
-    queries = [pipe.doc_texts[rng.integers(0, n_docs)] for _ in range(n_queries)]
-    weights = np.array([skew] + [1.0] * max(n_tenants - 1, 0), np.float64)
-    weights /= weights.sum()
-    arrival_tenant = rng.choice(n_tenants, size=n_queries, p=weights)
-    gaps = rng.exponential(1.0 / offered_qps, size=n_queries)
+    queries, arrival_tenant, gaps = _poisson_arrivals(
+        pipe, n_tenants, skew, offered_qps, n_queries, seed)
 
-    def padded_search(texts, kk):
-        pad = max_batch - len(texts)
-        ids, scores = pipe.search_batch(list(texts) + [texts[0]] * pad, kk)
-        return ids[: len(texts)], scores[: len(texts)]
-
+    padded_search = _padded_search(pipe, max_batch)
     padded_search([queries[0]], k)  # compile the serving shape off-clock
     sched = AsyncBatchScheduler(padded_search, max_batch=max_batch,
                                 max_wait_ms=max_wait_ms, start=True)
     tickets = []
-    t0 = time.perf_counter()
-    next_arrival = t0
-    for gap, tenant in zip(gaps, arrival_tenant):
-        next_arrival += gap
-        delay = next_arrival - time.perf_counter()
-        if delay > 0:
-            time.sleep(delay)
+
+    def submit(i):
         tickets.append(sched.submit(
-            queries[len(tickets)], k=k, tenant=f"tenant{tenant}"))
+            queries[i], k=k, tenant=f"tenant{arrival_tenant[i]}"))
+
+    t0 = _pace_arrivals(gaps, submit)
     sched.close(drain=True)
     wall = time.perf_counter() - t0
 
@@ -188,6 +238,127 @@ def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
     return out
 
 
+def serve_rag_open_loop_generate(
+        n_docs: int = 512, n_shards: int = 4, dim: int = 256,
+        max_batch: int = 16, max_wait_ms: float = 5.0,
+        n_tenants: int = 4, skew: float = 1.0,
+        offered_qps: float = 50.0, n_queries: int = 32,
+        k: int = 3, max_new_tokens: int = 16, n_slots: int = 4,
+        arch: str = "phi4-mini-3.8b", path: str = "int_exact",
+        seed: int = 0, pipe: Optional[RagPipeline] = None) -> dict:
+    """Open-loop retrieval+generation through the shared streaming front door.
+
+    Poisson arrivals are submitted to the async retrieval scheduler; each
+    completed retrieval's augmented prompt goes straight into a
+    `ContinuousBatchingEngine` decode slot (the `query_stream(generate=
+    True)` wiring, instrumented). Nobody blocks anywhere: retrieval
+    batches form on the dual trigger and sequences join/leave the decode
+    batch at token boundaries. Reports end-to-end (arrival -> last token)
+    p50/p95/p99, time-to-first-token, per-token decode latency, decode
+    throughput, and slot occupancy.
+    """
+    if pipe is None:
+        pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
+                                  path=path, seed=seed, arch=arch)
+    if pipe.engine is None:
+        raise ValueError("generate mode needs a pipeline with a model "
+                         "(build_rag_pipeline(arch=...))")
+    queries, arrival_tenant, gaps = _poisson_arrivals(
+        pipe, n_tenants, skew, offered_qps, n_queries, seed)
+
+    padded_search = _padded_search(pipe, max_batch)
+    sched = AsyncBatchScheduler(padded_search, max_batch=max_batch,
+                                max_wait_ms=max_wait_ms, start=True)
+    engine = pipe.decode_engine(n_slots=n_slots,
+                                max_new_tokens=max_new_tokens, start=True)
+
+    # compile every serving shape off-clock: the (max_batch, dim) search,
+    # the (len<=max_prompt_len,) prefill, and the (n_slots, 1) decode step
+    ids_w, _ = padded_search([queries[0]], k)
+    warm_prompt = pipe.encode_prompt(
+        queries[0], [pipe.doc_texts[i] for i in ids_w[0] if i >= 0])
+    engine.submit(warm_prompt, max_new_tokens=max_new_tokens).result(
+        timeout=120.0)
+    warm_stats = engine.stats()  # exclude warm-up from occupancy reporting
+
+    gens: list = []
+    n_chain_failed = [0]
+
+    def on_retrieved(rt):
+        try:
+            texts_k = [pipe.doc_texts[i] for i in rt.doc_ids if i >= 0]
+            gt = engine.submit(pipe.encode_prompt(rt.text, texts_k),
+                               max_new_tokens=max_new_tokens, tenant=rt.tenant)
+            gt.retrieval = rt
+            gens.append(gt)
+        except Exception:  # noqa: BLE001 - failed retrieval or closed engine
+            n_chain_failed[0] += 1  # count it instead of vanishing silently
+
+    def submit(i):
+        sched.submit(queries[i], k=k,
+                     tenant=f"tenant{arrival_tenant[i]}") \
+             .add_done_callback(on_retrieved)
+
+    t0 = _pace_arrivals(gaps, submit)
+    sched.close(drain=True)
+    engine.close(drain=True)
+    wall = time.perf_counter() - t0
+
+    # _finish stamps wait_s even on error tickets: require a clean finish
+    # with a first token, or the TTFT/e2e math below would see Nones
+    done = [g for g in gens
+            if g.done() and g._error is None and g.first_token_s is not None]
+    if not done:
+        raise SchedulerError(
+            f"open-loop generate run finished 0/{n_queries} requests")
+    # end-to-end: retrieval submit (arrival) -> last generated token, on
+    # the shared monotonic clock the scheduler and engine both stamp
+    e2e_s = [(g.submit_time + g.wait_s) - g.retrieval.submit_time
+             for g in done]
+    ttft_s = [(g.submit_time + g.first_token_s) - g.retrieval.submit_time
+              for g in done]
+    per_tok_ms = [1e3 * (g.wait_s - g.first_token_s) / (len(g.tokens) - 1)
+                  for g in done if len(g.tokens) > 1]
+    # occupancy/step counters as deltas past the warm-up request
+    est = engine.stats()
+    occ_hist = {
+        occ: n for occ in est["occupancy_hist"]
+        if (n := est["occupancy_hist"][occ]
+            - warm_stats["occupancy_hist"].get(occ, 0)) > 0
+    }
+    n_steps = est["n_decode_steps"] - warm_stats["n_decode_steps"]
+    mean_occ = (sum(occ * n for occ, n in occ_hist.items()) / n_steps
+                if n_steps else 0.0)
+    n_tokens = sum(len(g.tokens) for g in done)
+    out = {
+        "offered_qps": offered_qps,
+        "achieved_qps": len(done) / wall,
+        "n_queries": n_queries,
+        "n_finished": len(done),
+        "n_failed": n_queries - len(done),
+        "n_chain_failed": n_chain_failed[0],
+        "n_tenants": n_tenants,
+        "skew": skew,
+        "max_batch": max_batch,
+        "max_wait_ms": max_wait_ms,
+        "max_new_tokens": max_new_tokens,
+        "n_slots": n_slots,
+        "n_tokens": n_tokens,
+        "decode_tok_per_s": n_tokens / wall,
+        "mean_retrieval_batch": sched.stats()["mean_batch"],
+        "n_decode_steps": n_steps,
+        "mean_slot_occupancy": mean_occ,
+        "occupancy_hist": occ_hist,
+        "ttft_p50_ms": float(np.percentile(np.asarray(ttft_s) * 1e3, 50)),
+        "ttft_p95_ms": float(np.percentile(np.asarray(ttft_s) * 1e3, 95)),
+        "per_token_ms_mean": float(np.mean(per_tok_ms)) if per_tok_ms else 0.0,
+        "per_token_ms_p95": float(np.percentile(per_tok_ms, 95))
+        if per_tok_ms else 0.0,
+    }
+    out.update(_percentiles_ms(e2e_s))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch")
@@ -210,7 +381,34 @@ def main() -> None:
     ap.add_argument("--skew", type=float, default=1.0,
                     help="tenant 0 arrival-rate multiple vs the others")
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
+    ap.add_argument("--generate", action="store_true",
+                    help="--rag --open-loop: chain completed retrievals "
+                         "into continuous-batching generation and report "
+                         "end-to-end/per-token latency + slot occupancy")
+    ap.add_argument("--n-slots", type=int, default=4,
+                    help="--generate: continuous-batching decode slots")
     args = ap.parse_args()
+    if args.rag and args.open_loop and args.generate:
+        out = serve_rag_open_loop_generate(
+            n_docs=args.rag_docs, n_shards=args.n_shards,
+            max_batch=args.batch, max_wait_ms=args.max_wait_ms,
+            n_tenants=args.n_tenants, skew=args.skew,
+            offered_qps=args.offered_qps, n_queries=args.rag_queries,
+            k=args.k, max_new_tokens=args.new_tokens,
+            n_slots=args.n_slots, arch=args.arch or "phi4-mini-3.8b")
+        print(f"open-loop generate: offered {out['offered_qps']:.0f} q/s, "
+              f"finished {out['n_finished']}/{out['n_queries']} requests "
+              f"({out['achieved_qps']:.1f} q/s end-to-end)")
+        print(f"e2e ms: p50 {out['p50_ms']:.1f}  p95 {out['p95_ms']:.1f}  "
+              f"p99 {out['p99_ms']:.1f}   TTFT p50 {out['ttft_p50_ms']:.1f} "
+              f"p95 {out['ttft_p95_ms']:.1f}")
+        print(f"decode: {out['decode_tok_per_s']:.0f} tok/s, per-token "
+              f"{out['per_token_ms_mean']:.2f} ms mean / "
+              f"{out['per_token_ms_p95']:.2f} ms p95")
+        print(f"slots: mean occupancy {out['mean_slot_occupancy']:.2f}"
+              f"/{out['n_slots']}, hist {out['occupancy_hist']}, "
+              f"retrieval mean batch {out['mean_retrieval_batch']:.1f}")
+        return
     if args.rag and args.open_loop:
         out = serve_rag_open_loop(
             n_docs=args.rag_docs, n_shards=args.n_shards,

@@ -1,8 +1,13 @@
-"""repro.serving — generation engine, async batch scheduler, end-to-end RAG."""
+"""repro.serving — generation engines (static + continuous batching),
+async batch scheduler, end-to-end RAG."""
 from .async_scheduler import (  # noqa: F401
     AsyncBatchScheduler,
     AsyncTicket,
     SchedulerError,
+)
+from .continuous_batching import (  # noqa: F401
+    ContinuousBatchingEngine,
+    GenerationTicket,
 )
 from .engine import BatchScheduler, BatchTicket, GenerationEngine  # noqa: F401
 from .rag_pipeline import HashEmbedder, RagPipeline, RagResult  # noqa: F401

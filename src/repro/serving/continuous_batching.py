@@ -1,0 +1,569 @@
+"""Continuous-batching decode engine: iteration-level scheduling for generation.
+
+PR 2 put *retrieval* behind the streaming front door (`AsyncBatchScheduler`)
+but generation still ran one prompt at a time inside `RagPipeline.query_many`,
+so the answer stage threw away every batch the front door formed. This module
+closes that gap with Orca-style continuous batching (the scheduling model
+vLLM adopted): requests join and leave the decode batch at TOKEN boundaries
+instead of waiting for the slowest sequence in a static batch.
+
+`ContinuousBatchingEngine` holds a fixed decode batch of `n_slots` sequences
+over ONE jitted `decode_step` program — the static `(n_slots, 1)` token and
+`(L, n_slots, cache_len, ...)` cache shapes compile exactly once, the
+query-stationary discipline the retrieval path already uses. Between decode
+steps the engine:
+
+* **admits** waiting requests into free slots: the prompt is prefilled at its
+  natural length (b=1, the right-aligned degenerate case) and its KV cache /
+  SSM state is written into the slot's region of the batched cache
+  (`dynamic_update_slice` along the auto-detected batch axis of every cache
+  leaf, so dense/MoE `DecodeCaches` and Mamba state trees both work);
+* **decodes** one token for every occupied slot in a single batched step;
+* **retires** slots whose sequence emitted `eos_id` or reached its own
+  `max_new_tokens`, freeing the slot for the next waiting request — mixed
+  lengths never stall the batch.
+
+Tickets mirror the `AsyncBatchScheduler` futures API (`result(timeout)`,
+`done()`, `add_done_callback`) and add `token_stream()`: a blocking iterator
+over tokens as they are emitted, for incremental client streaming.
+
+Like the scheduler, the engine runs in two modes: `start=True` spawns a
+background decode loop (submit never blocks; tokens appear as the loop
+turns), while manual mode exposes `step()` — admit + one decode step — so
+tests drive admission/retirement deterministically on a fake clock with zero
+sleeps and zero threads.
+
+Greedy decoding is row-independent in every model here (attention, SSM scan
+and dense MLPs act per batch row), so for fixed prompts the emitted tokens
+are token-for-token identical to per-query `GenerationEngine.generate` —
+property-tested in tests/test_continuous_batching.py, including staggered
+admission and mixed per-request `max_new_tokens`. Temperature sampling draws
+one key per decode step shared across rows (like `GenerationEngine`), so
+sampled outputs depend on slot placement; use greedy when reproducibility
+across admission orders matters.
+"""
+
+from __future__ import annotations
+
+import queue as _queue
+import threading
+import time
+from collections import deque
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .async_scheduler import DEFAULT_TENANT, SchedulerError
+
+_DONE = object()  # token_stream sentinel
+
+
+class GenerationTicket:
+    """Future-style handle for one generation request.
+
+    Filled in by the engine as decoding progresses: `tokens` grows one id
+    per emitted token, `first_token_s` is the submit->first-token latency
+    (TTFT) and `wait_s` the submit->finish latency, both on the engine's
+    clock. `slot` is the decode slot the request occupied.
+    """
+
+    def __init__(self, engine: "ContinuousBatchingEngine", prompt: np.ndarray,
+                 max_new_tokens: int, tenant: str):
+        self._engine = engine
+        self.prompt = prompt
+        self.max_new_tokens = max_new_tokens
+        self.tenant = tenant
+        self.submit_time = engine._clock()
+        self.first_token_s: Optional[float] = None
+        self.wait_s: Optional[float] = None
+        self.slot: Optional[int] = None
+        self.tokens: list[int] = []
+        self._token_q: _queue.SimpleQueue = _queue.SimpleQueue()
+        self._event = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._callbacks: list = []
+
+    def done(self) -> bool:
+        """True once finished or failed (result() will not block)."""
+        return self._event.is_set()
+
+    def add_done_callback(self, fn: Callable[["GenerationTicket"], None]) -> None:
+        """Run `fn(ticket)` when done; immediately if already done."""
+        run_now = False
+        with self._engine._cv:
+            if self._event.is_set():
+                run_now = True
+            else:
+                self._callbacks.append(fn)
+        if run_now:
+            fn(self)
+
+    def token_stream(self, timeout: Optional[float] = None):
+        """Yield token ids incrementally as the engine emits them.
+
+        Ends when the sequence retires (EOS or max_new_tokens); re-raises
+        the engine error if the request failed. Single consumer: tokens
+        are handed over exactly once. In manual mode (no background
+        thread) each `get` first drives `engine.step()` so the stream
+        makes progress without an external driver.
+        """
+        while True:
+            if not self._engine._has_thread():
+                while self._token_q.empty() and not self._event.is_set():
+                    if self._engine.step() == 0 and not self._event.is_set():
+                        raise SchedulerError(
+                            "engine made no progress for this ticket")
+            try:
+                item = self._token_q.get(timeout=timeout)
+            except _queue.Empty:
+                raise TimeoutError(
+                    f"no token within {timeout}s "
+                    f"(tenant={self.tenant!r}, emitted={len(self.tokens)})"
+                ) from None
+            if item is _DONE:
+                if self._error is not None:
+                    raise self._error
+                return
+            yield item
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """All generated token ids as an int32 vector; blocks until done.
+
+        In manual mode (no background thread) an unfinished ticket drives
+        `engine.step()` itself, mirroring `AsyncTicket.result`'s pull-based
+        flush. Raises `SchedulerError` if the request failed,
+        `TimeoutError` on timeout.
+        """
+        while not self._event.is_set() and not self._engine._has_thread():
+            if self._engine.step() == 0 and not self._event.is_set():
+                raise SchedulerError("engine made no progress for this ticket")
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"generation not finished within {timeout}s "
+                f"(tenant={self.tenant!r}, emitted={len(self.tokens)})"
+            )
+        if self._error is not None:
+            raise self._error
+        return np.asarray(self.tokens, np.int32)
+
+    # -- internal: called by the engine ---------------------------------
+    def _emit(self, tok: int) -> None:
+        if self.first_token_s is None:
+            self.first_token_s = self._engine._clock() - self.submit_time
+        self.tokens.append(tok)
+        self._token_q.put(tok)
+
+    def _finish(self, error: Optional[BaseException] = None) -> None:
+        # set + swap under the engine lock so a concurrent
+        # add_done_callback either sees done() and runs immediately or
+        # lands in the list we are about to drain — never in between.
+        with self._engine._cv:
+            self._error = error
+            self.wait_s = self._engine._clock() - self.submit_time
+            self._event.set()
+            callbacks, self._callbacks = self._callbacks, []
+        self._token_q.put(_DONE)
+        for fn in callbacks:
+            try:
+                fn(self)
+            except Exception:  # noqa: BLE001 - callbacks must not kill the loop
+                pass
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous-batching decode over one jitted decode_step.
+
+    model/params: any Model-protocol object (prefill optional; SSM models
+        are prefilled by streaming the prompt through decode_step at b=1).
+    n_slots: decode batch width — the number of sequences in flight.
+    cache_len: per-slot KV-cache / state capacity. A request needs
+        `len(prompt) + max_new_tokens <= cache_len`; submit() rejects
+        longer ones with SchedulerError.
+    eos_id: retire a slot when it emits this id (None: length-only).
+    temperature: 0 == greedy (argmax, reproducible); > 0 samples with one
+        key per decode step shared across slots.
+    clock: monotonic-seconds callable, injectable for deterministic tests.
+    start: spawn the background decode loop. With start=False the engine
+        is in *manual mode*: call `step()` yourself (or let
+        `ticket.result()` / `token_stream()` drive it).
+
+    Prefill compiles once per distinct prompt length (b=1 shapes); the
+    batched decode step compiles exactly once. Keep prompt lengths
+    bucketed upstream if compile churn matters.
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        n_slots: int = 4,
+        cache_len: int = 256,
+        eos_id: Optional[int] = None,
+        temperature: float = 0.0,
+        key: Optional[jax.Array] = None,
+        clock: Callable[[], float] = time.monotonic,
+        start: bool = False,
+    ):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if cache_len < 2:
+            raise ValueError("cache_len must be >= 2")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self._key = key if key is not None else jax.random.key(0)
+        self._clock = clock
+        self._decode = jax.jit(
+            lambda p, caches, tok: model.decode_step(p, caches, tok))
+        if hasattr(model, "prefill"):
+            self._prefill = jax.jit(
+                lambda p, toks: model.prefill(p, tokens=toks,
+                                              cache_len=cache_len))
+        else:
+            self._prefill = None
+        self._batch_axes = self._detect_batch_axes()
+        self._write_slot = jax.jit(self._write_slot_impl)
+        self._caches = model.init_caches(n_slots, cache_len, 0)
+        self._pad_id = eos_id if eos_id is not None else 0
+        self._cur = np.full((n_slots, 1), self._pad_id, np.int32)
+        self._slots: list[Optional[GenerationTicket]] = [None] * n_slots
+        self._emitted = np.zeros((n_slots,), np.int64)
+        self._waiting: deque[GenerationTicket] = deque()
+        self._cv = threading.Condition()
+        # serializes step() bodies: several threads may drive a manual-mode
+        # engine via ticket.result()/token_stream() at once, and the cache
+        # read-modify-write must not interleave
+        self._step_lock = threading.Lock()
+        self._closed = False
+        self._drain_on_close = True
+        # stats (guarded by _cv for cross-thread reads)
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+        self.n_tokens = 0
+        self.n_finished = 0
+        self.n_failed = 0
+        self._occupancy_counts: dict[int, int] = {}
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self._thread = threading.Thread(
+                target=self._loop, name="ContinuousBatchingEngine", daemon=True
+            )
+            self._thread.start()
+
+    # ------------------------------------------------------- cache plumbing
+    def _detect_batch_axes(self):
+        """Per-leaf batch axis of the decode-cache pytree, found by shape
+        diffing init_caches at two batch sizes — model-agnostic, so dense
+        DecodeCaches (batch on axis 1 of k/v, axis 0 of length) and Mamba
+        state trees both slot-write correctly."""
+        big = jax.eval_shape(lambda: self.model.init_caches(2, self.cache_len, 0))
+        one = jax.eval_shape(lambda: self.model.init_caches(1, self.cache_len, 0))
+        axes = []
+        for b_l, o_l in zip(jax.tree_util.tree_leaves(big),
+                            jax.tree_util.tree_leaves(one)):
+            diff = [i for i, (a, c) in enumerate(zip(b_l.shape, o_l.shape))
+                    if a != c]
+            if len(diff) != 1:
+                raise ValueError(
+                    "unsupported cache layout: leaf "
+                    f"{b_l.shape} vs {o_l.shape} has no unique batch axis")
+            axes.append(diff[0])
+        return axes
+
+    def _write_slot_impl(self, full, one, slot):
+        """Write a b=1 cache tree into slot `slot` of the batched tree."""
+        flat_full, treedef = jax.tree_util.tree_flatten(full)
+        flat_one = jax.tree_util.tree_leaves(one)
+        out = [
+            jax.lax.dynamic_update_slice_in_dim(
+                f, o.astype(f.dtype), slot, axis=ax)
+            for f, o, ax in zip(flat_full, flat_one, self._batch_axes)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _prefill_one(self, prompt: np.ndarray):
+        """Prefill one prompt at b=1; returns (last logits (1, V), caches)."""
+        toks = jnp.asarray(prompt, jnp.int32)[None]
+        if self._prefill is not None:
+            return self._prefill(self.params, toks)
+        caches = self.model.init_caches(1, self.cache_len, 0)
+        logits = None
+        for t in range(toks.shape[1]):
+            logits, caches = self._decode(self.params, caches,
+                                          toks[:, t : t + 1])
+        return logits, caches
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        """(b, V) -> (b,) int32 next tokens."""
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(
+            jax.random.categorical(sub, logits / self.temperature, axis=-1),
+            np.int32)
+
+    # --------------------------------------------------------------- submit
+    def submit(
+        self,
+        prompt: Sequence[int],
+        max_new_tokens: int = 32,
+        tenant: str = DEFAULT_TENANT,
+    ) -> GenerationTicket:
+        """Enqueue one prompt; returns immediately with a GenerationTicket.
+
+        The request is admitted into a decode slot at the next token
+        boundary with a free slot. Raises SchedulerError if the engine is
+        closed or the request cannot fit a slot
+        (`len(prompt) + max_new_tokens > cache_len`).
+        """
+        prompt = np.asarray(list(prompt), np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token sequence")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt.size + max_new_tokens > self.cache_len:
+            raise SchedulerError(
+                f"request needs {prompt.size} prompt + {max_new_tokens} new "
+                f"tokens but cache_len is {self.cache_len}")
+        t = GenerationTicket(self, prompt, max_new_tokens, tenant)
+        with self._cv:
+            if self._closed:
+                raise SchedulerError("engine is closed")
+            self._waiting.append(t)
+            self._cv.notify_all()
+        return t
+
+    def pending(self) -> int:
+        """Requests waiting for a slot (admitted ones count as active)."""
+        with self._cv:
+            return len(self._waiting)
+
+    def active(self) -> int:
+        """Occupied decode slots."""
+        with self._cv:
+            return sum(t is not None for t in self._slots)
+
+    def stats(self) -> dict:
+        """Decode/occupancy counters; occupancy_hist maps the number of
+        occupied slots at a decode step -> how many steps ran like that."""
+        with self._cv:
+            occ = dict(sorted(self._occupancy_counts.items()))
+            steps = self.n_decode_steps
+            occ_tokens = sum(k * v for k, v in occ.items())
+            return {
+                "n_slots": self.n_slots,
+                "n_decode_steps": steps,
+                "n_prefills": self.n_prefills,
+                "n_tokens": self.n_tokens,
+                "n_finished": self.n_finished,
+                "n_failed": self.n_failed,
+                "occupancy_hist": occ,
+                "mean_occupancy": occ_tokens / steps if steps else 0.0,
+            }
+
+    # ------------------------------------------------------- the decode loop
+    def _has_thread(self) -> bool:
+        return self._thread is not None
+
+    def _free_slots_locked(self) -> list[int]:
+        return [i for i, t in enumerate(self._slots) if t is None]
+
+    def _retire_locked(self, slot: int) -> None:
+        self._slots[slot] = None
+        self._cur[slot, 0] = self._pad_id
+        self._emitted[slot] = 0
+        self.n_finished += 1
+
+    def _admit(self) -> int:
+        """Move waiting requests into free slots; returns tokens emitted.
+
+        Each admission prefills the prompt (b=1), writes its cache into
+        the slot region, and emits the first sampled token. A request
+        whose first token already retires it (EOS, or max_new_tokens=1)
+        never occupies the slot.
+        """
+        emitted = 0
+        while True:
+            with self._cv:
+                free = self._free_slots_locked()
+                if not free or not self._waiting:
+                    return emitted
+                ticket = self._waiting.popleft()
+                slot = free[0]
+                # reserve while prefilling outside the lock
+                self._slots[slot] = ticket
+            try:
+                logits, caches1 = self._prefill_one(ticket.prompt)
+                self._caches = self._write_slot(self._caches, caches1,
+                                                jnp.int32(slot))
+                tok = int(self._sample(logits)[0])
+            except Exception as e:  # noqa: BLE001 - fail just this ticket
+                err = SchedulerError(f"prefill failed: {e}")
+                err.__cause__ = e
+                with self._cv:
+                    self._slots[slot] = None
+                    self.n_failed += 1
+                ticket._finish(error=err)
+                continue
+            ticket.slot = slot
+            ticket._emit(tok)
+            emitted += 1
+            with self._cv:
+                self.n_prefills += 1
+                self.n_tokens += 1
+                if (self.eos_id is not None and tok == self.eos_id) \
+                        or ticket.max_new_tokens == 1:
+                    self._retire_locked(slot)
+                    finish = True
+                else:
+                    self._cur[slot, 0] = tok
+                    self._emitted[slot] = 1
+                    finish = False
+            if finish:
+                ticket._finish()
+
+    def _decode_once(self) -> int:
+        """One batched decode step over every occupied slot."""
+        with self._cv:
+            active = [(i, t) for i, t in enumerate(self._slots)
+                      if t is not None]
+            if not active:
+                return 0
+            cur = self._cur.copy()
+        logits, self._caches = self._decode(
+            self.params, self._caches, jnp.asarray(cur))
+        nxt = self._sample(logits)
+        finished: list[GenerationTicket] = []
+        emitted = 0
+        with self._cv:
+            self.n_decode_steps += 1
+            n_active = len(active)
+            self._occupancy_counts[n_active] = \
+                self._occupancy_counts.get(n_active, 0) + 1
+            for slot, ticket in active:
+                if self._slots[slot] is not ticket:  # failed concurrently
+                    continue
+                tok = int(nxt[slot])
+                ticket._emit(tok)
+                emitted += 1
+                self.n_tokens += 1
+                self._emitted[slot] += 1
+                if (self.eos_id is not None and tok == self.eos_id) or \
+                        self._emitted[slot] >= ticket.max_new_tokens:
+                    self._retire_locked(slot)
+                    finished.append(ticket)
+                else:
+                    self._cur[slot, 0] = tok
+        for ticket in finished:
+            ticket._finish()
+        return emitted
+
+    def step(self) -> int:
+        """Admit waiting requests, then run one decode step.
+
+        Returns the number of tokens emitted (first tokens from
+        admissions + one token per occupied slot). 0 means the engine is
+        idle. Manual-mode entry point; the background loop calls the same
+        path.
+        """
+        with self._step_lock:
+            return self._admit() + self._decode_once()
+
+    def run_until_drained(self, max_steps: Optional[int] = None) -> int:
+        """step() until no work remains; returns total tokens emitted."""
+        total = 0
+        steps = 0
+        while True:
+            got = self.step()
+            total += got
+            steps += 1
+            if got == 0:
+                with self._cv:
+                    if not self._waiting and \
+                            all(t is None for t in self._slots):
+                        return total
+            if max_steps is not None and steps >= max_steps:
+                return total
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._closed and not self._waiting \
+                        and all(t is None for t in self._slots):
+                    self._cv.wait()
+                if self._closed:
+                    idle = not self._waiting and \
+                        all(t is None for t in self._slots)
+                    if idle or not self._drain_on_close:
+                        fail = list(self._waiting)
+                        fail.extend(t for t in self._slots if t is not None)
+                        self._waiting.clear()
+                        self._slots = [None] * self.n_slots
+                        self.n_failed += len(fail)
+                        self._cv.notify_all()
+                        closing = True
+                    else:
+                        closing = False
+                else:
+                    closing = False
+            if closing:
+                err = SchedulerError("engine closed without draining")
+                for t in fail:
+                    t._finish(error=err)
+                return
+            try:
+                self.step()
+            except Exception as e:  # noqa: BLE001 - decode died: fail loudly
+                # a decode/sample error must not kill the daemon thread
+                # silently — every in-flight and waiting consumer would
+                # block forever. Fail every ticket and shut down.
+                err = SchedulerError(f"decode loop failed: {e}")
+                err.__cause__ = e
+                with self._cv:
+                    self._closed = True
+                    fail = list(self._waiting)
+                    fail.extend(t for t in self._slots if t is not None)
+                    self._waiting.clear()
+                    self._slots = [None] * self.n_slots
+                    self.n_failed += len(fail)
+                    self._cv.notify_all()
+                for t in fail:
+                    t._finish(error=err)
+                return
+
+    def close(self, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop accepting work and shut down; idempotent.
+
+        drain=True finishes every admitted and waiting request first;
+        drain=False fails them with SchedulerError. In manual mode
+        draining runs `run_until_drained()` on the calling thread.
+        """
+        with self._cv:
+            self._closed = True
+            self._drain_on_close = drain
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+        elif drain:
+            self.run_until_drained()
+        else:
+            with self._cv:
+                fail = list(self._waiting)
+                fail.extend(t for t in self._slots if t is not None)
+                self._waiting.clear()
+                self._slots = [None] * self.n_slots
+                self.n_failed += len(fail)
+            err = SchedulerError("engine closed without draining")
+            for t in fail:
+                t._finish(error=err)
+
+    def __enter__(self) -> "ContinuousBatchingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))

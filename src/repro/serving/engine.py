@@ -2,8 +2,12 @@
 
 GenerationEngine: greedy or temperature sampling over any model exposing
 the Model protocol (prefill/init_caches/decode_step). The decode step is
-compiled once and reused; batching is static (the dry-run shapes are the
-serving shapes).
+compiled once and reused. The whole batch enters and leaves together
+(synchronous batching), which makes this the per-request baseline: for
+streaming traffic where requests should join and leave the decode batch
+at token boundaries, use `continuous_batching.ContinuousBatchingEngine`.
+Rows that emit `eos_id` are frozen to `eos_id` for the rest of the batch,
+so callers never see post-EOS garbage.
 
 BatchScheduler: the PR 1 pull-based micro-batcher, now a thin DEPRECATED
 shim over `async_scheduler.AsyncBatchScheduler` in manual mode (no
@@ -62,6 +66,17 @@ class GenerationEngine:
         self.temperature = temperature
         self._decode = jax.jit(
             lambda p, caches, tok: model.decode_step(p, caches, tok))
+        # prefill was previously run eagerly, re-tracing the layer scan on
+        # every generate() call; jit it (cache_len is shape-defining)
+        self._prefill = (
+            jax.jit(
+                lambda p, toks, cache_len: model.prefill(
+                    p, tokens=toks, cache_len=cache_len),
+                static_argnums=2,
+            )
+            if hasattr(model, "prefill")
+            else None
+        )
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.temperature <= 0:
@@ -77,12 +92,12 @@ class GenerationEngine:
         eos_id: Optional[int] = None,
     ) -> np.ndarray:
         b, s = prompts.shape
-        cache_len = cache_len or (s + max_new_tokens)
+        if cache_len is None:  # 0 is a legal (if useless) explicit value
+            cache_len = s + max_new_tokens
         key = key if key is not None else jax.random.key(0)
 
-        if hasattr(self.model, "prefill"):
-            logits, caches = self.model.prefill(
-                self.params, tokens=prompts, cache_len=cache_len)
+        if self._prefill is not None:
+            logits, caches = self._prefill(self.params, prompts, cache_len)
         else:
             # SSM/hybrid: run the sequence through decode-state prefill
             caches = self.model.init_caches(b, cache_len, 0)
@@ -95,11 +110,18 @@ class GenerationEngine:
         done = np.zeros((b,), bool)
         cur = self._sample(logits, key)[:, None].astype(jnp.int32)
         for i in range(max_new_tokens):
-            toks.append(np.asarray(cur)[:, 0])
+            step = np.asarray(cur)[:, 0]
             if eos_id is not None:
-                done |= toks[-1] == eos_id
-                if done.all():
-                    break
+                # freeze finished rows: a row that emitted eos_id earlier
+                # keeps emitting eos_id (and is fed eos_id), so callers
+                # never decode sampled garbage past the end of a sequence
+                step = np.where(done, eos_id, step).astype(step.dtype)
+                done |= step == eos_id
+            toks.append(step)
+            if i + 1 == max_new_tokens or (eos_id is not None and done.all()):
+                break
+            if eos_id is not None:
+                cur = jnp.asarray(step[:, None], jnp.int32)
             logits, caches = self._decode(self.params, caches, cur)
             key, sub = jax.random.split(key)
             cur = self._sample(logits, sub)[:, None].astype(jnp.int32)

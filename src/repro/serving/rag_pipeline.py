@@ -6,14 +6,24 @@
       --generate--> answer tokens
 
 The embedding model is a self-contained stub (seeded random projection of
-byte 4-gram features) standing in for all-MiniLM-L6-v2: deterministic,
+byte 4-gram features) standing in for all-MiniLM-L6-v2: deterministic
+across processes (stable FNV-1a bucketing, not Python's salted `hash()`),
 dimension-correct, and collision-behaved enough that identical texts map
 to identical embeddings — the retrieval math downstream is the real
 DIRC-RAG engine from repro.core.
+
+Streaming serving (PR 3): `query_stream` submits single queries into the
+async dual-trigger scheduler and, with `generate=True`, chains each
+completed retrieval straight into a `ContinuousBatchingEngine` decode
+slot — retrieval batches and decode slots share one open-loop pipeline.
+`generate_stream` is the retrieval-free variant; `decode_engine()` hands
+out the underlying engine for direct use.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -24,27 +34,54 @@ from repro.core.retrieval import DircRagIndex, RetrievalConfig
 from repro.core.sharded_index import ShardedDircIndex
 from repro.core.simulator import simulate_query
 from repro.data.tokenizer import ByteTokenizer
-from .async_scheduler import DEFAULT_TENANT, AsyncBatchScheduler
+from .async_scheduler import DEFAULT_TENANT, AsyncBatchScheduler, SchedulerError
+from .continuous_batching import ContinuousBatchingEngine, GenerationTicket
 from .engine import GenerationEngine
 
 
+_FNV_PRIME = np.uint32(16777619)
+_FNV_BASIS = np.uint32(2166136261)
+
+
 class HashEmbedder:
-    """Deterministic byte-4-gram hashing embedder (frontend stub)."""
+    """Deterministic byte-4-gram hashing embedder (frontend stub).
+
+    4-grams are bucketed with seeded FNV-1a over their bytes, NOT Python's
+    built-in `hash()`: bytes hashing is salted per process (PYTHONHASHSEED),
+    which silently broke cross-process reproducibility — an index built in
+    one process disagreed with queries embedded in another. FNV-1a is
+    stable across processes, platforms, and Python versions, and the
+    vectorized uint32 arithmetic is also much faster than a Python loop.
+    """
 
     def __init__(self, dim: int = 512, seed: int = 0, buckets: int = 8192):
         self.dim = dim
         self.buckets = buckets
         rng = np.random.default_rng(seed)
+        # mix the seed into the FNV basis so different embedders bucket
+        # differently but every process agrees
+        self._basis = np.uint32(_FNV_BASIS ^ np.uint32(seed & 0xFFFFFFFF))
         self.proj = rng.normal(size=(buckets, dim)).astype(np.float32)
         self.proj /= np.linalg.norm(self.proj, axis=-1, keepdims=True)
+
+    def _bucket_4grams(self, data: bytes) -> np.ndarray:
+        """Bucket ids of every byte 4-gram (short inputs are NUL-padded)."""
+        if len(data) < 4:
+            data = data.ljust(4, b"\x00")
+        arr = np.frombuffer(data, np.uint8)
+        grams = np.lib.stride_tricks.sliding_window_view(arr, 4)
+        h = np.full((grams.shape[0],), self._basis, np.uint32)
+        with np.errstate(over="ignore"):  # uint32 wraparound is the point
+            for col in range(4):
+                h = (h ^ grams[:, col]) * _FNV_PRIME
+        return h % np.uint32(self.buckets)
 
     def embed(self, texts: Sequence[str]) -> np.ndarray:
         out = np.zeros((len(texts), self.dim), np.float32)
         for i, t in enumerate(texts):
-            b = t.encode("utf-8", errors="replace")
             feats = np.zeros((self.buckets,), np.float32)
-            for j in range(max(len(b) - 3, 1)):
-                feats[hash(b[j : j + 4]) % self.buckets] += 1.0
+            np.add.at(feats, self._bucket_4grams(
+                t.encode("utf-8", errors="replace")), 1.0)
             v = feats @ self.proj
             n = np.linalg.norm(v)
             out[i] = v / n if n > 0 else v
@@ -128,41 +165,187 @@ class RagPipeline:
             start=start,
         )
 
+    def decode_engine(self, n_slots: int = 4,
+                      cache_len: Optional[int] = None,
+                      max_new_tokens: int = 32,
+                      temperature: float = 0.0,
+                      start: bool = True) -> ContinuousBatchingEngine:
+        """A ContinuousBatchingEngine over this pipeline's model.
+
+        The generation twin of `scheduler()`: requests join and leave the
+        `n_slots`-wide decode batch at token boundaries, so streaming
+        generation keeps the batch full the way the async scheduler keeps
+        retrieval batches full. `cache_len` defaults to
+        `max_prompt_len + max_new_tokens` (every augmented prompt fits).
+        """
+        if self.engine is None:
+            raise TypeError("decode_engine requires a model "
+                            "(RagPipeline(..., model=, params=))")
+        if cache_len is None:
+            cache_len = self.max_prompt_len + max_new_tokens
+        eos = self.tokenizer.eos_id
+        vocab = self.engine.model.cfg.vocab_size
+        return ContinuousBatchingEngine(
+            self.engine.model, self.engine.params,
+            n_slots=n_slots, cache_len=cache_len,
+            eos_id=eos if eos < vocab else None,
+            temperature=temperature, start=start,
+        )
+
+    def encode_prompt(self, text: str, retrieved_texts: Sequence[str]) -> list:
+        """Augmented-prompt token ids, folded into the model vocab."""
+        prompt = self.tokenizer.encode_rag_prompt(
+            text, list(retrieved_texts), self.max_prompt_len)
+        vocab = self.engine.model.cfg.vocab_size
+        return [t % vocab for t in prompt]
+
     def query_stream(self, requests, k: int = 3, max_batch: int = 32,
                      max_wait_ms: float = 5.0,
-                     key: Optional[jax.Array] = None):
-        """Stream retrieval results as they are served (completion order).
+                     key: Optional[jax.Array] = None,
+                     generate: bool = False, max_new_tokens: int = 32,
+                     n_slots: int = 4, temperature: float = 0.0):
+        """Stream results as they are served (completion order).
 
         `requests` is an iterable of query strings or (tenant, text)
         pairs. Each request is submitted to a live AsyncBatchScheduler
         (background flush loop, dual trigger) and completed tickets are
         yielded as soon as their batch lands — callers never block the
-        batch formation. Yields AsyncTicket objects: `.text`, `.tenant`,
-        `.doc_ids`, `.doc_scores`, `.wait_s`, `.batch_size`."""
+        batch formation.
+
+        With generate=False yields AsyncTicket objects: `.text`,
+        `.tenant`, `.doc_ids`, `.doc_scores`, `.wait_s`, `.batch_size`.
+
+        With generate=True (requires a model) each completed retrieval
+        ticket's augmented prompt is submitted straight into a
+        ContinuousBatchingEngine decode slot, so retrieval batches and
+        decode slots share one open-loop pipeline; yields
+        GenerationTicket objects as generation completes: `.text`,
+        `.tenant`, `.tokens`, `.answer_text`, `.retrieval` (the retrieval
+        ticket), `.first_token_s` (TTFT), `.wait_s` (end-to-end). If
+        retrieval failed for a request — or its generation could not be
+        started — the retrieval AsyncTicket is yielded instead, with its
+        `result()` re-raising the error.
+        """
         import queue as _queue
 
+        if generate and self.engine is None:
+            raise TypeError("query_stream(generate=True) requires a model")
         done_q: "_queue.Queue" = _queue.Queue()
-        sched = self.scheduler(max_batch=max_batch, key=key,
-                               max_wait_ms=max_wait_ms, start=True)
-        n_submitted = n_yielded = 0
+        sched = engine = None
         try:
-            for req in requests:
-                tenant, text = (req if isinstance(req, tuple)
-                                else (DEFAULT_TENANT, req))
-                sched.submit(text, k=k, tenant=tenant) \
-                     .add_done_callback(done_q.put)
-                n_submitted += 1
-                while True:  # opportunistically drain while submitting
-                    try:
-                        yield done_q.get_nowait()
-                        n_yielded += 1
-                    except _queue.Empty:
-                        break
-            while n_yielded < n_submitted:
-                yield done_q.get()
-                n_yielded += 1
+            # engine first: if its cache-layout probe raises, no thread
+            # has started yet; the finally closes whatever did start
+            engine = self.decode_engine(
+                n_slots=n_slots, max_new_tokens=max_new_tokens,
+                temperature=temperature, start=True) if generate else None
+            sched = self.scheduler(max_batch=max_batch, key=key,
+                                   max_wait_ms=max_wait_ms, start=True)
+
+            def on_retrieved(ticket):
+                """Scheduler-thread callback: chain retrieval into decode."""
+                try:
+                    texts_k = [self.doc_texts[i]
+                               for i in ticket.doc_ids if i >= 0]
+                    gen = engine.submit(
+                        self.encode_prompt(ticket.text, texts_k),
+                        max_new_tokens=max_new_tokens, tenant=ticket.tenant)
+                    gen.text = ticket.text
+                    gen.retrieval = ticket
+                    gen.add_done_callback(done_q.put)
+                except Exception as e:  # noqa: BLE001 - retrieval/engine failed
+                    if ticket._error is None:
+                        # retrieval succeeded but the decode submit failed
+                        # (e.g. engine died/closed): graft the error onto
+                        # the yielded ticket so result() re-raises instead
+                        # of masquerading as a pure-retrieval success
+                        err = SchedulerError(f"generation submit failed: {e}")
+                        err.__cause__ = e
+                        ticket._error = err
+                    done_q.put(ticket)  # surface the failing ticket
+
+            def submit(tenant, text):
+                sched.submit(text, k=k, tenant=tenant).add_done_callback(
+                    on_retrieved if generate else done_q.put)
+
+            yield from self._drain_stream(requests, submit, done_q)
         finally:
-            sched.close(drain=True)
+            if sched is not None:
+                sched.close(drain=True)
+            if engine is not None:
+                engine.close(drain=True)
+
+    def _drain_stream(self, requests, submit, done_q):
+        """Shared submit/drain loop for the streaming generators.
+
+        Submits each request via `submit(tenant, text)` (which must
+        arrange for exactly one finished ticket per request to land on
+        `done_q`), opportunistically yielding completions while
+        submitting and draining the remainder afterwards."""
+        import queue as _queue
+
+        n_submitted = n_yielded = 0
+        for req in requests:
+            tenant, text = (req if isinstance(req, tuple)
+                            else (DEFAULT_TENANT, req))
+            submit(tenant, text)
+            n_submitted += 1
+            while True:  # opportunistically drain while submitting
+                try:
+                    yield self._finalize_stream_item(done_q.get_nowait())
+                    n_yielded += 1
+                except _queue.Empty:
+                    break
+        while n_yielded < n_submitted:
+            yield self._finalize_stream_item(done_q.get())
+            n_yielded += 1
+
+    def _finalize_stream_item(self, ticket):
+        """Attach decoded text to finished generation tickets."""
+        if isinstance(ticket, GenerationTicket) and ticket._error is None:
+            ticket.answer_text = self.tokenizer.decode(ticket.tokens)
+        return ticket
+
+    def generate_stream(self, requests, max_new_tokens: int = 32,
+                        n_slots: int = 4, temperature: float = 0.0,
+                        cache_len: Optional[int] = None):
+        """Stream plain (retrieval-free) generations in completion order.
+
+        `requests` is an iterable of prompt strings or (tenant, text)
+        pairs; each is tokenized and submitted into a continuous-batching
+        decode slot. Yields GenerationTicket objects as sequences retire:
+        `.text`, `.tokens`, `.answer_text`, `.first_token_s`, `.wait_s`.
+        Use `ticket.token_stream()` from another thread for live
+        per-token consumption."""
+        import queue as _queue
+
+        if self.engine is None:
+            raise TypeError("generate_stream requires a model")
+        done_q: "_queue.Queue" = _queue.Queue()
+        if cache_len is not None and cache_len <= max_new_tokens:
+            # the truncation below keeps the LAST (cache_len - max_new)
+            # prompt tokens; with no room for even one, every submit
+            # would be rejected — fail fast with the real constraint
+            raise ValueError(
+                f"cache_len ({cache_len}) must exceed max_new_tokens "
+                f"({max_new_tokens}) to leave room for the prompt")
+        engine = self.decode_engine(
+            n_slots=n_slots, cache_len=cache_len,
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            start=True)
+        vocab = self.engine.model.cfg.vocab_size
+
+        def submit(tenant, text):
+            toks = [t % vocab for t in self.tokenizer.encode(text)]
+            toks = toks[-(engine.cache_len - max_new_tokens):]
+            ticket = engine.submit(toks, max_new_tokens=max_new_tokens,
+                                   tenant=tenant)
+            ticket.text = text
+            ticket.add_done_callback(done_q.put)
+
+        try:
+            yield from self._drain_stream(requests, submit, done_q)
+        finally:
+            engine.close(drain=True)
 
     async def aquery_stream(self, requests, k: int = 3, max_batch: int = 32,
                             max_wait_ms: float = 5.0,
@@ -171,17 +354,42 @@ class RagPipeline:
 
         The blocking waits happen on worker threads via
         `asyncio.to_thread`, so the event loop stays free while the
-        background scheduler forms batches."""
+        background scheduler forms batches. Closing this generator early
+        (break / `aclose()`) closes the underlying `query_stream`, whose
+        `finally` shuts down the background scheduler thread — consumers
+        that bail out never leak the flush loop."""
         import asyncio
 
         it = self.query_stream(requests, k=k, max_batch=max_batch,
                                max_wait_ms=max_wait_ms, key=key)
         sentinel = object()
-        while True:
-            ticket = await asyncio.to_thread(next, it, sentinel)
-            if ticket is sentinel:
-                return
-            yield ticket
+        try:
+            while True:
+                ticket = await asyncio.to_thread(next, it, sentinel)
+                if ticket is sentinel:
+                    return
+                yield ticket
+        finally:
+            # close on a worker thread: generator close() runs query_stream's
+            # finally (sched.close(drain=True)), which blocks on the flush
+            # thread. If a cancelled next() still has the generator running
+            # (blocked until its next completion lands, <= one flush away),
+            # retry until it suspends; a stuck generator is warned about
+            # loudly rather than silently leaking the scheduler thread.
+            deadline = time.monotonic() + 30.0
+            while True:
+                try:
+                    await asyncio.to_thread(it.close)
+                    break
+                except ValueError:  # generator already executing
+                    if time.monotonic() > deadline:
+                        warnings.warn(
+                            "aquery_stream could not close its query_stream "
+                            "(still executing after 30s); the background "
+                            "scheduler thread may leak", RuntimeWarning,
+                            stacklevel=1)
+                        break
+                    await asyncio.sleep(0.02)
 
     # ------------------------------------------------------ corpus updates
     def add_docs(self, texts: Sequence[str]) -> np.ndarray:
@@ -237,10 +445,8 @@ class RagPipeline:
             texts_k = [self.doc_texts[i] for i in ids if i >= 0]
             answer_text = answer_tokens = None
             if self.engine is not None and max_new_tokens > 0:
-                prompt = self.tokenizer.encode_rag_prompt(
-                    text, texts_k, self.max_prompt_len)
-                vocab = self.engine.model.cfg.vocab_size
-                toks = jnp.asarray([t % vocab for t in prompt], jnp.int32)[None]
+                prompt = self.encode_prompt(text, texts_k)
+                toks = jnp.asarray(prompt, jnp.int32)[None]
                 answer_tokens = self.engine.generate(
                     toks, max_new_tokens=max_new_tokens)
                 answer_text = self.tokenizer.decode(answer_tokens[0])

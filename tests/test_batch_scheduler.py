@@ -172,3 +172,28 @@ def test_aquery_stream_async_iteration(pipe):
     out = asyncio.run(drive())
     assert sorted(t.text for t in out) == sorted(queries)
     assert all(t.done() and len(t.doc_ids) == 1 for t in out)
+
+
+def _scheduler_threads():
+    import threading
+    return [t for t in threading.enumerate()
+            if t.name == "AsyncBatchScheduler" and t.is_alive()]
+
+
+def test_aquery_stream_early_exit_closes_scheduler_thread(pipe):
+    """Breaking out of aquery_stream must not leak the flush thread."""
+    queries = [f"topic {i} document" for i in range(6)]
+
+    async def drive():
+        agen = pipe.aquery_stream(queries, k=1, max_wait_ms=5.0)
+        async for _ in agen:
+            break  # consumer bails after the first result
+        await agen.aclose()  # deterministic close (don't rely on GC)
+
+    before = len(_scheduler_threads())
+    asyncio.run(drive())
+    deadline = time.time() + 10.0
+    while len(_scheduler_threads()) > before and time.time() < deadline:
+        time.sleep(0.01)
+    assert len(_scheduler_threads()) <= before, (
+        "background AsyncBatchScheduler thread leaked after early exit")

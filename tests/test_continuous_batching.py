@@ -1,0 +1,277 @@
+"""Continuous-batching decode engine: greedy parity with the per-query
+GenerationEngine baseline (including staggered admission and mixed
+max_new_tokens), slot reuse/occupancy invariants on a fake clock, the
+token_stream API, and the EOS-freeze fix in GenerationEngine itself.
+"""
+import threading
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (ContinuousBatchingEngine, GenerationEngine,
+                           SchedulerError)
+
+
+class ScriptModel:
+    """Deterministic Model-protocol stub: next token = (last + 1) % vocab.
+
+    No `prefill` attribute, so both engines exercise the decode-loop
+    (SSM-style) prefill path; fully jax-traceable so the jitted decode
+    step runs for real. `seen_cache_len` records the cache_len passed to
+    init_caches (the cache_len-is-None fix is observable through it).
+    """
+
+    def __init__(self, vocab: int = 16):
+        self.cfg = SimpleNamespace(vocab_size=vocab)
+        self.vocab = vocab
+        self.seen_cache_len = None
+
+    def init_caches(self, batch, cache_len, prefix_len):
+        self.seen_cache_len = cache_len
+        return {"last": jnp.zeros((batch, 1), jnp.int32),
+                "length": jnp.full((batch,), prefix_len, jnp.int32)}
+
+    def decode_step(self, params, caches, token):
+        nxt = (token[:, 0] + 1) % self.vocab
+        logits = jax.nn.one_hot(nxt, self.vocab, dtype=jnp.float32)
+        return logits, {"last": token, "length": caches["length"] + 1}
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _trim_eos(row, eos_id):
+    row = np.asarray(row)
+    hits = np.where(row == eos_id)[0]
+    return row[: hits[0] + 1] if hits.size else row
+
+
+def _baseline(model, prompt, max_new, eos_id=None):
+    eng = GenerationEngine(model, {})
+    out = eng.generate(jnp.asarray(prompt, jnp.int32)[None],
+                       max_new_tokens=max_new, cache_len=64, eos_id=eos_id)
+    return _trim_eos(out[0], eos_id) if eos_id is not None else out[0]
+
+
+# --------------------------------------------------------------- parity
+def test_greedy_parity_script_model_staggered_mixed_lengths():
+    model = ScriptModel(vocab=12)
+    eos = 7
+    engine = ContinuousBatchingEngine(model, {}, n_slots=2, cache_len=32,
+                                      eos_id=eos)
+    # mixed max_new_tokens; prompts ending near eos retire early
+    reqs = [([1, 2, 3], 6), ([5], 6), ([9, 10], 4), ([6], 3), ([2, 4], 1)]
+    tickets = [engine.submit(p, max_new_tokens=m) for p, m in reqs[:2]]
+    engine.step()  # staggered admission: first two in flight...
+    tickets += [engine.submit(p, max_new_tokens=m) for p, m in reqs[2:]]
+    engine.run_until_drained()
+    for (prompt, max_new), t in zip(reqs, tickets):
+        ref = _baseline(ScriptModel(vocab=12), prompt, max_new, eos_id=eos)
+        assert np.array_equal(t.result(), ref), (prompt, t.tokens, ref)
+    stats = engine.stats()
+    assert stats["n_prefills"] == 5
+    assert stats["n_finished"] == 5
+
+
+def test_greedy_parity_real_model():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8) for _ in range(3)]
+    max_news = [5, 3, 5]
+    base = GenerationEngine(model, params)
+    refs = [np.asarray(base.generate(jnp.asarray(p, jnp.int32)[None],
+                                     max_new_tokens=m, cache_len=16))[0]
+            for p, m in zip(prompts, max_news)]
+    engine = ContinuousBatchingEngine(model, params, n_slots=2, cache_len=16)
+    tickets = [engine.submit(p, max_new_tokens=m)
+               for p, m in zip(prompts, max_news)]
+    outs = [t.result() for t in tickets]
+    for ref, out in zip(refs, outs):
+        assert np.array_equal(ref, out)
+
+
+# ------------------------------------------ slot reuse / occupancy (fake clock)
+def test_slot_reuse_and_occupancy_invariants_fake_clock():
+    clock = FakeClock()
+    model = ScriptModel(vocab=10)
+    engine = ContinuousBatchingEngine(model, {}, n_slots=2, cache_len=32,
+                                      clock=clock)
+    tickets = [engine.submit([i + 1], max_new_tokens=3 + i) for i in range(5)]
+    clock.advance(1.0)
+    max_active = 0
+    while engine.pending() or engine.active():
+        engine.step()
+        max_active = max(max_active, engine.active())
+        assert engine.active() <= 2  # never more sequences than slots
+        clock.advance(0.5)
+    assert max_active == 2
+    stats = engine.stats()
+    assert stats["n_prefills"] == 5 and stats["n_finished"] == 5
+    assert set(stats["occupancy_hist"]) <= {1, 2}
+    # token accounting: every emitted token is a prefill first-token or a
+    # decode-step token for an occupied slot
+    assert stats["n_tokens"] == stats["n_prefills"] + sum(
+        occ * steps for occ, steps in stats["occupancy_hist"].items())
+    assert stats["n_tokens"] == sum(len(t.tokens) for t in tickets)
+    # slots are reused: 5 sequences through 2 slots
+    slots = [t.slot for t in tickets]
+    assert set(slots) == {0, 1}
+    # fake-clock latency stamps: first token at/after admission, finish after
+    for t in tickets:
+        assert t.first_token_s is not None and t.first_token_s >= 1.0
+        assert t.wait_s >= t.first_token_s
+    # later submissions waited longer for a slot
+    assert tickets[4].first_token_s >= tickets[0].first_token_s
+
+
+def test_occupancy_stays_full_under_backlog():
+    model = ScriptModel(vocab=10)
+    engine = ContinuousBatchingEngine(model, {}, n_slots=2, cache_len=32)
+    for i in range(6):
+        engine.submit([1], max_new_tokens=4)
+    engine.run_until_drained()
+    hist = engine.stats()["occupancy_hist"]
+    # with a 3x backlog the decode batch runs full except the tail
+    assert hist.get(2, 0) > hist.get(1, 0)
+
+
+# ----------------------------------------------------------- token stream
+def test_token_stream_is_incremental_and_matches_result():
+    model = ScriptModel(vocab=10)
+    engine = ContinuousBatchingEngine(model, {}, n_slots=1, cache_len=32)
+    t = engine.submit([2], max_new_tokens=4)
+    stream = list(t.token_stream())
+    assert stream == [3, 4, 5, 6]
+    assert np.array_equal(t.result(), stream)
+
+
+def test_token_stream_background_thread():
+    model = ScriptModel(vocab=10)
+    engine = ContinuousBatchingEngine(model, {}, n_slots=2, cache_len=32,
+                                      start=True)
+    try:
+        t = engine.submit([0], max_new_tokens=5)
+        got = []
+        for tok in t.token_stream(timeout=30.0):
+            got.append(tok)
+        assert got == [1, 2, 3, 4, 5]
+        assert t.done()
+    finally:
+        engine.close()
+    assert not any(th.name == "ContinuousBatchingEngine" and th.is_alive()
+                   for th in threading.enumerate())
+
+
+# ------------------------------------------------------------ error paths
+def test_submit_rejects_oversized_request():
+    engine = ContinuousBatchingEngine(ScriptModel(), {}, n_slots=1,
+                                      cache_len=8)
+    with pytest.raises(SchedulerError, match="cache_len"):
+        engine.submit(list(range(6)), max_new_tokens=4)
+
+
+def test_submit_after_close_raises():
+    engine = ContinuousBatchingEngine(ScriptModel(), {}, n_slots=1,
+                                      cache_len=8)
+    engine.close()
+    with pytest.raises(SchedulerError, match="closed"):
+        engine.submit([1], max_new_tokens=1)
+
+
+def test_close_without_drain_fails_pending():
+    engine = ContinuousBatchingEngine(ScriptModel(), {}, n_slots=1,
+                                      cache_len=32)
+    t = engine.submit([1], max_new_tokens=4)
+    engine.close(drain=False)
+    assert t.done()
+    with pytest.raises(SchedulerError, match="without draining"):
+        t.result()
+    with pytest.raises(SchedulerError):
+        list(t.token_stream())
+
+
+class ExplodingModel(ScriptModel):
+    """Raises only on BATCHED decode (b > 1), so b=1 prefill succeeds and
+    the failure hits the background decode loop itself."""
+
+    def decode_step(self, params, caches, token):
+        if token.shape[0] > 1:
+            raise RuntimeError("sense amp fault")
+        return super().decode_step(params, caches, token)
+
+
+def test_background_decode_failure_fails_tickets_instead_of_hanging():
+    engine = ContinuousBatchingEngine(ExplodingModel(vocab=10), {},
+                                      n_slots=2, cache_len=32, start=True)
+    t = engine.submit([1], max_new_tokens=4)
+    with pytest.raises(SchedulerError, match="decode loop failed"):
+        t.result(timeout=30.0)
+    with pytest.raises(SchedulerError):  # engine shut itself down
+        engine.submit([1], max_new_tokens=1)
+    engine.close()
+    assert not any(th.name == "ContinuousBatchingEngine" and th.is_alive()
+                   for th in threading.enumerate())
+
+
+def test_query_stream_generate_surfaces_chain_failures():
+    """A request whose generation dies must yield a ticket whose result()
+    raises — never a success-looking pure-retrieval ticket."""
+    from repro.core.retrieval import RetrievalConfig
+    from repro.serving import HashEmbedder, RagPipeline
+
+    pipe = RagPipeline(
+        [f"doc {i}" for i in range(8)],
+        RetrievalConfig(bits=8, path="int_exact"),
+        model=ExplodingModel(vocab=512), params={}, dim=16,
+        embedder=HashEmbedder(dim=16), max_prompt_len=16)
+    items = list(pipe.query_stream([f"q{i}" for i in range(4)], k=1,
+                                   generate=True, max_new_tokens=4,
+                                   n_slots=2, max_wait_ms=2.0))
+    assert len(items) == 4
+    for item in items:
+        with pytest.raises(SchedulerError):
+            item.result(timeout=10.0)
+
+
+def test_close_drains_by_default():
+    engine = ContinuousBatchingEngine(ScriptModel(vocab=10), {}, n_slots=2,
+                                      cache_len=32, start=True)
+    tickets = [engine.submit([1], max_new_tokens=3) for _ in range(4)]
+    engine.close(drain=True)
+    for t in tickets:
+        assert np.array_equal(t.result(), [2, 3, 4])
+
+
+# ------------------------------------- GenerationEngine fixes (satellites)
+def test_generation_engine_freezes_rows_after_eos():
+    model = ScriptModel(vocab=10)
+    eng = GenerationEngine(model, {})
+    prompts = jnp.asarray([[3], [0]], jnp.int32)
+    out = eng.generate(prompts, max_new_tokens=5, cache_len=16, eos_id=5)
+    # row 0 hits eos at step 2 and must stay frozen at eos, not leak 6,7,8
+    assert out[0].tolist() == [4, 5, 5, 5, 5]
+    assert out[1].tolist() == [1, 2, 3, 4, 5]
+
+
+def test_generation_engine_cache_len_zero_is_explicit():
+    model = ScriptModel(vocab=10)
+    eng = GenerationEngine(model, {})
+    eng.generate(jnp.asarray([[1]], jnp.int32), max_new_tokens=2, cache_len=0)
+    assert model.seen_cache_len == 0  # not silently replaced by s + new
+    eng.generate(jnp.asarray([[1]], jnp.int32), max_new_tokens=2)
+    assert model.seen_cache_len == 3  # None -> s + max_new_tokens

@@ -1,0 +1,44 @@
+"""Repo hygiene: no committed bytecode, ever again.
+
+PR 2 accidentally committed nine __pycache__/*.pyc files. This guard runs
+in the fast tier (and CI runs the same check as a lint step), so tracked
+bytecode fails the build before it lands.
+"""
+
+import shutil
+import subprocess
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _git_ls_files() -> list[str]:
+    if shutil.which("git") is None:
+        pytest.skip("git not available")
+    proc = subprocess.run(
+        ["git", "-C", str(REPO_ROOT), "ls-files"],
+        capture_output=True,
+        text=True,
+    )
+    if proc.returncode != 0:
+        pytest.skip(f"not a git checkout: {proc.stderr.strip()}")
+    return proc.stdout.splitlines()
+
+
+def test_no_tracked_bytecode():
+    tracked = _git_ls_files()
+    offenders = [
+        f for f in tracked if f.endswith(".pyc") or "__pycache__" in f.split("/")
+    ]
+    assert not offenders, (
+        f"bytecode files are tracked: {offenders}; "
+        "run `git rm -r --cached` on them (see .gitignore)"
+    )
+
+
+def test_gitignore_covers_bytecode():
+    gitignore = (REPO_ROOT / ".gitignore").read_text()
+    for pattern in ("__pycache__/", "*.py[cod]"):
+        assert pattern in gitignore, f".gitignore is missing {pattern!r}"

@@ -1,3 +1,8 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
 import jax
 import numpy as np
 
@@ -55,15 +60,116 @@ def test_rag_pipeline_end_to_end():
     assert len(res.retrieved_texts) == 3
 
 
-def test_rag_pipeline_with_generator():
+def test_hash_embedder_deterministic_across_processes():
+    """Embeddings must not depend on the interpreter's hash salt.
+
+    The old implementation bucketed 4-grams with Python's `hash()` on
+    bytes, which is salted per process: two processes with different
+    PYTHONHASHSEED values produced different embeddings, silently
+    breaking cross-process index/query reproducibility. FNV-1a is stable
+    — assert bit-identical output under two different salts.
+    """
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    code = (
+        "from repro.serving import HashEmbedder\n"
+        "e = HashEmbedder(dim=32, seed=3)\n"
+        "v = e.embed(['the quick brown fox', 'dirc rag', 'x'])\n"
+        "print(v.tobytes().hex())\n"
+    )
+    outs = []
+    for hashseed in ("1", "424242"):
+        env = dict(os.environ)
+        env["PYTHONHASHSEED"] = hashseed
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True, env=env,
+                              timeout=300)
+        assert proc.returncode == 0, proc.stderr
+        outs.append(proc.stdout.strip())
+    assert outs[0] == outs[1], (
+        "embeddings differ across PYTHONHASHSEED values")
+    # and the in-process embedder agrees with the subprocesses
+    here = HashEmbedder(dim=32, seed=3).embed(
+        ["the quick brown fox", "dirc rag", "x"])
+    assert here.tobytes().hex() == outs[0]
+
+
+def test_hash_embedder_short_and_empty_inputs():
+    e = HashEmbedder(dim=16)
+    out = e.embed(["", "a", "ab", "abc", "abcd"])
+    assert out.shape == (5, 16)
+    assert np.isfinite(out).all()
+    # identical text still maps to the identical embedding
+    np.testing.assert_array_equal(out[3], e.embed(["abc"])[0])
+
+
+def _generator_pipeline(n_shards: int = 0) -> RagPipeline:
     cfg = get_config("phi4-mini-3.8b", smoke=True)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     docs = [f"doc {i}" for i in range(32)]
-    pipe = RagPipeline(
+    return RagPipeline(
         docs, RetrievalConfig(bits=8, path="int_exact"),
         model=model, params=params, dim=64,
-        embedder=HashEmbedder(dim=64), max_prompt_len=32)
+        embedder=HashEmbedder(dim=64), max_prompt_len=32,
+        n_shards=n_shards)
+
+
+def test_rag_pipeline_with_generator():
+    pipe = _generator_pipeline()
     res = pipe.query("what is doc 3?", k=2, max_new_tokens=4)
     assert res.answer_tokens is not None
     assert res.answer_tokens.shape[1] == 4
+
+
+def test_query_stream_generate_matches_query_many():
+    """Continuous-batching generation behind the streaming front door
+    must produce the same greedy tokens as the per-query path."""
+    pipe = _generator_pipeline(n_shards=2)
+    queries = ["what is doc 3?", "what is doc 7?", "tell me about doc 11"]
+    eos = pipe.tokenizer.eos_id
+    got = {t.text: t for t in pipe.query_stream(
+        queries, k=2, max_wait_ms=3.0, generate=True,
+        max_new_tokens=5, n_slots=2)}
+    assert set(got) == set(queries)
+    refs = pipe.query_many(queries, k=2, max_new_tokens=5)
+    for q, ref in zip(queries, refs):
+        t = got[q]
+        ref_row = ref.answer_tokens[0]
+        hits = np.where(ref_row == eos)[0]
+        ref_trim = ref_row[: hits[0] + 1] if hits.size else ref_row
+        assert np.array_equal(np.asarray(t.tokens), ref_trim)
+        assert t.answer_text is not None
+        assert np.array_equal(t.retrieval.doc_ids, ref.doc_ids)
+        assert t.wait_s is not None and t.first_token_s is not None
+
+
+def test_generate_stream_completion_order():
+    pipe = _generator_pipeline()
+    reqs = [("alice", "hello there"), ("bob", "general kenobi")]
+    out = list(pipe.generate_stream(reqs, max_new_tokens=4, n_slots=2))
+    assert sorted(t.text for t in out) == sorted(text for _, text in reqs)
+    for t in out:
+        assert len(t.tokens) == 4
+        assert t.answer_text is not None
+        assert t.tenant in ("alice", "bob")
+
+
+def test_generate_stream_rejects_cache_len_without_prompt_room():
+    import pytest
+
+    pipe = _generator_pipeline()
+    with pytest.raises(ValueError, match="cache_len"):
+        list(pipe.generate_stream(["x"], max_new_tokens=8, cache_len=8))
+
+
+def test_decode_engine_requires_model():
+    docs = [f"doc {i}" for i in range(8)]
+    pipe = RagPipeline(docs, RetrievalConfig(bits=8, path="int_exact"),
+                       dim=32, embedder=HashEmbedder(dim=32))
+    import pytest
+
+    with pytest.raises(TypeError, match="model"):
+        pipe.decode_engine()
+    with pytest.raises(TypeError, match="model"):
+        list(pipe.query_stream(["q"], generate=True))
