@@ -14,7 +14,10 @@ latency and the achieved batch-size histogram.
 Adding --generate to --open-loop chains every completed retrieval into a
 ContinuousBatchingEngine decode slot (requests join/leave the decode
 batch at token boundaries), reporting end-to-end + time-to-first-token +
-per-token latency and decode slot occupancy.
+per-token latency and decode slot occupancy. --paged swaps the fixed
+per-slot cache regions for the shared paged KV block pool
+(serving/paged_cache.py) with chunked prefill, adding pool-utilization
+and admission-backpressure counters to the report.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
@@ -25,6 +28,8 @@ Usage:
       --offered-qps 500 --n-tenants 4 --skew 10 --max-wait-ms 5
   PYTHONPATH=src python -m repro.launch.serve --rag --open-loop --generate \
       --offered-qps 20 --rag-queries 32 --new-tokens 16 --n-slots 4
+  PYTHONPATH=src python -m repro.launch.serve --rag --open-loop --generate \
+      --paged --n-slots 16 --block-size 16 --prefill-chunk 32
 """
 from __future__ import annotations
 
@@ -244,6 +249,8 @@ def serve_rag_open_loop_generate(
         n_tenants: int = 4, skew: float = 1.0,
         offered_qps: float = 50.0, n_queries: int = 32,
         k: int = 3, max_new_tokens: int = 16, n_slots: int = 4,
+        paged: bool = False, block_size: Optional[int] = None,
+        n_blocks: Optional[int] = None, prefill_chunk: Optional[int] = None,
         arch: str = "phi4-mini-3.8b", path: str = "int_exact",
         seed: int = 0, pipe: Optional[RagPipeline] = None) -> dict:
     """Open-loop retrieval+generation through the shared streaming front door.
@@ -256,6 +263,10 @@ def serve_rag_open_loop_generate(
     batch at token boundaries. Reports end-to-end (arrival -> last token)
     p50/p95/p99, time-to-first-token, per-token decode latency, decode
     throughput, and slot occupancy.
+
+    `paged=True` serves decode from the shared KV block pool
+    (`serving.paged_cache`) with chunked prefill; the report then also
+    carries pool utilization and admission-backpressure counters.
     """
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
@@ -270,7 +281,10 @@ def serve_rag_open_loop_generate(
     sched = AsyncBatchScheduler(padded_search, max_batch=max_batch,
                                 max_wait_ms=max_wait_ms, start=True)
     engine = pipe.decode_engine(n_slots=n_slots,
-                                max_new_tokens=max_new_tokens, start=True)
+                                max_new_tokens=max_new_tokens,
+                                paged=paged, block_size=block_size,
+                                n_blocks=n_blocks,
+                                prefill_chunk=prefill_chunk, start=True)
 
     # compile every serving shape off-clock: the (max_batch, dim) search,
     # the (len<=max_prompt_len,) prefill, and the (n_slots, 1) decode step
@@ -354,7 +368,13 @@ def serve_rag_open_loop_generate(
         "per_token_ms_mean": float(np.mean(per_tok_ms)) if per_tok_ms else 0.0,
         "per_token_ms_p95": float(np.percentile(per_tok_ms, 95))
         if per_tok_ms else 0.0,
+        "paged": paged,
     }
+    if paged:
+        out["n_backpressure"] = est["n_backpressure"]
+        out["n_prefill_chunks"] = est.get("n_prefill_chunks", 0)
+        if "pool" in est:
+            out["pool"] = est["pool"]
     out.update(_percentiles_ms(e2e_s))
     return out
 
@@ -387,6 +407,17 @@ def main() -> None:
                          "end-to-end/per-token latency + slot occupancy")
     ap.add_argument("--n-slots", type=int, default=4,
                     help="--generate: continuous-batching decode slots")
+    ap.add_argument("--paged", action="store_true",
+                    help="--generate: serve decode from the paged KV block "
+                         "pool (chunked prefill + admission backpressure)")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="--paged: tokens per KV block (default 16)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="--paged: pool size in blocks (default: the "
+                         "fixed-slot n_slots*cache_len footprint)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="--paged: prompt tokens prefilled per engine step "
+                         "(default 32)")
     args = ap.parse_args()
     if args.rag and args.open_loop and args.generate:
         out = serve_rag_open_loop_generate(
@@ -395,7 +426,10 @@ def main() -> None:
             n_tenants=args.n_tenants, skew=args.skew,
             offered_qps=args.offered_qps, n_queries=args.rag_queries,
             k=args.k, max_new_tokens=args.new_tokens,
-            n_slots=args.n_slots, arch=args.arch or "phi4-mini-3.8b")
+            n_slots=args.n_slots, paged=args.paged,
+            block_size=args.block_size, n_blocks=args.n_blocks,
+            prefill_chunk=args.prefill_chunk,
+            arch=args.arch or "phi4-mini-3.8b")
         print(f"open-loop generate: offered {out['offered_qps']:.0f} q/s, "
               f"finished {out['n_finished']}/{out['n_queries']} requests "
               f"({out['achieved_qps']:.1f} q/s end-to-end)")
@@ -408,6 +442,12 @@ def main() -> None:
         print(f"slots: mean occupancy {out['mean_slot_occupancy']:.2f}"
               f"/{out['n_slots']}, hist {out['occupancy_hist']}, "
               f"retrieval mean batch {out['mean_retrieval_batch']:.1f}")
+        if out["paged"]:
+            pool = out.get("pool", {})
+            print(f"paged: {out['n_prefill_chunks']} prefill chunks, "
+                  f"{out['n_backpressure']} backpressure deferrals, "
+                  f"pool {pool.get('free_blocks', '?')}/"
+                  f"{pool.get('n_usable_blocks', '?')} blocks free at end")
         return
     if args.rag and args.open_loop:
         out = serve_rag_open_loop(

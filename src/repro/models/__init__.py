@@ -1,2 +1,8 @@
 """repro.models — the ten assigned generator architectures in pure JAX."""
-from .model_api import build_model, input_specs, cache_specs, param_specs  # noqa: F401
+from .model_api import (  # noqa: F401
+    build_model,
+    cache_specs,
+    input_specs,
+    param_specs,
+    supports_paged_kv,
+)

@@ -257,6 +257,95 @@ def decode_step(cfg: ModelConfig, params: dict, x: jax.Array,
     return y, new_cache
 
 
+class PagedKVCache(NamedTuple):
+    """Per-layer view of the block-pooled KV cache (serving memory model).
+
+    Unlike `KVCache`, where row b owns a contiguous (S, kh, hd) region,
+    the pool is shared by every sequence: row b's logical positions live
+    in the physical blocks its `block_table` row names, in order. Block
+    `paged_cache.NULL_BLOCK` (physical 0) is scratch — inactive lanes
+    point every table entry at it so their writes never touch live data.
+    Allocation/free/backpressure bookkeeping is host-side
+    (`serving.paged_cache.PagedCacheManager`); this view is what the
+    jitted step consumes.
+    """
+
+    k_pool: jax.Array       # (n_blocks, block_size, kh, hd)
+    v_pool: jax.Array       # (n_blocks, block_size, kh, hd)
+    block_table: jax.Array  # (b, max_blocks) int32 physical block ids
+    length: jax.Array       # (b,) int32 — tokens already written
+
+
+def _paged_write(pool: jax.Array, new: jax.Array, cache: PagedKVCache,
+                 n_valid: jax.Array) -> jax.Array:
+    """Scatter `new` (b, t, kh, hd) into the pool at each row's next
+    `n_valid[b]` logical positions; invalid lanes land in NULL_BLOCK."""
+    b, t = new.shape[:2]
+    block_size = pool.shape[1]
+    mb = cache.block_table.shape[1]
+    pos = cache.length[:, None] + jnp.arange(t)[None, :]          # (b, t)
+    valid = jnp.arange(t)[None, :] < n_valid[:, None]             # (b, t)
+    blk = jnp.take_along_axis(
+        cache.block_table, jnp.clip(pos // block_size, 0, mb - 1), axis=1)
+    blk = jnp.where(valid, blk, 0)   # NULL_BLOCK scratch
+    off = jnp.where(valid, pos % block_size, 0)
+    return pool.at[blk, off].set(new.astype(pool.dtype))
+
+
+def paged_attend(cfg: ModelConfig, params: dict, x: jax.Array,
+                 cache: PagedKVCache, angles: Optional[jax.Array],
+                 n_valid: jax.Array,
+                 h: Optional[int] = None, kh: Optional[int] = None):
+    """Block-table attention over `t` new positions per row.
+
+    x (b, t, d) holds each row's next `n_valid[b] <= t` tokens starting
+    at logical position `cache.length[b]` (t == 1 is the decode step,
+    t == prefill_chunk is one chunked-prefill piece; same trace, two
+    compiled shapes). New K/V are scattered into the shared pools at
+    those positions, then the row's full logical window is gathered back
+    via its block table and attended with a causal + true-length mask —
+    position j is visible to query i iff j <= length + i. Returns
+    (y (b, t, d), k_pool', v_pool'); rows beyond n_valid produce garbage
+    outputs the caller must ignore (their writes went to the scratch
+    block, so the pools stay clean).
+
+    The gather materializes (b, max_blocks * block_size, kh, hd) of
+    activation per step — paged HBM *residency* with dense-window
+    compute. A fused Pallas gather-attend kernel can remove the
+    materialization later without changing this interface.
+    """
+    from . import rope as rope_mod
+
+    h = h or cfg.effective_n_heads
+    kh = kh or cfg.n_kv_heads
+    hd = params["wq"].shape[1] // h
+    q, k_new, v_new = _project_qkv(cfg, params, x, h, kh, hd)
+    if angles is not None:
+        q = rope_mod.apply_rotary(q, angles)
+        k_new = rope_mod.apply_rotary(k_new, angles)
+    k_pool = _paged_write(cache.k_pool, k_new, cache, n_valid)
+    v_pool = _paged_write(cache.v_pool, v_new, cache, n_valid)
+    b, t = x.shape[:2]
+    block_size = k_pool.shape[1]
+    mb = cache.block_table.shape[1]
+    S = mb * block_size
+    k = k_pool[cache.block_table].reshape(b, S, kh, hd)
+    v = v_pool[cache.block_table].reshape(b, S, kh, hd)
+    g = h // kh
+    qg = q.reshape(b, t, kh, g, hd) * hd**-0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    q_pos = cache.length[:, None] + jnp.arange(t)[None, :]        # (b, t)
+    kv_pos = jnp.arange(S)[None, None, :]                         # (1, 1, S)
+    visible = kv_pos <= q_pos[:, :, None]                         # (b, t, S)
+    s = jnp.where(visible[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v).reshape(b, t, h * hd)
+    cdt = layers.dt(cfg.compute_dtype)
+    y = out.astype(cdt) @ params["wo"].astype(cdt)
+    return y, k_pool, v_pool
+
+
 def cross_attention(cfg: ModelConfig, params: dict, x: jax.Array,
                     kv_src: jax.Array, h: int, kh: int) -> jax.Array:
     """Encoder-decoder cross attention (whisper): no RoPE, no mask."""

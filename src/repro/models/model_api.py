@@ -7,6 +7,18 @@
     init_caches(batch, cache_len, prefix_len)      [decode shapes]
     decode_step(params, caches, token) -> (logits, caches)  [serve_step]
 
+Attention-backed families (dense/moe/vlm via DecoderLM) additionally
+implement the PAGED serving protocol — the block-pooled cache memory
+model used by `serving.continuous_batching` + `serving.paged_cache`:
+    init_paged_caches(n_blocks, block_size) -> PagedDecodeCaches
+    paged_step(params, pools, block_tables, lengths, tokens, n_valid)
+        -> (logits, pools)
+SSM models (MambaLM) deliberately do NOT page: their decode state is
+O(1) per sequence (a few small fp32 tensors, no growth with context), so
+it stays *slot-resident* — the paged engine keeps Mamba state in the
+fixed (n_slots, ...) batch and only applies chunked-prefill admission.
+Use `supports_paged_kv(model)` to branch.
+
 `input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every
 model input of that (arch x shape) cell — weak-type-correct, shardable,
 zero device allocation — exactly what the multi-pod dry-run lowers with.
@@ -110,6 +122,16 @@ class MambaLM:
         logits = layers.logits_from_hidden(cfg, params["embedding"], x[:, -1])
         return logits, MambaCaches(mamba=new_states,
                                    length=caches.length + 1)
+
+
+def supports_paged_kv(model) -> bool:
+    """True when `model` grows a pageable KV cache (attention families).
+
+    False for SSM/hybrid models whose decode state is O(1)-per-sequence
+    and therefore cheapest left slot-resident (paging a few-KB state
+    tensor would add gather/scatter for zero HBM savings).
+    """
+    return hasattr(model, "init_paged_caches") and hasattr(model, "paged_step")
 
 
 def build_model(cfg: ModelConfig):

@@ -29,6 +29,16 @@ class DecodeCaches(NamedTuple):
     length: jax.Array   # (b,) shared across layers
 
 
+class PagedDecodeCaches(NamedTuple):
+    """Block-pooled decode caches: the pools are shared by every sequence
+    and carry NO per-sequence state — block tables and lengths are pure
+    inputs to `paged_step`, owned by the host-side
+    `serving.paged_cache.PagedCacheManager`."""
+
+    k_pool: jax.Array   # (L, n_blocks, block_size, kh, hd)
+    v_pool: jax.Array   # (L, n_blocks, block_size, kh, hd)
+
+
 def _remat(cfg: ModelConfig, fn):
     if cfg.remat == "full":
         return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
@@ -161,25 +171,32 @@ class DecoderLM:
         return total, metrics
 
     # ------------------------------------------------------------ serving
-    def _block_prefill(self, p, x, angles, cache_len):
+    def _block_join(self, p, x, h, y):
+        """Residual join after attention: x is the block input, h its
+        normed copy, y the attention output. Applies the MLP/MoE branch
+        in parallel-block or sequential form (shared by the prefill,
+        decode, and paged-decode block bodies; auxes are dropped —
+        serving never trains)."""
         cfg = self.cfg
-        h = layers.apply_norm(cfg, p["attn_norm"], x)
-        y, cache = attention.prefill(cfg, p["attn"], h, angles, cache_len)
         if cfg.parallel_block:
             if cfg.moe is not None:
                 m, _ = moe_mod.apply_moe(cfg, p["moe"], h)
             else:
                 m = layers.apply_mlp(cfg, p["mlp"], h)
-            out = x + y + m
+            return x + y + m
+        x = x + y
+        h2 = layers.apply_norm(cfg, p["mlp_norm"], x)
+        if cfg.moe is not None:
+            m, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
         else:
-            x = x + y
-            h2 = layers.apply_norm(cfg, p["mlp_norm"], x)
-            if cfg.moe is not None:
-                m, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
-            else:
-                m = layers.apply_mlp(cfg, p["mlp"], h2)
-            out = x + m
-        return out, cache
+            m = layers.apply_mlp(cfg, p["mlp"], h2)
+        return x + m
+
+    def _block_prefill(self, p, x, angles, cache_len):
+        cfg = self.cfg
+        h = layers.apply_norm(cfg, p["attn_norm"], x)
+        y, cache = attention.prefill(cfg, p["attn"], h, angles, cache_len)
+        return self._block_join(p, x, h, y), cache
 
     def prefill(self, params, tokens=None, embeds=None, positions=None,
                 cache_len: Optional[int] = None):
@@ -220,21 +237,8 @@ class DecoderLM:
         cache = attention.KVCache(k=k, v=v, length=length)
         h = layers.apply_norm(cfg, p["attn_norm"], x)
         y, new_cache = attention.decode_step(cfg, p["attn"], h, cache, angles)
-        if cfg.parallel_block:
-            if cfg.moe is not None:
-                m, _ = moe_mod.apply_moe(cfg, p["moe"], h)
-            else:
-                m = layers.apply_mlp(cfg, p["mlp"], h)
-            out = x + y + m
-        else:
-            x2 = x + y
-            h2 = layers.apply_norm(cfg, p["mlp_norm"], x2)
-            if cfg.moe is not None:
-                m, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
-            else:
-                m = layers.apply_mlp(cfg, p["mlp"], h2)
-            out = x2 + m
-        return (out, angles), (new_cache.k, new_cache.v)
+        return (self._block_join(p, x, h, y), angles), \
+            (new_cache.k, new_cache.v)
 
     def decode_step(self, params, caches: DecodeCaches, token: jax.Array,
                     positions: Optional[jax.Array] = None):
@@ -264,3 +268,59 @@ class DecoderLM:
         logits = layers.logits_from_hidden(cfg, params["embedding"], x[:, -1])
         new = DecodeCaches(k=k_new, v=v_new, length=caches.length + 1)
         return logits, new
+
+    # ----------------------------------------------------- paged serving
+    def init_paged_caches(self, n_blocks: int,
+                          block_size: int) -> PagedDecodeCaches:
+        """Shared K/V block pools (no per-sequence state; see
+        `serving.paged_cache` for the allocator that owns block tables)."""
+        cfg = self.cfg
+        kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cdt = layers.dt(cfg.compute_dtype)
+        shape = (cfg.n_layers, n_blocks, block_size, kh, hd)
+        return PagedDecodeCaches(k_pool=jnp.zeros(shape, cdt),
+                                 v_pool=jnp.zeros(shape, cdt))
+
+    def paged_step(self, params, pools: PagedDecodeCaches,
+                   block_tables: jax.Array, lengths: jax.Array,
+                   tokens: jax.Array, n_valid: jax.Array,
+                   positions: Optional[jax.Array] = None):
+        """Advance each row by its next `n_valid[b] <= t` tokens.
+
+        tokens (b, t) holds row b's tokens for logical positions
+        `lengths[b] .. lengths[b] + n_valid[b] - 1` (entries past n_valid
+        are padding). t == 1 with n_valid == 1 is the batched decode
+        step; t == prefill_chunk at b == 1 is one chunked-prefill piece —
+        one trace, two compiled shapes. Returns (logits (b, V) at each
+        row's LAST VALID position, new pools). Inactive rows (all-null
+        block table, length 0) write only the scratch block and their
+        logits are garbage the caller ignores.
+        """
+        cfg = self.cfg
+        x = layers.embed_tokens(cfg, params["embedding"], tokens)
+        b, t, _ = x.shape
+        if positions is None:
+            positions = lengths[:, None] + jnp.arange(t)[None, :]
+            if cfg.rope_style == "mrope":
+                positions = jnp.broadcast_to(positions[None], (3, b, t))
+        angles = self._angles(positions, b, t)
+
+        def scan_fn(x, inp):
+            p, kp, vp = inp
+            cache = attention.PagedKVCache(
+                k_pool=kp, v_pool=vp, block_table=block_tables,
+                length=lengths)
+            h = layers.apply_norm(cfg, p["attn_norm"], x)
+            y, kp2, vp2 = attention.paged_attend(
+                cfg, p["attn"], h, cache, angles, n_valid)
+            return self._block_join(p, x, h, y), (kp2, vp2)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            scan_fn, x, (params["blocks"], pools.k_pool, pools.v_pool),
+            unroll=cfg.scan_unroll,
+        )
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+        idx = jnp.clip(n_valid - 1, 0, t - 1)[:, None, None]
+        last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+        logits = layers.logits_from_hidden(cfg, params["embedding"], last)
+        return logits, PagedDecodeCaches(k_pool=k_new, v_pool=v_new)

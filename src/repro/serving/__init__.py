@@ -1,5 +1,5 @@
 """repro.serving — generation engines (static + continuous batching),
-async batch scheduler, end-to-end RAG."""
+paged KV-cache memory subsystem, async batch scheduler, end-to-end RAG."""
 from .async_scheduler import (  # noqa: F401
     AsyncBatchScheduler,
     AsyncTicket,
@@ -9,5 +9,6 @@ from .continuous_batching import (  # noqa: F401
     ContinuousBatchingEngine,
     GenerationTicket,
 )
+from .paged_cache import OutOfBlocks, PagedCacheManager  # noqa: F401
 from .engine import BatchScheduler, BatchTicket, GenerationEngine  # noqa: F401
 from .rag_pipeline import HashEmbedder, RagPipeline, RagResult  # noqa: F401

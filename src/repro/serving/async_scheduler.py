@@ -13,9 +13,11 @@ closes that gap:
   `AsyncTicket` with `result(timeout=...)`, `done()`, and
   `add_done_callback(fn)`; no caller has to block for a flush to happen.
 * **Multi-tenant fairness.** Each tenant gets its own FIFO submission
-  queue; batches are formed by deficit-round-robin (quantum tickets per
-  tenant per visit, deficit reset on empty queue, rotation persists
-  across flushes), so one chatty tenant cannot starve the others.
+  queue; batches are formed by WEIGHTED deficit-round-robin (a tenant
+  earns `quantum * weight` credit per visit, deficit reset on empty
+  queue, rotation persists across flushes), so one chatty tenant cannot
+  starve the others, and a paying tenant with `tenant_weights={"pro":
+  2.0}` gets ~2x the saturated throughput of a weight-1 tenant.
 * **Graceful close.** `close()` drains in-flight work by default (or
   fails pending tickets with `SchedulerError` when `drain=False`).
 
@@ -32,6 +34,7 @@ it); a manual `flush()` additionally raises the `SchedulerError` itself.
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from collections import deque
@@ -147,6 +150,11 @@ class AsyncBatchScheduler:
         trigger and explicit flush/poll only: the PR 1 behaviour).
     quantum: DRR quantum, tickets a tenant may take per round-robin
         visit. 1 == strict per-ticket round robin.
+    tenant_weights: per-tenant DRR weight (default 1.0 for tenants not
+        listed). A tenant earns `quantum * weight` credit per visit, so
+        under saturation its share of every batch is proportional to its
+        weight. Fractional weights accumulate as deficit across visits.
+        `set_tenant_weight` adjusts weights on a live scheduler.
     clock: monotonic-seconds callable, injectable for deterministic
         deadline tests.
     start: spawn the background flush thread. With start=False the
@@ -160,6 +168,7 @@ class AsyncBatchScheduler:
         max_batch: int = 32,
         max_wait_ms: Optional[float] = None,
         quantum: int = 1,
+        tenant_weights: Optional[dict] = None,
         clock: Callable[[], float] = time.monotonic,
         start: bool = False,
     ):
@@ -169,6 +178,10 @@ class AsyncBatchScheduler:
             raise ValueError("max_wait_ms must be >= 0 (or None to disable)")
         if quantum < 1:
             raise ValueError("quantum must be >= 1")
+        self._weights: dict[str, float] = {}
+        for name, w in (tenant_weights or {}).items():
+            self._check_weight(w)
+            self._weights[name] = float(w)
         self._search = batch_search
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms
@@ -218,6 +231,23 @@ class AsyncBatchScheduler:
         with self._cv:
             return list(self._rr)
 
+    @staticmethod
+    def _check_weight(weight) -> None:
+        # finite too: an inf credit would blow up int(credit) inside the
+        # background flush loop and hang every pending ticket
+        if not (weight > 0 and math.isfinite(weight)):
+            raise ValueError(f"tenant weight must be finite and > 0, got {weight!r}")
+
+    def set_tenant_weight(self, tenant: str, weight: float) -> None:
+        """Set `tenant`'s DRR weight (takes effect from its next visit)."""
+        self._check_weight(weight)
+        with self._cv:
+            self._weights[tenant] = float(weight)
+
+    def tenant_weight(self, tenant: str) -> float:
+        with self._cv:
+            return self._weights.get(tenant, 1.0)
+
     def batch_size_hist(self) -> dict[int, int]:
         """Achieved batch size -> count, over all flushes so far."""
         with self._cv:
@@ -260,14 +290,15 @@ class AsyncBatchScheduler:
         return max(self.max_wait_ms / 1e3 - (now - oldest.submit_time), 0.0)
 
     def _next_chunk_locked(self) -> list:
-        """Form one batch by deficit round robin over tenant queues.
+        """Form one batch by weighted deficit round robin over tenant
+        queues.
 
-        Each visit grants `quantum` credit; an emptied queue forfeits its
-        deficit and its tenant entry is pruned (re-created on the next
-        submit), so state stays bounded by the ACTIVE tenant count in a
-        long-lived scheduler. `self._rr` rotation persists across calls,
-        so tenants beyond `max_batch` positions are not starved by a
-        fixed order.
+        Each visit grants `quantum * weight` credit; an emptied queue
+        forfeits its deficit and its tenant entry is pruned (re-created
+        on the next submit), so state stays bounded by the ACTIVE tenant
+        count in a long-lived scheduler. `self._rr` rotation persists
+        across calls, so tenants beyond `max_batch` positions are not
+        starved by a fixed order.
         """
         chunk: list = []
         while len(chunk) < self.max_batch:
@@ -277,7 +308,8 @@ class AsyncBatchScheduler:
                     break
                 name = self._rr[0]
                 q = self._tenants[name]
-                credit = self._credit.get(name, 0.0) + self.quantum
+                weight = self._weights.get(name, 1.0)
+                credit = self._credit.get(name, 0.0) + self.quantum * weight
                 take = min(int(credit), len(q), self.max_batch - len(chunk))
                 for _ in range(take):
                     chunk.append(q.popleft())

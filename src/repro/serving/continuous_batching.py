@@ -9,19 +9,38 @@ instead of waiting for the slowest sequence in a static batch.
 
 `ContinuousBatchingEngine` holds a fixed decode batch of `n_slots` sequences
 over ONE jitted `decode_step` program — the static `(n_slots, 1)` token and
-`(L, n_slots, cache_len, ...)` cache shapes compile exactly once, the
-query-stationary discipline the retrieval path already uses. Between decode
-steps the engine:
+cache shapes compile exactly once, the query-stationary discipline the
+retrieval path already uses. Between decode steps the engine:
 
-* **admits** waiting requests into free slots: the prompt is prefilled at its
-  natural length (b=1, the right-aligned degenerate case) and its KV cache /
-  SSM state is written into the slot's region of the batched cache
-  (`dynamic_update_slice` along the auto-detected batch axis of every cache
-  leaf, so dense/MoE `DecodeCaches` and Mamba state trees both work);
+* **admits** waiting requests into free slots;
 * **decodes** one token for every occupied slot in a single batched step;
 * **retires** slots whose sequence emitted `eos_id` or reached its own
   `max_new_tokens`, freeing the slot for the next waiting request — mixed
   lengths never stall the batch.
+
+Two *cache memory models* sit under the slots (PR 4):
+
+* **Fixed-slot (default, `paged=False`).** Every slot owns a private
+  `(cache_len, ...)` cache region for its whole lifetime; admission
+  prefills the whole prompt at b=1 and copies its cache into the slot
+  (`dynamic_update_slice` along auto-detected batch axes — dense/MoE
+  `DecodeCaches` and Mamba state trees both work). Simple, but a 16-token
+  query costs the same HBM as a 900-token RAG prompt, and a long prompt's
+  whole-sequence prefill stalls every other slot.
+* **Paged (`paged=True`).** Attention KV lives in a shared pool of
+  `(n_blocks, block_size)` blocks handed out by
+  `paged_cache.PagedCacheManager` (free-list allocate/append/free,
+  worst-case budget reserved at admission, `OutOfBlocks` backpressure);
+  the jitted step gathers each row's window through its block table
+  (`models/attention.paged_attend`). `submit()` then rejects only
+  requests that could NEVER fit the pool — a temporarily exhausted pool
+  queues the request and admission retries at the next token boundary.
+  Prompts prefill in `prefill_chunk`-sized pieces *interleaved with
+  decode* (one chunk per engine step), so a long prompt no longer
+  freezes every running sequence. Models without a pageable KV cache —
+  Mamba's O(1) SSM state — keep their state slot-resident under
+  `paged=True` and still get chunked (b=1, `prefill_chunk` tokens per
+  step) admission. See ROADMAP.md "Serving memory model".
 
 Tickets mirror the `AsyncBatchScheduler` futures API (`result(timeout)`,
 `done()`, `add_done_callback`) and add `token_stream()`: a blocking iterator
@@ -36,11 +55,12 @@ sleeps and zero threads.
 Greedy decoding is row-independent in every model here (attention, SSM scan
 and dense MLPs act per batch row), so for fixed prompts the emitted tokens
 are token-for-token identical to per-query `GenerationEngine.generate` —
-property-tested in tests/test_continuous_batching.py, including staggered
-admission and mixed per-request `max_new_tokens`. Temperature sampling draws
-one key per decode step shared across rows (like `GenerationEngine`), so
-sampled outputs depend on slot placement; use greedy when reproducibility
-across admission orders matters.
+property-tested in tests/test_continuous_batching.py and
+tests/test_paged_cache.py, including staggered admission, mixed per-request
+`max_new_tokens`, and paged-vs-fixed-vs-baseline three-way parity under
+chunked prefill. Temperature sampling draws one key per decode step shared
+across rows (like `GenerationEngine`), so sampled outputs depend on slot
+placement; use greedy when reproducibility across admission orders matters.
 """
 
 from __future__ import annotations
@@ -55,7 +75,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.model_api import supports_paged_kv
+
 from .async_scheduler import DEFAULT_TENANT, SchedulerError
+from .paged_cache import PagedCacheManager, blocks_for, pow2_at_least
 
 _DONE = object()  # token_stream sentinel
 
@@ -172,26 +195,51 @@ class GenerationTicket:
                 pass
 
 
+class _Prefill:
+    """In-flight chunked prefill of one admitted sequence (paged mode)."""
+
+    __slots__ = ("ticket", "pos", "caches1")
+
+    def __init__(self, ticket: GenerationTicket, caches1=None):
+        self.ticket = ticket
+        self.pos = 0          # prompt tokens processed so far
+        self.caches1 = caches1  # b=1 cache tree (slot-resident models only)
+
+
 class ContinuousBatchingEngine:
     """Slot-based continuous-batching decode over one jitted decode_step.
 
     model/params: any Model-protocol object (prefill optional; SSM models
         are prefilled by streaming the prompt through decode_step at b=1).
     n_slots: decode batch width — the number of sequences in flight.
-    cache_len: per-slot KV-cache / state capacity. A request needs
-        `len(prompt) + max_new_tokens <= cache_len`; submit() rejects
-        longer ones with SchedulerError.
+    cache_len: per-sequence token capacity. Fixed-slot mode allocates
+        `n_slots` private regions of this size up front and `submit()`
+        rejects `len(prompt) + max_new_tokens > cache_len`. Paged mode
+        uses it only as the block-table width cap (`max_seq_len` of one
+        sequence); memory is the shared pool.
     eos_id: retire a slot when it emits this id (None: length-only).
     temperature: 0 == greedy (argmax, reproducible); > 0 samples with one
         key per decode step shared across slots.
+    paged: use the block-pooled KV memory model (see module docstring).
+    block_size / n_blocks: paged-pool geometry. `n_blocks` defaults to
+        the fixed-slot footprint (`n_slots * cache_len` tokens' worth of
+        blocks, plus the reserved null block), i.e. paged-by-default uses
+        the SAME cache HBM as fixed-slot and turns it into admission
+        headroom for short sequences.
+    prefill_chunk: paged-mode admission granularity — prompt tokens
+        advanced per engine step per admitting sequence (default 32).
     clock: monotonic-seconds callable, injectable for deterministic tests.
     start: spawn the background decode loop. With start=False the engine
         is in *manual mode*: call `step()` yourself (or let
         `ticket.result()` / `token_stream()` drive it).
 
-    Prefill compiles once per distinct prompt length (b=1 shapes); the
-    batched decode step compiles exactly once. Keep prompt lengths
-    bucketed upstream if compile churn matters.
+    Fixed-slot prefill compiles once per distinct prompt length (b=1
+    shapes); paged mode compiles a BOUNDED set of step shapes regardless
+    of prompt-length mix — `(w, 1)` decode and `(1, prefill_chunk)`
+    prefill pieces, where batch width w and the prefill gather window
+    are bucketed to powers of two (compaction: a half-empty engine
+    doesn't pay full-width attention, a short prompt doesn't attend the
+    full table window).
     """
 
     def __init__(
@@ -203,6 +251,10 @@ class ContinuousBatchingEngine:
         eos_id: Optional[int] = None,
         temperature: float = 0.0,
         key: Optional[jax.Array] = None,
+        paged: bool = False,
+        block_size: Optional[int] = None,
+        n_blocks: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
         clock: Callable[[], float] = time.monotonic,
         start: bool = False,
     ):
@@ -210,12 +262,18 @@ class ContinuousBatchingEngine:
             raise ValueError("n_slots must be >= 1")
         if cache_len < 2:
             raise ValueError("cache_len must be >= 2")
+        paged_knobs = (block_size, n_blocks, prefill_chunk)
+        if not paged and any(k is not None for k in paged_knobs):
+            raise ValueError(
+                "block/chunk knobs (block_size, n_blocks, prefill_chunk) "
+                "require paged=True")
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.eos_id = eos_id
         self.temperature = temperature
+        self.paged = paged
         self._key = key if key is not None else jax.random.key(0)
         self._clock = clock
         self._decode = jax.jit(
@@ -226,13 +284,50 @@ class ContinuousBatchingEngine:
                                               cache_len=cache_len))
         else:
             self._prefill = None
-        self._batch_axes = self._detect_batch_axes()
-        self._write_slot = jax.jit(self._write_slot_impl)
-        self._caches = model.init_caches(n_slots, cache_len, 0)
+
+        # -- cache memory model -----------------------------------------
+        self._kv_paged = paged and supports_paged_kv(model)
+        self._pcm: Optional[PagedCacheManager] = None
+        if paged:
+            if not self._kv_paged and (block_size is not None or n_blocks is not None):
+                # slot-resident state has no pool: explicit pool geometry
+                # would silently vanish — say so instead
+                import warnings
+
+                warnings.warn(
+                    f"{type(model).__name__} has no pageable KV cache; "
+                    "block_size/n_blocks are ignored (state stays "
+                    "slot-resident, only chunked admission applies)",
+                    RuntimeWarning, stacklevel=2)
+            block_size = block_size or 16
+            if block_size < 1:
+                raise ValueError("block_size must be >= 1")
+            self.block_size = block_size
+            self.prefill_chunk = prefill_chunk or 32
+            if self.prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+        if self._kv_paged:
+            if n_blocks is None:
+                n_blocks = blocks_for(n_slots * cache_len, block_size) + 1
+            self._pcm = PagedCacheManager(
+                n_blocks, block_size,
+                max_blocks_per_seq=blocks_for(cache_len, block_size))
+            self._pools = model.init_paged_caches(n_blocks, block_size)
+            self._paged_step = jax.jit(
+                lambda p, pools, tbl, ln, tok, nv: model.paged_step(
+                    p, pools, tbl, ln, tok, nv))
+            self._lengths = np.zeros((n_slots,), np.int64)
+            self._caches = None
+        else:
+            self._batch_axes = self._detect_batch_axes()
+            self._write_slot = jax.jit(self._write_slot_impl)
+            self._caches = model.init_caches(n_slots, cache_len, 0)
+
         self._pad_id = eos_id if eos_id is not None else 0
         self._cur = np.full((n_slots, 1), self._pad_id, np.int32)
         self._slots: list[Optional[GenerationTicket]] = [None] * n_slots
         self._emitted = np.zeros((n_slots,), np.int64)
+        self._prefills: dict[int, _Prefill] = {}  # slot -> chunked prefill
         self._waiting: deque[GenerationTicket] = deque()
         self._cv = threading.Condition()
         # serializes step() bodies: several threads may drive a manual-mode
@@ -244,9 +339,12 @@ class ContinuousBatchingEngine:
         # stats (guarded by _cv for cross-thread reads)
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_prefill_chunks = 0
         self.n_tokens = 0
         self.n_finished = 0
         self.n_failed = 0
+        self.n_backpressure = 0  # admissions deferred by pool exhaustion
+        self.peak_active = 0
         self._occupancy_counts: dict[int, int] = {}
         self._thread: Optional[threading.Thread] = None
         if start:
@@ -317,16 +415,30 @@ class ContinuousBatchingEngine:
         """Enqueue one prompt; returns immediately with a GenerationTicket.
 
         The request is admitted into a decode slot at the next token
-        boundary with a free slot. Raises SchedulerError if the engine is
-        closed or the request cannot fit a slot
-        (`len(prompt) + max_new_tokens > cache_len`).
+        boundary with a free slot (paged mode: and enough free pool
+        blocks to reserve its worst-case budget — a temporarily
+        exhausted pool queues the request instead of rejecting it).
+        Raises SchedulerError if the engine is closed or the request
+        could NEVER be served: fixed-slot mode when `len(prompt) +
+        max_new_tokens > cache_len`, paged mode when the worst case
+        exceeds the block-table width or the whole pool.
         """
         prompt = np.asarray(list(prompt), np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError("prompt must be a non-empty 1-D token sequence")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        if prompt.size + max_new_tokens > self.cache_len:
+        need = int(prompt.size) + max_new_tokens
+        if self._kv_paged:
+            blocks = self._pcm.blocks_needed(need)
+            if blocks > self._pcm.max_blocks_per_seq \
+                    or blocks > self._pcm.n_usable_blocks:
+                raise SchedulerError(
+                    f"request needs {blocks} blocks of {self.block_size} "
+                    f"tokens but the pool serves at most "
+                    f"{min(self._pcm.max_blocks_per_seq, self._pcm.n_usable_blocks)} "
+                    f"per sequence")
+        elif need > self.cache_len:
             raise SchedulerError(
                 f"request needs {prompt.size} prompt + {max_new_tokens} new "
                 f"tokens but cache_len is {self.cache_len}")
@@ -344,27 +456,37 @@ class ContinuousBatchingEngine:
             return len(self._waiting)
 
     def active(self) -> int:
-        """Occupied decode slots."""
+        """Occupied decode slots (decoding or mid-prefill)."""
         with self._cv:
             return sum(t is not None for t in self._slots)
 
     def stats(self) -> dict:
         """Decode/occupancy counters; occupancy_hist maps the number of
-        occupied slots at a decode step -> how many steps ran like that."""
+        occupied slots at a decode step -> how many steps ran like that.
+        Paged mode adds pool accounting (`pool`), deferred-admission
+        events (`n_backpressure`), and chunk counters."""
         with self._cv:
             occ = dict(sorted(self._occupancy_counts.items()))
             steps = self.n_decode_steps
             occ_tokens = sum(k * v for k, v in occ.items())
-            return {
+            out = {
                 "n_slots": self.n_slots,
                 "n_decode_steps": steps,
                 "n_prefills": self.n_prefills,
                 "n_tokens": self.n_tokens,
                 "n_finished": self.n_finished,
                 "n_failed": self.n_failed,
+                "peak_active": self.peak_active,
                 "occupancy_hist": occ,
                 "mean_occupancy": occ_tokens / steps if steps else 0.0,
             }
+            if self.paged:
+                out["n_prefill_chunks"] = self.n_prefill_chunks
+                out["n_backpressure"] = self.n_backpressure
+                out["prefill_chunk"] = self.prefill_chunk
+            if self._kv_paged:
+                out["pool"] = self._pcm.stats()
+            return out
 
     # ------------------------------------------------------- the decode loop
     def _has_thread(self) -> bool:
@@ -373,19 +495,46 @@ class ContinuousBatchingEngine:
     def _free_slots_locked(self) -> list[int]:
         return [i for i, t in enumerate(self._slots) if t is None]
 
+    def _release_slot(self, slot: int) -> None:
+        """Drop per-slot serving resources (prefill state, pool blocks).
+
+        Called under the step lock (pool bookkeeping is not thread-safe);
+        slot-table mutation happens separately under `_cv`.
+        """
+        self._prefills.pop(slot, None)
+        if self._kv_paged:
+            if slot in self._pcm:
+                self._pcm.free(slot)
+            self._lengths[slot] = 0
+
     def _retire_locked(self, slot: int) -> None:
         self._slots[slot] = None
         self._cur[slot, 0] = self._pad_id
         self._emitted[slot] = 0
         self.n_finished += 1
+        self._release_slot(slot)
 
+    def _fail_all_locked(self) -> list[GenerationTicket]:
+        """Collect every waiting + in-flight ticket and clear the engine
+        state (close/abort paths). Caller finishes the tickets."""
+        fail = list(self._waiting)
+        fail.extend(t for t in self._slots if t is not None)
+        self._waiting.clear()
+        for slot, t in enumerate(self._slots):
+            if t is not None:
+                self._release_slot(slot)
+        self._slots = [None] * self.n_slots
+        self.n_failed += len(fail)
+        return fail
+
+    # ------------------------------------------------ fixed-slot admission
     def _admit(self) -> int:
         """Move waiting requests into free slots; returns tokens emitted.
 
-        Each admission prefills the prompt (b=1), writes its cache into
-        the slot region, and emits the first sampled token. A request
-        whose first token already retires it (EOS, or max_new_tokens=1)
-        never occupies the slot.
+        Fixed-slot path: each admission prefills the WHOLE prompt (b=1),
+        writes its cache into the slot region (copy-on-admit), and emits
+        the first sampled token. A request whose first token already
+        retires it (EOS, or max_new_tokens=1) never occupies the slot.
         """
         emitted = 0
         while True:
@@ -411,32 +560,179 @@ class ContinuousBatchingEngine:
                 ticket._finish(error=err)
                 continue
             ticket.slot = slot
-            ticket._emit(tok)
-            emitted += 1
-            with self._cv:
-                self.n_prefills += 1
-                self.n_tokens += 1
-                if (self.eos_id is not None and tok == self.eos_id) \
-                        or ticket.max_new_tokens == 1:
-                    self._retire_locked(slot)
-                    finish = True
-                else:
-                    self._cur[slot, 0] = tok
-                    self._emitted[slot] = 1
-                    finish = False
-            if finish:
-                ticket._finish()
+            emitted += self._emit_first_token(slot, ticket, tok)
 
+    def _emit_first_token(self, slot: int, ticket: GenerationTicket,
+                          tok: int) -> int:
+        """Shared post-prefill bookkeeping: emit the first token and
+        either retire immediately or enter the decode rotation."""
+        ticket._emit(tok)
+        with self._cv:
+            self.n_prefills += 1
+            self.n_tokens += 1
+            if (self.eos_id is not None and tok == self.eos_id) \
+                    or ticket.max_new_tokens == 1:
+                self._retire_locked(slot)
+                finish = True
+            else:
+                self._cur[slot, 0] = tok
+                self._emitted[slot] = 1
+                finish = False
+        if finish:
+            ticket._finish()
+        return 1
+
+    # ----------------------------------------------------- paged admission
+    def _admit_paged(self) -> int:
+        """Assign waiting requests to free slots, reserving their
+        worst-case pool budget; returns the number admitted.
+
+        No tokens are emitted here — prompts stream through
+        `_advance_prefills` one `prefill_chunk` per step. Admission is
+        FIFO: a head request the pool cannot cover right now blocks
+        later (possibly smaller) ones, trading peak utilization for
+        no-starvation; each deferral bumps `n_backpressure`.
+        """
+        admitted = 0
+        while True:
+            with self._cv:
+                free = self._free_slots_locked()
+                if not free or not self._waiting:
+                    return admitted
+                ticket = self._waiting[0]
+                if self._kv_paged:
+                    need = int(ticket.prompt.size) + ticket.max_new_tokens
+                    if not self._pcm.can_reserve(need):
+                        self.n_backpressure += 1
+                        return admitted
+                self._waiting.popleft()
+                slot = free[0]
+                self._slots[slot] = ticket
+            if self._kv_paged:
+                self._pcm.reserve(slot, need)
+                self._lengths[slot] = 0
+                pre = _Prefill(ticket)
+            else:
+                # slot-resident state (SSM / no pageable KV): chunked
+                # admission streams into a private b=1 cache, written
+                # into the slot on completion (copy-on-admit)
+                pre = _Prefill(
+                    ticket, caches1=self.model.init_caches(
+                        1, self.cache_len, 0))
+            self._prefills[slot] = pre
+            ticket.slot = slot
+            admitted += 1
+
+    def _advance_prefills(self) -> int:
+        """Advance every in-flight prefill by one `prefill_chunk` piece;
+        returns pieces processed. Completed prompts emit their first
+        token and join the decode rotation at this step's decode."""
+        work = 0
+        for slot in sorted(self._prefills):
+            pre = self._prefills[slot]
+            ticket = pre.ticket
+            try:
+                done, logits = self._prefill_chunk_once(slot, pre)
+                tok = int(self._sample(logits)[0]) if done else None
+            except Exception as e:  # noqa: BLE001 - fail just this ticket
+                err = SchedulerError(f"chunked prefill failed: {e}")
+                err.__cause__ = e
+                with self._cv:
+                    self._release_slot(slot)
+                    self._slots[slot] = None
+                    self.n_failed += 1
+                ticket._finish(error=err)
+                continue
+            work += 1
+            with self._cv:
+                self.n_prefill_chunks += 1
+            if done:
+                del self._prefills[slot]
+                self._emit_first_token(slot, ticket, tok)
+        return work
+
+    def _prefill_chunk_once(self, slot: int, pre: _Prefill):
+        """Process the next prompt piece of one admitted sequence.
+
+        Returns (done, logits) where `logits` is only meaningful at
+        completion (the model's output at the prompt's last position).
+        """
+        prompt = pre.ticket.prompt
+        n = min(self.prefill_chunk, int(prompt.size) - pre.pos)
+        if self._kv_paged:
+            self._pcm.ensure(slot, pre.pos + n)
+            toks = np.zeros((1, self.prefill_chunk), np.int32)
+            toks[0, :n] = prompt[pre.pos : pre.pos + n]
+            # narrow the gather window to the blocks this chunk can see,
+            # bucketed to powers of two so at most log2(max_blocks)
+            # prefill shapes ever compile — without this every chunk
+            # attends (and gathers) the full table-width window, which
+            # is where a paged engine would lose prefill throughput to
+            # the fixed-slot one
+            table = self._pcm.tables([slot])
+            need = blocks_for(pre.pos + n, self.block_size)
+            table = table[:, : min(pow2_at_least(need), table.shape[1])]
+            logits, self._pools = self._paged_step(
+                self.params, self._pools,
+                jnp.asarray(table),
+                jnp.asarray([pre.pos], jnp.int32),
+                jnp.asarray(toks),
+                jnp.asarray([n], jnp.int32))
+            pre.pos += n
+            self._lengths[slot] = pre.pos
+        else:
+            logits = None
+            for t in range(pre.pos, pre.pos + n):
+                logits, pre.caches1 = self._decode(
+                    self.params, pre.caches1,
+                    jnp.asarray(prompt[None, t : t + 1], jnp.int32))
+            pre.pos += n
+        done = pre.pos == int(prompt.size)
+        if done and not self._kv_paged:
+            self._caches = self._write_slot(self._caches, pre.caches1,
+                                            jnp.int32(slot))
+        return done, logits
+
+    # ---------------------------------------------------------- decode step
     def _decode_once(self) -> int:
-        """One batched decode step over every occupied slot."""
+        """One batched decode step over every occupied, non-prefilling
+        slot.
+
+        Paged KV lanes carry no per-slot device state (everything lives
+        in the shared pools, addressed through block tables), so the
+        decode batch is COMPACTED host-side: only active rows are fed,
+        padded up to a power-of-two width — a half-empty engine stops
+        paying full-width attention, at the cost of at most
+        log2(n_slots) compiled decode shapes. Slot-resident caches are
+        positional, so that mode always decodes the full width.
+        """
         with self._cv:
             active = [(i, t) for i, t in enumerate(self._slots)
-                      if t is not None]
+                      if t is not None and i not in self._prefills]
             if not active:
                 return 0
             cur = self._cur.copy()
-        logits, self._caches = self._decode(
-            self.params, self._caches, jnp.asarray(cur))
+        if self._kv_paged:
+            idx = [i for i, _ in active]
+            for i in idx:
+                # lazy append: take a block only when the next position
+                # crosses into one (guaranteed by the reservation)
+                self._pcm.ensure(i, int(self._lengths[i]) + 1)
+            width = min(pow2_at_least(len(idx)), self.n_slots)
+            tables = self._pcm.tables(idx + [None] * (width - len(idx)))
+            lengths = np.zeros((width,), np.int32)
+            lengths[: len(idx)] = self._lengths[idx]
+            toks = np.full((width, 1), self._pad_id, np.int32)
+            toks[: len(idx), 0] = cur[idx, 0]
+            n_valid = np.zeros((width,), np.int32)
+            n_valid[: len(idx)] = 1
+            logits, self._pools = self._paged_step(
+                self.params, self._pools, jnp.asarray(tables),
+                jnp.asarray(lengths), jnp.asarray(toks),
+                jnp.asarray(n_valid))
+        else:
+            logits, self._caches = self._decode(
+                self.params, self._caches, jnp.asarray(cur))
         nxt = self._sample(logits)
         finished: list[GenerationTicket] = []
         emitted = 0
@@ -445,10 +741,12 @@ class ContinuousBatchingEngine:
             n_active = len(active)
             self._occupancy_counts[n_active] = \
                 self._occupancy_counts.get(n_active, 0) + 1
-            for slot, ticket in active:
+            for row, (slot, ticket) in enumerate(active):
                 if self._slots[slot] is not ticket:  # failed concurrently
                     continue
-                tok = int(nxt[slot])
+                if self._kv_paged:
+                    self._lengths[slot] += 1
+                tok = int(nxt[row if self._kv_paged else slot])
                 ticket._emit(tok)
                 emitted += 1
                 self.n_tokens += 1
@@ -464,18 +762,26 @@ class ContinuousBatchingEngine:
         return emitted
 
     def step(self) -> int:
-        """Admit waiting requests, then run one decode step.
+        """Admit waiting requests, advance prefills, run one decode step.
 
-        Returns the number of tokens emitted (first tokens from
-        admissions + one token per occupied slot). 0 means the engine is
-        idle. Manual-mode entry point; the background loop calls the same
-        path.
+        Returns the work done: tokens emitted plus (paged mode) prefill
+        pieces processed. 0 means the engine is idle. Manual-mode entry
+        point; the background loop calls the same path.
         """
         with self._step_lock:
-            return self._admit() + self._decode_once()
+            if self.paged:
+                self._admit_paged()
+                work = self._advance_prefills()
+            else:
+                work = self._admit()
+            with self._cv:
+                self.peak_active = max(
+                    self.peak_active,
+                    sum(t is not None for t in self._slots))
+            return work + self._decode_once()
 
     def run_until_drained(self, max_steps: Optional[int] = None) -> int:
-        """step() until no work remains; returns total tokens emitted."""
+        """step() until no work remains; returns total work units."""
         total = 0
         steps = 0
         while True:
@@ -500,11 +806,7 @@ class ContinuousBatchingEngine:
                     idle = not self._waiting and \
                         all(t is None for t in self._slots)
                     if idle or not self._drain_on_close:
-                        fail = list(self._waiting)
-                        fail.extend(t for t in self._slots if t is not None)
-                        self._waiting.clear()
-                        self._slots = [None] * self.n_slots
-                        self.n_failed += len(fail)
+                        fail = self._fail_all_locked()
                         self._cv.notify_all()
                         closing = True
                     else:
@@ -526,11 +828,7 @@ class ContinuousBatchingEngine:
                 err.__cause__ = e
                 with self._cv:
                     self._closed = True
-                    fail = list(self._waiting)
-                    fail.extend(t for t in self._slots if t is not None)
-                    self._waiting.clear()
-                    self._slots = [None] * self.n_slots
-                    self.n_failed += len(fail)
+                    fail = self._fail_all_locked()
                     self._cv.notify_all()
                 for t in fail:
                     t._finish(error=err)
@@ -552,12 +850,8 @@ class ContinuousBatchingEngine:
         elif drain:
             self.run_until_drained()
         else:
-            with self._cv:
-                fail = list(self._waiting)
-                fail.extend(t for t in self._slots if t is not None)
-                self._waiting.clear()
-                self._slots = [None] * self.n_slots
-                self.n_failed += len(fail)
+            with self._step_lock, self._cv:
+                fail = self._fail_all_locked()
             err = SchedulerError("engine closed without draining")
             for t in fail:
                 t._finish(error=err)

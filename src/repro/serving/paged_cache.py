@@ -1,0 +1,232 @@
+"""Paged KV-cache memory subsystem for the continuous-batching engine.
+
+The fixed-slot decode engine (`continuous_batching.ContinuousBatchingEngine`
+in its default mode) gives every slot a `cache_len`-token region of HBM for
+the whole lifetime of its sequence, so a 16-token query and a 900-token
+retrieval-augmented prompt cost exactly the same cache memory. RAG traffic
+is the worst case for that layout: augmented prompts have wildly bimodal
+lengths, and the long tail monopolizes admission. This module is the
+vLLM-style answer — one shared pool of fixed-size KV *blocks*, handed out
+on demand and returned on retirement, so concurrency is bounded by the
+number of tokens actually resident instead of `n_slots * cache_len`.
+
+`PagedCacheManager` is the host-side bookkeeping half of the subsystem:
+
+* **Fixed pool.** `n_blocks` blocks of `block_size` token positions each.
+  Physical block 0 is reserved as the *null block*: inactive decode rows
+  point every block-table entry at it, so their (masked, ignored) writes
+  can never corrupt a live sequence. `n_usable_blocks == n_blocks - 1`.
+* **Reservation-based admission.** `reserve(seq, max_tokens)` claims the
+  worst-case block budget for a sequence up front (prompt + max new
+  tokens). It raises `OutOfBlocks` — the backpressure signal — when the
+  pool cannot cover it; the engine leaves the request queued and retries
+  at the next token boundary. Because the budget is reserved before
+  admission, a running sequence can never hit mid-flight exhaustion.
+* **Lazy append.** Physical blocks are taken from the explicit free list
+  only as the sequence actually grows (`ensure(seq, n_tokens)`, one
+  block at a time — the vLLM "append" operation), so a sequence that
+  retires early via EOS hands its untouched budget back immediately.
+* **Block tables.** `table(seq)` / `tables(seqs)` render the per-sequence
+  physical-block lists as dense, null-padded int32 rows — the gather
+  indices the paged attention read path in `models/attention.py`
+  consumes inside the jitted decode step.
+
+The device-side half — the `(L, n_blocks, block_size, kh, hd)` K/V pools
+and the gather/scatter read/write path — lives with the models
+(`models/transformer.py` `init_paged_caches`/`paged_step`); the engine
+(`continuous_batching.py`) glues the two together and adds chunked
+prefill so long prompts stream into the pool in `prefill_chunk`-sized
+pieces interleaved with decode.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+NULL_BLOCK = 0  # physical block reserved for masked/inactive writes
+
+
+class OutOfBlocks(RuntimeError):
+    """Pool cannot cover a reservation — the admission backpressure signal."""
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold `n_tokens` token positions."""
+    return -(-n_tokens // block_size)
+
+
+def pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n (shape-bucketing for compiled steps)."""
+    width = 1
+    while width < n:
+        width *= 2
+    return width
+
+
+class PagedCacheManager:
+    """Free-list allocator + block tables over a fixed pool of KV blocks.
+
+    n_blocks: total physical blocks in the pool, INCLUDING the reserved
+        null block; `n_usable_blocks == n_blocks - 1` are allocatable.
+    block_size: token positions per block.
+    max_blocks_per_seq: width of every rendered block table (the static
+        gather shape the jitted decode step compiles against). A sequence
+        may never grow past `max_blocks_per_seq * block_size` tokens.
+
+    Sequences are keyed by an opaque hashable id (the engine uses slot
+    indices). All methods are plain-Python/numpy and O(blocks touched);
+    the manager is driven under the engine's step lock and does no
+    locking of its own.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, max_blocks_per_seq: int):
+        if n_blocks < 2:
+            raise ValueError("n_blocks must be >= 2 (block 0 is reserved)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if max_blocks_per_seq < 1:
+            raise ValueError("max_blocks_per_seq must be >= 1")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        # LIFO free list of physical ids; block 0 (NULL_BLOCK) is never free
+        self._free: list[int] = list(range(n_blocks - 1, NULL_BLOCK, -1))
+        self._blocks: dict = {}  # seq id -> [physical block ids]
+        self._reserved: dict = {}  # seq id -> total block budget
+        self.n_oob_events = 0  # reservation attempts refused (stats)
+
+    # --------------------------------------------------------------- sizing
+    @property
+    def n_usable_blocks(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Token positions the pool can hold across all sequences."""
+        return self.n_usable_blocks * self.block_size
+
+    @property
+    def max_seq_tokens(self) -> int:
+        """Token positions one sequence may occupy (table width cap)."""
+        return min(self.max_blocks_per_seq, self.n_usable_blocks) * self.block_size
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    def free_blocks(self) -> int:
+        """Blocks neither allocated nor spoken for by a reservation."""
+        reserved = sum(self._reserved.values())
+        allocated = sum(len(b) for b in self._blocks.values())
+        return len(self._free) - (reserved - allocated)
+
+    def seqs(self) -> list:
+        """Live sequence ids (reserved and not yet freed)."""
+        return list(self._reserved)
+
+    def __contains__(self, seq) -> bool:
+        return seq in self._reserved
+
+    # ---------------------------------------------------- reserve / release
+    def can_reserve(self, n_tokens: int) -> bool:
+        n = self.blocks_needed(n_tokens)
+        return n <= self.max_blocks_per_seq and n <= self.free_blocks()
+
+    def reserve(self, seq, n_tokens: int) -> int:
+        """Claim a `n_tokens` worst-case budget for `seq`; returns blocks.
+
+        Raises OutOfBlocks when the pool cannot cover the budget right
+        now (the caller should queue and retry) and ValueError when the
+        request exceeds the per-sequence table width — i.e. could NEVER
+        be admitted regardless of load.
+        """
+        if seq in self._reserved:
+            raise ValueError(f"sequence {seq!r} already has a reservation")
+        n = self.blocks_needed(n_tokens)
+        if n > self.max_blocks_per_seq:
+            msg = (
+                f"{n_tokens} tokens need {n} blocks but block tables are"
+                f" {self.max_blocks_per_seq} wide"
+                f" (max_seq_tokens={self.max_seq_tokens})"
+            )
+            raise ValueError(msg)
+        if n > self.free_blocks():
+            self.n_oob_events += 1
+            msg = (
+                f"{n_tokens} tokens need {n} blocks;"
+                f" {self.free_blocks()} of {self.n_usable_blocks} free"
+            )
+            raise OutOfBlocks(msg)
+        self._reserved[seq] = n
+        self._blocks[seq] = []
+        return n
+
+    def free(self, seq) -> int:
+        """Return every block (allocated or still budgeted) of `seq`."""
+        if seq not in self._reserved:
+            raise KeyError(f"sequence {seq!r} has no reservation")
+        blocks = self._blocks.pop(seq)
+        self._free.extend(reversed(blocks))  # LIFO: reuse hot blocks first
+        del self._reserved[seq]
+        return len(blocks)
+
+    # ------------------------------------------------------- allocate/append
+    def ensure(self, seq, n_tokens: int) -> list[int]:
+        """Grow `seq`'s physical blocks to cover `n_tokens` positions.
+
+        Appends whole blocks from the free list (lazily — only what the
+        sequence has actually grown into) and returns the ids appended.
+        Guaranteed to succeed within the sequence's reservation; growing
+        past it raises ValueError (an engine accounting bug, not load).
+        """
+        if seq not in self._reserved:
+            raise KeyError(f"sequence {seq!r} has no reservation")
+        need = self.blocks_needed(n_tokens)
+        if need > self._reserved[seq]:
+            msg = (
+                f"sequence {seq!r} grew to {n_tokens} tokens ({need} blocks)"
+                f" past its {self._reserved[seq]}-block reservation"
+            )
+            raise ValueError(msg)
+        added = []
+        blocks = self._blocks[seq]
+        while len(blocks) < need:
+            added.append(self._free.pop())
+            blocks.append(added[-1])
+        return added
+
+    def allocated(self, seq) -> list[int]:
+        return list(self._blocks[seq])
+
+    # ----------------------------------------------------------- block tables
+    def table(self, seq: Optional[object] = None) -> np.ndarray:
+        """(max_blocks_per_seq,) int32 row: physical ids, null-padded.
+
+        `seq=None` (or an unknown id) renders the all-null row used for
+        free/inactive decode lanes: every entry points at NULL_BLOCK so
+        the lane's masked write lands in the scratch block.
+        """
+        row = np.full((self.max_blocks_per_seq,), NULL_BLOCK, np.int32)
+        blocks = self._blocks.get(seq)
+        if blocks:
+            row[: len(blocks)] = blocks
+        return row
+
+    def tables(self, seqs) -> np.ndarray:
+        """(len(seqs), max_blocks_per_seq) int32 — one row per entry of
+        `seqs`; None/unknown entries render the null row."""
+        return np.stack([self.table(s) for s in seqs])
+
+    # ----------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        allocated = sum(len(b) for b in self._blocks.values())
+        return {
+            "n_usable_blocks": self.n_usable_blocks,
+            "block_size": self.block_size,
+            "n_seqs": len(self._reserved),
+            "allocated_blocks": allocated,
+            "reserved_blocks": sum(self._reserved.values()),
+            "free_blocks": self.free_blocks(),
+            "n_oob_events": self.n_oob_events,
+        }

@@ -18,6 +18,13 @@ completed retrieval straight into a `ContinuousBatchingEngine` decode
 slot — retrieval batches and decode slots share one open-loop pipeline.
 `generate_stream` is the retrieval-free variant; `decode_engine()` hands
 out the underlying engine for direct use.
+
+Serving memory (PR 4): `decode_engine(paged=True)` swaps the fixed
+per-slot cache regions for the shared block pool in
+`serving.paged_cache` with chunked prefill — RAG's bimodally-sized
+augmented prompts are exactly the workload fixed regions waste HBM on
+(see the module docstrings of `continuous_batching` / `paged_cache` and
+ROADMAP.md "Serving memory model").
 """
 from __future__ import annotations
 
@@ -145,6 +152,7 @@ class RagPipeline:
                   key: Optional[jax.Array] = None,
                   max_wait_ms: Optional[float] = None,
                   tenant_quantum: int = 1,
+                  tenant_weights: Optional[dict] = None,
                   start: Optional[bool] = None) -> AsyncBatchScheduler:
         """An AsyncBatchScheduler whose flushes run through this pipeline.
 
@@ -153,8 +161,10 @@ class RagPipeline:
         max_wait_ms starts the background flush loop: batches then form
         on the dual trigger (max_batch reached OR oldest ticket older
         than max_wait_ms) with no caller blocking, and per-tenant queues
-        are drained deficit-round-robin (`tenant_quantum` tickets per
-        visit). `start` overrides the thread choice explicitly."""
+        are drained weighted-deficit-round-robin (`tenant_quantum *
+        weight` tickets per visit; `tenant_weights` maps tenant name ->
+        weight, default 1.0). `start` overrides the thread choice
+        explicitly."""
         if start is None:
             start = max_wait_ms is not None
         return AsyncBatchScheduler(
@@ -162,6 +172,7 @@ class RagPipeline:
             max_batch=max_batch,
             max_wait_ms=max_wait_ms,
             quantum=tenant_quantum,
+            tenant_weights=tenant_weights,
             start=start,
         )
 
@@ -169,6 +180,10 @@ class RagPipeline:
                       cache_len: Optional[int] = None,
                       max_new_tokens: int = 32,
                       temperature: float = 0.0,
+                      paged: bool = False,
+                      block_size: Optional[int] = None,
+                      n_blocks: Optional[int] = None,
+                      prefill_chunk: Optional[int] = None,
                       start: bool = True) -> ContinuousBatchingEngine:
         """A ContinuousBatchingEngine over this pipeline's model.
 
@@ -177,6 +192,14 @@ class RagPipeline:
         generation keeps the batch full the way the async scheduler keeps
         retrieval batches full. `cache_len` defaults to
         `max_prompt_len + max_new_tokens` (every augmented prompt fits).
+
+        `paged=True` swaps the fixed per-slot cache regions for the
+        shared block pool (`serving.paged_cache`) with chunked prefill:
+        short queries stop paying long-prompt HBM, long augmented
+        prompts stop stalling admission, and `n_slots` can exceed what
+        fixed regions would allow at the same memory. `block_size` /
+        `n_blocks` / `prefill_chunk` pass straight through (n_blocks
+        defaults to the fixed-slot footprint).
         """
         if self.engine is None:
             raise TypeError("decode_engine requires a model "
@@ -189,7 +212,9 @@ class RagPipeline:
             self.engine.model, self.engine.params,
             n_slots=n_slots, cache_len=cache_len,
             eos_id=eos if eos < vocab else None,
-            temperature=temperature, start=start,
+            temperature=temperature,
+            paged=paged, block_size=block_size, n_blocks=n_blocks,
+            prefill_chunk=prefill_chunk, start=start,
         )
 
     def encode_prompt(self, text: str, retrieved_texts: Sequence[str]) -> list:
@@ -203,7 +228,11 @@ class RagPipeline:
                      max_wait_ms: float = 5.0,
                      key: Optional[jax.Array] = None,
                      generate: bool = False, max_new_tokens: int = 32,
-                     n_slots: int = 4, temperature: float = 0.0):
+                     n_slots: int = 4, temperature: float = 0.0,
+                     paged: bool = False,
+                     block_size: Optional[int] = None,
+                     n_blocks: Optional[int] = None,
+                     prefill_chunk: Optional[int] = None):
         """Stream results as they are served (completion order).
 
         `requests` is an iterable of query strings or (tenant, text)
@@ -237,7 +266,10 @@ class RagPipeline:
             # has started yet; the finally closes whatever did start
             engine = self.decode_engine(
                 n_slots=n_slots, max_new_tokens=max_new_tokens,
-                temperature=temperature, start=True) if generate else None
+                temperature=temperature, paged=paged,
+                block_size=block_size, n_blocks=n_blocks,
+                prefill_chunk=prefill_chunk,
+                start=True) if generate else None
             sched = self.scheduler(max_batch=max_batch, key=key,
                                    max_wait_ms=max_wait_ms, start=True)
 
@@ -307,7 +339,11 @@ class RagPipeline:
 
     def generate_stream(self, requests, max_new_tokens: int = 32,
                         n_slots: int = 4, temperature: float = 0.0,
-                        cache_len: Optional[int] = None):
+                        cache_len: Optional[int] = None,
+                        paged: bool = False,
+                        block_size: Optional[int] = None,
+                        n_blocks: Optional[int] = None,
+                        prefill_chunk: Optional[int] = None):
         """Stream plain (retrieval-free) generations in completion order.
 
         `requests` is an iterable of prompt strings or (tenant, text)
@@ -331,6 +367,8 @@ class RagPipeline:
         engine = self.decode_engine(
             n_slots=n_slots, cache_len=cache_len,
             max_new_tokens=max_new_tokens, temperature=temperature,
+            paged=paged, block_size=block_size, n_blocks=n_blocks,
+            prefill_chunk=prefill_chunk,
             start=True)
         vocab = self.engine.model.cfg.vocab_size
 

@@ -127,6 +127,58 @@ def test_quantum_batches_per_tenant():
     assert [t.flush_seq for t in b] == [0, 0, 1, 1]
 
 
+def test_weighted_drr_2x_tenant_gets_2x_throughput_under_saturation():
+    """A weight-2 tenant must get ~2x a weight-1 tenant's share of every
+    saturated batch — the weighted-DRR contract."""
+    sched, _ = make(max_batch=6, max_wait_ms=None, tenant_weights={"pro": 2.0})
+    pro = [sched.submit(f"p#{i}", k=1, tenant="pro") for i in range(30)]
+    basic = [sched.submit(f"b#{i}", k=1, tenant="basic") for i in range(30)]
+    sched.flush()
+    # both queues stay saturated for the first 7 flushes (30 pro tickets
+    # drain at 4/flush): per-flush split is exactly 4:2
+    for seq in range(7):
+        n_pro = sum(t.flush_seq == seq for t in pro)
+        n_basic = sum(t.flush_seq == seq for t in basic)
+        assert (n_pro, n_basic) == (4, 2), (seq, n_pro, n_basic)
+    # served-so-far ratio tracks the weight ratio while saturated
+    assert sum(t.flush_seq < 5 for t in pro) == 2 * sum(t.flush_seq < 5 for t in basic)
+    # nobody is starved and per-tenant FIFO order survives the weighting
+    assert all(t.done() for t in pro + basic)
+    for ts in (pro, basic):
+        order = sorted(ts, key=lambda t: (t.flush_seq, list(t.doc_ids)))
+        assert [t.text for t in order] == [t.text for t in ts]
+
+
+def test_weighted_drr_fractional_weight_accumulates_deficit():
+    """weight=0.5 earns a ticket only every OTHER visit: the deficit
+    carries across flushes instead of rounding to zero forever."""
+    sched, _ = make(max_batch=2, max_wait_ms=None, tenant_weights={"slow": 0.5})
+    fast = [sched.submit(f"f#{i}", k=1, tenant="fast") for i in range(6)]
+    slow = [sched.submit(f"s#{i}", k=1, tenant="slow") for i in range(3)]
+    sched.flush()
+    assert [t.flush_seq for t in fast] == [0, 0, 1, 2, 3, 3]
+    assert [t.flush_seq for t in slow] == [1, 2, 4]
+
+
+def test_set_tenant_weight_live_and_validation():
+    sched, _ = make(max_batch=4, max_wait_ms=None)
+    assert sched.tenant_weight("any") == 1.0
+    sched.set_tenant_weight("vip", 3.0)
+    assert sched.tenant_weight("vip") == 3.0
+    with pytest.raises(ValueError, match="weight"):
+        sched.set_tenant_weight("vip", 0.0)
+    with pytest.raises(ValueError, match="weight"):
+        # inf would overflow int(credit) inside the flush loop
+        sched.set_tenant_weight("vip", float("inf"))
+    with pytest.raises(ValueError, match="weight"):
+        AsyncBatchScheduler(value_search, tenant_weights={"x": -1})
+    vip = [sched.submit(f"v#{i}", k=1, tenant="vip") for i in range(8)]
+    std = [sched.submit(f"s#{i}", k=1, tenant="std") for i in range(8)]
+    sched.flush()
+    assert sum(t.flush_seq == 0 for t in vip) == 3
+    assert sum(t.flush_seq == 0 for t in std) == 1
+
+
 # ------------------------------------------------------- mixed-k batching
 def test_mixed_k_single_batch_truncates_rows():
     seen_k = []

@@ -1,0 +1,83 @@
+"""Committed BENCH_*.json artifacts: shared schema + registration.
+
+PR 2's async-serving bench never landed its baseline JSON, which made
+the "perf trajectory" story unfalsifiable — nothing guaranteed the next
+committed artifact would even be comparable. This locks the contract:
+every committed `BENCH_*.json` is `{"config": {...}, "rows": [...]}`
+with a non-empty homogeneous row list, finite leaf values, and a
+`benchmarks.bench_<name>` module that is registered in
+`benchmarks.run.SECTIONS` (so `python -m benchmarks.run` reproduces
+every committed artifact).
+"""
+import importlib
+import json
+import math
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# baselines that must exist at the repo root (extend as benches land)
+EXPECTED = {
+    "BENCH_async_serving.json",
+    "BENCH_continuous_batching.json",
+    "BENCH_paged_cache.json",
+}
+
+
+def _bench_jsons() -> list[Path]:
+    return sorted(REPO_ROOT.glob("BENCH_*.json"))
+
+
+def _leaves(obj, path="$"):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            assert isinstance(k, str), f"{path}: non-string key {k!r}"
+            yield from _leaves(v, f"{path}.{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _leaves(v, f"{path}[{i}]")
+    else:
+        yield path, obj
+
+
+def test_expected_baselines_are_committed():
+    names = {p.name for p in _bench_jsons()}
+    missing = EXPECTED - names
+    assert not missing, f"missing committed baselines: {sorted(missing)}"
+
+
+@pytest.mark.parametrize("path", _bench_jsons(), ids=lambda p: p.name)
+def test_bench_json_matches_shared_schema(path):
+    data = json.loads(path.read_text())
+    assert set(data) == {"config", "rows"}, f"{path.name}: not {{config, rows}}"
+    assert isinstance(data["config"], dict) and data["config"]
+    rows = data["rows"]
+    assert isinstance(rows, list) and rows, f"{path.name}: empty rows"
+    keys = set(rows[0])
+    for i, row in enumerate(rows):
+        assert isinstance(row, dict)
+        assert set(row) == keys, f"{path.name} row {i}: keys differ: {set(row) ^ keys}"
+    for leaf_path, v in _leaves(data):
+        ok = isinstance(v, (str, int, float, bool)) or v is None
+        assert ok, f"{path.name} {leaf_path}: unexpected leaf type {type(v)}"
+        if isinstance(v, float):
+            assert math.isfinite(v), f"{path.name} {leaf_path}: {v}"
+
+
+@pytest.mark.parametrize("path", _bench_jsons(), ids=lambda p: p.name)
+def test_bench_json_producer_is_registered_in_run(path):
+    """BENCH_<name>.json must come from benchmarks.bench_<name>, and that
+    module must be wired into the benchmarks.run harness."""
+    sys.path.insert(0, str(REPO_ROOT))
+    try:
+        run = importlib.import_module("benchmarks.run")
+        mod_name = f"benchmarks.bench_{path.stem.removeprefix('BENCH_')}"
+        mod = importlib.import_module(mod_name)
+        assert hasattr(mod, "main"), f"{mod_name} has no main()"
+        registered = any(m is mod for _, m in run.SECTIONS)
+        assert registered, f"{mod_name} missing from benchmarks.run.SECTIONS"
+    finally:
+        sys.path.remove(str(REPO_ROOT))

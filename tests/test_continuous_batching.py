@@ -257,6 +257,52 @@ def test_close_drains_by_default():
         assert np.array_equal(t.result(), [2, 3, 4])
 
 
+# ----------------------------------------- cache_len admission boundary
+def test_boundary_exact_fit_admits_and_completes_dense():
+    """len(prompt) + max_new_tokens == cache_len must admit and finish on
+    dense DecodeCaches (the `>` check's untested boundary): the last
+    decode writes at position cache_len - 2 and nothing overflows."""
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    cache_len, prompt_len, max_new = 16, 10, 6
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=prompt_len)
+    ref = np.asarray(GenerationEngine(model, params).generate(
+        jnp.asarray(prompt, jnp.int32)[None], max_new_tokens=max_new,
+        cache_len=cache_len))[0]
+    engine = ContinuousBatchingEngine(model, params, n_slots=1,
+                                      cache_len=cache_len)
+    t = engine.submit(prompt, max_new_tokens=max_new)  # exactly cache_len
+    out = t.result()
+    assert len(out) == max_new
+    assert np.array_equal(out, ref)
+
+
+def test_boundary_exact_fit_admits_and_completes_mamba():
+    """Same boundary on a Mamba state tree (O(1) state, length-only
+    bookkeeping): the submit() check must not be off by one there
+    either."""
+    cfg = get_config("mamba2-2.7b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    cache_len, prompt_len, max_new = 12, 7, 5
+    prompt = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, size=prompt_len)
+    ref = np.asarray(GenerationEngine(model, params).generate(
+        jnp.asarray(prompt, jnp.int32)[None], max_new_tokens=max_new,
+        cache_len=cache_len))[0]
+    engine = ContinuousBatchingEngine(model, params, n_slots=1,
+                                      cache_len=cache_len)
+    t = engine.submit(prompt, max_new_tokens=max_new)
+    out = t.result()
+    assert len(out) == max_new
+    assert np.array_equal(out, ref)
+    # one past the boundary still rejects
+    with pytest.raises(SchedulerError, match="cache_len"):
+        engine.submit(prompt, max_new_tokens=max_new + 1)
+
+
 # ------------------------------------- GenerationEngine fixes (satellites)
 def test_generation_engine_freezes_rows_after_eos():
     model = ScriptModel(vocab=10)
