@@ -251,6 +251,7 @@ def serve_rag_open_loop_generate(
         k: int = 3, max_new_tokens: int = 16, n_slots: int = 4,
         paged: bool = False, block_size: Optional[int] = None,
         n_blocks: Optional[int] = None, prefill_chunk: Optional[int] = None,
+        prefix_sharing: Optional[bool] = None,
         arch: str = "phi4-mini-3.8b", path: str = "int_exact",
         seed: int = 0, pipe: Optional[RagPipeline] = None) -> dict:
     """Open-loop retrieval+generation through the shared streaming front door.
@@ -267,6 +268,9 @@ def serve_rag_open_loop_generate(
     `paged=True` serves decode from the shared KV block pool
     (`serving.paged_cache`) with chunked prefill; the report then also
     carries pool utilization and admission-backpressure counters.
+    `prefix_sharing` (None: on iff paged attention) maps identical
+    retrieved-context prefixes onto shared blocks with copy-on-write,
+    adding shared-block / CoW / hit-rate counters to the report.
     """
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
@@ -284,7 +288,8 @@ def serve_rag_open_loop_generate(
                                 max_new_tokens=max_new_tokens,
                                 paged=paged, block_size=block_size,
                                 n_blocks=n_blocks,
-                                prefill_chunk=prefill_chunk, start=True)
+                                prefill_chunk=prefill_chunk,
+                                prefix_sharing=prefix_sharing, start=True)
 
     # compile every serving shape off-clock: the (max_batch, dim) search,
     # the (len<=max_prompt_len,) prefill, and the (n_slots, 1) decode step
@@ -301,8 +306,10 @@ def serve_rag_open_loop_generate(
     def on_retrieved(rt):
         try:
             texts_k = [pipe.doc_texts[i] for i in rt.doc_ids if i >= 0]
-            gt = engine.submit(pipe.encode_prompt(rt.text, texts_k),
-                               max_new_tokens=max_new_tokens, tenant=rt.tenant)
+            prompt, prefix_len = pipe.encode_prompt_with_prefix(
+                rt.text, texts_k)
+            gt = engine.submit(prompt, max_new_tokens=max_new_tokens,
+                               tenant=rt.tenant, prefix_len=prefix_len)
             gt.retrieval = rt
             gens.append(gt)
         except Exception:  # noqa: BLE001 - failed retrieval or closed engine
@@ -372,7 +379,9 @@ def serve_rag_open_loop_generate(
     }
     if paged:
         out["n_backpressure"] = est["n_backpressure"]
+        out["n_skip_ahead"] = est.get("n_skip_ahead", 0)
         out["n_prefill_chunks"] = est.get("n_prefill_chunks", 0)
+        out["prefix_sharing"] = est.get("prefix_sharing", False)
         if "pool" in est:
             out["pool"] = est["pool"]
     out.update(_percentiles_ms(e2e_s))
@@ -418,6 +427,12 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="--paged: prompt tokens prefilled per engine step "
                          "(default 32)")
+    ap.add_argument("--prefix-sharing", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="--paged: share identical retrieved-context "
+                         "prefixes as refcounted blocks with copy-on-write "
+                         "divergence (default: on for paged attention; "
+                         "--no-prefix-sharing disables)")
     args = ap.parse_args()
     if args.rag and args.open_loop and args.generate:
         out = serve_rag_open_loop_generate(
@@ -429,6 +444,7 @@ def main() -> None:
             n_slots=args.n_slots, paged=args.paged,
             block_size=args.block_size, n_blocks=args.n_blocks,
             prefill_chunk=args.prefill_chunk,
+            prefix_sharing=args.prefix_sharing,
             arch=args.arch or "phi4-mini-3.8b")
         print(f"open-loop generate: offered {out['offered_qps']:.0f} q/s, "
               f"finished {out['n_finished']}/{out['n_queries']} requests "
@@ -446,8 +462,17 @@ def main() -> None:
             pool = out.get("pool", {})
             print(f"paged: {out['n_prefill_chunks']} prefill chunks, "
                   f"{out['n_backpressure']} backpressure deferrals, "
+                  f"{out['n_skip_ahead']} skip-ahead admissions, "
                   f"pool {pool.get('free_blocks', '?')}/"
                   f"{pool.get('n_usable_blocks', '?')} blocks free at end")
+            if out.get("prefix_sharing"):
+                print(f"prefix sharing: hit rate "
+                      f"{pool.get('prefix_hit_rate', 0.0):.2f} "
+                      f"({pool.get('n_prefix_hits', 0)} hits / "
+                      f"{pool.get('n_prefix_misses', 0)} misses), "
+                      f"{pool.get('n_cow_copies', 0)} CoW copies, "
+                      f"{pool.get('n_shared_blocks', 0)} blocks still "
+                      f"shared at end")
         return
     if args.rag and args.open_loop:
         out = serve_rag_open_loop(

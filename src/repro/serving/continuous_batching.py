@@ -34,13 +34,34 @@ Two *cache memory models* sit under the slots (PR 4):
   the jitted step gathers each row's window through its block table
   (`models/attention.paged_attend`). `submit()` then rejects only
   requests that could NEVER fit the pool — a temporarily exhausted pool
-  queues the request and admission retries at the next token boundary.
-  Prompts prefill in `prefill_chunk`-sized pieces *interleaved with
-  decode* (one chunk per engine step), so a long prompt no longer
+  queues the request and admission retries at the next token boundary
+  with bounded skip-ahead: up to `admit_lookahead` later requests that
+  fit NOW are admitted past a deferred head, and after `max_head_skips`
+  skips admission falls back to strict FIFO so the head is never
+  starved. Prompts prefill in `prefill_chunk`-sized pieces *interleaved
+  with decode* (one chunk per engine step), so a long prompt no longer
   freezes every running sequence. Models without a pageable KV cache —
   Mamba's O(1) SSM state — keep their state slot-resident under
   `paged=True` and still get chunked (b=1, `prefill_chunk` tokens per
   step) admission. See ROADMAP.md "Serving memory model".
+
+With `prefix_sharing=True` (paged attention only) the engine becomes a
+copy-on-write prefix cache over that pool: `submit(prefix_len=...)`
+hashes the prompt's shareable prefix into a content key, the first
+sequence to prefill it publishes its blocks under that key
+(`PagedCacheManager.register_prefix`), and every later identical prefix
+maps onto the SAME physical blocks — refcount++ instead of allocation,
+and chunked prefill skips straight to the unique suffix (the shared KV
+is already resident). Requests whose key is mid-publication are briefly
+deferred in the queue (skip-ahead lets unrelated requests pass) and
+attach on the next boundary. Before any scatter, the engine asks the
+allocator for a copy-on-write barrier (`prepare_write`): a block still
+shared by someone else is detached onto a fresh block, copied
+device-side (one jitted block copy, `_copy_block`), and swapped in the
+table, so divergent continuations never corrupt shared KV. The gather
+path (`models/attention.paged_attend`) is untouched by design — sharing
+is purely a block-table/allocator concern, which the three-way parity
+suite in tests/test_prefix_sharing.py demonstrates.
 
 Tickets mirror the `AsyncBatchScheduler` futures API (`result(timeout)`,
 `done()`, `add_done_callback`) and add `token_stream()`: a blocking iterator
@@ -65,6 +86,8 @@ placement; use greedy when reproducibility across admission orders matters.
 
 from __future__ import annotations
 
+import hashlib
+import itertools
 import queue as _queue
 import threading
 import time
@@ -102,6 +125,8 @@ class GenerationTicket:
         self.first_token_s: Optional[float] = None
         self.wait_s: Optional[float] = None
         self.slot: Optional[int] = None
+        self.prefix_key: Optional[str] = None  # content hash of the
+        self.prefix_span: int = 0  # shareable prompt prefix (paged mode)
         self.tokens: list[int] = []
         self._token_q: _queue.SimpleQueue = _queue.SimpleQueue()
         self._event = threading.Event()
@@ -198,12 +223,14 @@ class GenerationTicket:
 class _Prefill:
     """In-flight chunked prefill of one admitted sequence (paged mode)."""
 
-    __slots__ = ("ticket", "pos", "caches1")
+    __slots__ = ("ticket", "pos", "caches1", "publish_key", "publish_span")
 
     def __init__(self, ticket: GenerationTicket, caches1=None):
         self.ticket = ticket
         self.pos = 0          # prompt tokens processed so far
         self.caches1 = caches1  # b=1 cache tree (slot-resident models only)
+        self.publish_key = None   # prefix key to register once pos >= span
+        self.publish_span = 0
 
 
 class ContinuousBatchingEngine:
@@ -228,6 +255,17 @@ class ContinuousBatchingEngine:
         headroom for short sequences.
     prefill_chunk: paged-mode admission granularity — prompt tokens
         advanced per engine step per admitting sequence (default 32).
+    prefix_sharing: map identical prompt prefixes onto the same physical
+        blocks with copy-on-write divergence (paged attention models
+        only; see module docstring). `submit(prefix_len=...)` bounds the
+        shareable span; without a hint the whole prompt (minus the final
+        token, which is always recomputed for logits) is the candidate.
+    admit_lookahead: paged admission skip-ahead bound — how many queued
+        requests past a deferred head are examined for one that fits the
+        pool right now (default 4; 0 restores strict FIFO).
+    max_head_skips: starvation guard — after the same head request has
+        been skipped this many times, admission reverts to strict FIFO
+        until it gets in (default 16).
     clock: monotonic-seconds callable, injectable for deterministic tests.
     start: spawn the background decode loop. With start=False the engine
         is in *manual mode*: call `step()` yourself (or let
@@ -255,6 +293,9 @@ class ContinuousBatchingEngine:
         block_size: Optional[int] = None,
         n_blocks: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
+        prefix_sharing: bool = False,
+        admit_lookahead: Optional[int] = None,
+        max_head_skips: Optional[int] = None,
         clock: Callable[[], float] = time.monotonic,
         start: bool = False,
     ):
@@ -262,11 +303,14 @@ class ContinuousBatchingEngine:
             raise ValueError("n_slots must be >= 1")
         if cache_len < 2:
             raise ValueError("cache_len must be >= 2")
-        paged_knobs = (block_size, n_blocks, prefill_chunk)
-        if not paged and any(k is not None for k in paged_knobs):
+        paged_knobs = (block_size, n_blocks, prefill_chunk,
+                       admit_lookahead, max_head_skips)
+        if not paged and (any(k is not None for k in paged_knobs)
+                          or prefix_sharing):
             raise ValueError(
-                "block/chunk knobs (block_size, n_blocks, prefill_chunk) "
-                "require paged=True")
+                "block/chunk/sharing knobs (block_size, n_blocks, "
+                "prefill_chunk, prefix_sharing, admit_lookahead, "
+                "max_head_skips) require paged=True")
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -289,15 +333,18 @@ class ContinuousBatchingEngine:
         self._kv_paged = paged and supports_paged_kv(model)
         self._pcm: Optional[PagedCacheManager] = None
         if paged:
-            if not self._kv_paged and (block_size is not None or n_blocks is not None):
+            if not self._kv_paged and (block_size is not None
+                                       or n_blocks is not None
+                                       or prefix_sharing):
                 # slot-resident state has no pool: explicit pool geometry
-                # would silently vanish — say so instead
+                # or sharing would silently vanish — say so instead
                 import warnings
 
                 warnings.warn(
                     f"{type(model).__name__} has no pageable KV cache; "
-                    "block_size/n_blocks are ignored (state stays "
-                    "slot-resident, only chunked admission applies)",
+                    "block_size/n_blocks/prefix_sharing are ignored "
+                    "(state stays slot-resident, only chunked admission "
+                    "applies)",
                     RuntimeWarning, stacklevel=2)
             block_size = block_size or 16
             if block_size < 1:
@@ -306,6 +353,15 @@ class ContinuousBatchingEngine:
             self.prefill_chunk = prefill_chunk or 32
             if self.prefill_chunk < 1:
                 raise ValueError("prefill_chunk must be >= 1")
+            self.admit_lookahead = 4 if admit_lookahead is None \
+                else admit_lookahead
+            if self.admit_lookahead < 0:
+                raise ValueError("admit_lookahead must be >= 0")
+            self.max_head_skips = 16 if max_head_skips is None \
+                else max_head_skips
+            if self.max_head_skips < 1:
+                raise ValueError("max_head_skips must be >= 1")
+        self.prefix_sharing = bool(prefix_sharing) and self._kv_paged
         if self._kv_paged:
             if n_blocks is None:
                 n_blocks = blocks_for(n_slots * cache_len, block_size) + 1
@@ -316,6 +372,8 @@ class ContinuousBatchingEngine:
             self._paged_step = jax.jit(
                 lambda p, pools, tbl, ln, tok, nv: model.paged_step(
                     p, pools, tbl, ln, tok, nv))
+            self._pool_block_axes = self._detect_block_axes(block_size)
+            self._copy_block = jax.jit(self._copy_block_impl)
             self._lengths = np.zeros((n_slots,), np.int64)
             self._caches = None
         else:
@@ -344,7 +402,14 @@ class ContinuousBatchingEngine:
         self.n_finished = 0
         self.n_failed = 0
         self.n_backpressure = 0  # admissions deferred by pool exhaustion
+        self.n_skip_ahead = 0  # admissions that jumped a deferred head
         self.peak_active = 0
+        # prefix keys being published: key -> owning slot. Requests with a
+        # matching key are deferred in the queue (skip-ahead lets others
+        # pass) and attach the registered blocks on a later boundary.
+        self._publishing: dict[str, int] = {}
+        self._head_ticket: Optional[GenerationTicket] = None
+        self._head_skips = 0
         self._occupancy_counts: dict[int, int] = {}
         self._thread: Optional[threading.Thread] = None
         if start:
@@ -354,6 +419,23 @@ class ContinuousBatchingEngine:
             self._thread.start()
 
     # ------------------------------------------------------- cache plumbing
+    @staticmethod
+    def _unique_diff_axes(big, small, what: str):
+        """Per-leaf axis on which two pytrees of shapes differ — the
+        shape-diff trick behind both batch-axis and block-axis detection;
+        raises when any leaf has no single distinguishing axis."""
+        axes = []
+        for b_l, s_l in zip(jax.tree_util.tree_leaves(big),
+                            jax.tree_util.tree_leaves(small)):
+            diff = [i for i, (a, c) in enumerate(zip(b_l.shape, s_l.shape))
+                    if a != c]
+            if len(diff) != 1:
+                raise ValueError(
+                    f"unsupported {what} layout: leaf "
+                    f"{b_l.shape} vs {s_l.shape} has no unique axis")
+            axes.append(diff[0])
+        return axes
+
     def _detect_batch_axes(self):
         """Per-leaf batch axis of the decode-cache pytree, found by shape
         diffing init_caches at two batch sizes — model-agnostic, so dense
@@ -361,17 +443,38 @@ class ContinuousBatchingEngine:
         state trees both slot-write correctly."""
         big = jax.eval_shape(lambda: self.model.init_caches(2, self.cache_len, 0))
         one = jax.eval_shape(lambda: self.model.init_caches(1, self.cache_len, 0))
-        axes = []
-        for b_l, o_l in zip(jax.tree_util.tree_leaves(big),
-                            jax.tree_util.tree_leaves(one)):
-            diff = [i for i, (a, c) in enumerate(zip(b_l.shape, o_l.shape))
-                    if a != c]
-            if len(diff) != 1:
-                raise ValueError(
-                    "unsupported cache layout: leaf "
-                    f"{b_l.shape} vs {o_l.shape} has no unique batch axis")
-            axes.append(diff[0])
-        return axes
+        return self._unique_diff_axes(big, one, "cache")
+
+    def _detect_block_axes(self, block_size: int):
+        """Per-leaf physical-block axis of the paged-pool pytree, found by
+        shape diffing init_paged_caches at two pool sizes — model-agnostic
+        the same way `_detect_batch_axes` is, so the jitted copy-on-write
+        block copy works for dense `(L, n_blocks, bs, kh, hd)` pools and
+        the flat test pools alike."""
+        big = jax.eval_shape(
+            lambda: self.model.init_paged_caches(3, block_size))
+        two = jax.eval_shape(
+            lambda: self.model.init_paged_caches(2, block_size))
+        return self._unique_diff_axes(big, two, "paged-pool")
+
+    def _copy_block_impl(self, pools, src, dst):
+        """Copy physical block `src` onto `dst` in every pool leaf — the
+        device half of a copy-on-write detachment."""
+        leaves, treedef = jax.tree_util.tree_flatten(pools)
+        out = [
+            jax.lax.dynamic_update_slice_in_dim(
+                leaf, jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=ax),
+                dst, axis=ax)
+            for leaf, ax in zip(leaves, self._pool_block_axes)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _cow_barrier(self, seq: int, start: int, end: int) -> None:
+        """Detach + device-copy every shared block a scatter into
+        positions [start, end) of `seq` would touch."""
+        for src, dst in self._pcm.prepare_write(seq, start, end):
+            self._pools = self._copy_block(
+                self._pools, jnp.int32(src), jnp.int32(dst))
 
     def _write_slot_impl(self, full, one, slot):
         """Write a b=1 cache tree into slot `slot` of the batched tree."""
@@ -411,17 +514,27 @@ class ContinuousBatchingEngine:
         prompt: Sequence[int],
         max_new_tokens: int = 32,
         tenant: str = DEFAULT_TENANT,
+        prefix_len: Optional[int] = None,
     ) -> GenerationTicket:
         """Enqueue one prompt; returns immediately with a GenerationTicket.
 
         The request is admitted into a decode slot at the next token
         boundary with a free slot (paged mode: and enough free pool
         blocks to reserve its worst-case budget — a temporarily
-        exhausted pool queues the request instead of rejecting it).
-        Raises SchedulerError if the engine is closed or the request
-        could NEVER be served: fixed-slot mode when `len(prompt) +
-        max_new_tokens > cache_len`, paged mode when the worst case
+        exhausted pool queues the request instead of rejecting it, and
+        bounded skip-ahead may admit later queued requests that fit
+        now). Raises SchedulerError if the engine is closed or the
+        request could NEVER be served: fixed-slot mode when `len(prompt)
+        + max_new_tokens > cache_len`, paged mode when the worst case
         exceeds the block-table width or the whole pool.
+
+        `prefix_len` bounds the shareable prompt prefix under
+        `prefix_sharing=True`: the first `prefix_len` tokens (e.g. the
+        retrieved-document context of a RAG prompt) are hashed into a
+        content key, and identical prefixes share physical KV blocks
+        with copy-on-write divergence. Ignored when sharing is off;
+        `None` offers the whole prompt. The final prompt token is never
+        shared — it is always recomputed to produce the first logits.
         """
         prompt = np.asarray(list(prompt), np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
@@ -443,6 +556,15 @@ class ContinuousBatchingEngine:
                 f"request needs {prompt.size} prompt + {max_new_tokens} new "
                 f"tokens but cache_len is {self.cache_len}")
         t = GenerationTicket(self, prompt, max_new_tokens, tenant)
+        if self.prefix_sharing:
+            span = int(prompt.size) - 1
+            if prefix_len is not None:
+                span = min(int(prefix_len), span)
+            if span >= self.block_size:
+                # content-addressed: the key IS the prefix tokens, so two
+                # prompts share iff their shareable spans are bit-identical
+                t.prefix_key = hashlib.sha1(prompt[:span].tobytes()).hexdigest()
+                t.prefix_span = span
         with self._cv:
             if self._closed:
                 raise SchedulerError("engine is closed")
@@ -483,8 +605,10 @@ class ContinuousBatchingEngine:
             if self.paged:
                 out["n_prefill_chunks"] = self.n_prefill_chunks
                 out["n_backpressure"] = self.n_backpressure
+                out["n_skip_ahead"] = self.n_skip_ahead
                 out["prefill_chunk"] = self.prefill_chunk
             if self._kv_paged:
+                out["prefix_sharing"] = self.prefix_sharing
                 out["pool"] = self._pcm.stats()
             return out
 
@@ -506,6 +630,10 @@ class ContinuousBatchingEngine:
             if slot in self._pcm:
                 self._pcm.free(slot)
             self._lengths[slot] = 0
+            # a failed/retired publisher unblocks deferred same-key
+            # requests: the next one to admit becomes the new owner
+            for key in [k for k, s in self._publishing.items() if s == slot]:
+                del self._publishing[key]
 
     def _retire_locked(self, slot: int) -> None:
         self._slots[slot] = None
@@ -589,29 +717,75 @@ class ContinuousBatchingEngine:
 
         No tokens are emitted here — prompts stream through
         `_advance_prefills` one `prefill_chunk` per step. Admission is
-        FIFO: a head request the pool cannot cover right now blocks
-        later (possibly smaller) ones, trading peak utilization for
-        no-starvation; each deferral bumps `n_backpressure`.
+        FIFO with bounded skip-ahead: when the head request cannot
+        reserve right now (pool exhaustion bumps `n_backpressure`; a
+        prefix mid-publication defers without counting), up to
+        `admit_lookahead` later requests are examined and the first
+        that fits is admitted in its place (`n_skip_ahead`). After
+        `max_head_skips` skips of the same head, admission reverts to
+        strict FIFO until that head gets in — bounded lookahead, so a
+        big request is delayed but never starved.
         """
         admitted = 0
+        head_counted = False  # bump n_backpressure once per step, like PR 4
         while True:
             with self._cv:
                 free = self._free_slots_locked()
                 if not free or not self._waiting:
                     return admitted
-                ticket = self._waiting[0]
+                # peek only what admission can examine, not the whole queue
+                waiting = list(itertools.islice(
+                    self._waiting, 1 + self.admit_lookahead))
+            head = waiting[0]
+            if head is not self._head_ticket:
+                self._head_ticket, self._head_skips = head, 0
+            lookahead = (self.admit_lookahead
+                         if self._head_skips < self.max_head_skips else 0)
+            ticket = None
+            head_deferred = False
+            for cand in waiting[: 1 + lookahead]:
                 if self._kv_paged:
-                    need = int(ticket.prompt.size) + ticket.max_new_tokens
-                    if not self._pcm.can_reserve(need):
-                        self.n_backpressure += 1
-                        return admitted
-                self._waiting.popleft()
+                    if (cand.prefix_key is not None
+                            and cand.prefix_key in self._publishing):
+                        continue  # prefix mid-publication: attach later
+                    need = int(cand.prompt.size) + cand.max_new_tokens
+                    if not self._pcm.can_reserve(
+                            need, prefix_key=cand.prefix_key):
+                        if cand is head:
+                            head_deferred = True
+                        continue
+                ticket = cand
+                break
+            with self._cv:
+                if head_deferred and not head_counted:
+                    self.n_backpressure += 1
+                    head_counted = True
+                if ticket is None:
+                    return admitted
+                if ticket is not head:
+                    self._head_skips += 1
+                    self.n_skip_ahead += 1
+                else:
+                    self._head_ticket, self._head_skips = None, 0
+                try:
+                    self._waiting.remove(ticket)
+                except ValueError:  # failed/closed concurrently
+                    continue
                 slot = free[0]
                 self._slots[slot] = ticket
             if self._kv_paged:
-                self._pcm.reserve(slot, need)
-                self._lengths[slot] = 0
+                need = int(ticket.prompt.size) + ticket.max_new_tokens
+                self._pcm.reserve(slot, need, prefix_key=ticket.prefix_key)
+                shared = self._pcm.shared_tokens(slot)
+                self._lengths[slot] = shared
                 pre = _Prefill(ticket)
+                # prefix hit: the shared KV is already resident — chunked
+                # prefill starts at the unique suffix
+                pre.pos = shared
+                if shared == 0 and ticket.prefix_key is not None:
+                    self._publishing[ticket.prefix_key] = slot
+                    pre.publish_key = ticket.prefix_key
+                    pre.publish_span = ticket.prefix_span
             else:
                 # slot-resident state (SSM / no pageable KV): chunked
                 # admission streams into a private b=1 cache, written
@@ -646,6 +820,13 @@ class ContinuousBatchingEngine:
             work += 1
             with self._cv:
                 self.n_prefill_chunks += 1
+            if pre.publish_key is not None and pre.pos >= pre.publish_span:
+                # the prefix KV is fully resident: publish it so identical
+                # prefixes map onto these blocks from now on
+                self._pcm.register_prefix(
+                    pre.publish_key, slot, pre.publish_span)
+                self._publishing.pop(pre.publish_key, None)
+                pre.publish_key = None
             if done:
                 del self._prefills[slot]
                 self._emit_first_token(slot, ticket, tok)
@@ -661,6 +842,7 @@ class ContinuousBatchingEngine:
         n = min(self.prefill_chunk, int(prompt.size) - pre.pos)
         if self._kv_paged:
             self._pcm.ensure(slot, pre.pos + n)
+            self._cow_barrier(slot, pre.pos, pre.pos + n)
             toks = np.zeros((1, self.prefill_chunk), np.int32)
             toks[0, :n] = prompt[pre.pos : pre.pos + n]
             # narrow the gather window to the blocks this chunk can see,
@@ -716,8 +898,12 @@ class ContinuousBatchingEngine:
             idx = [i for i, _ in active]
             for i in idx:
                 # lazy append: take a block only when the next position
-                # crosses into one (guaranteed by the reservation)
-                self._pcm.ensure(i, int(self._lengths[i]) + 1)
+                # crosses into one (guaranteed by the reservation); then
+                # detach any block a later prefix hit is still sharing
+                # (the mid-decode divergence half of copy-on-write)
+                li = int(self._lengths[i])
+                self._pcm.ensure(i, li + 1)
+                self._cow_barrier(i, li, li + 1)
             width = min(pow2_at_least(len(idx)), self.n_slots)
             tables = self._pcm.tables(idx + [None] * (width - len(idx)))
             lengths = np.zeros((width,), np.int32)

@@ -26,6 +26,23 @@ number of tokens actually resident instead of `n_slots * cache_len`.
   only as the sequence actually grows (`ensure(seq, n_tokens)`, one
   block at a time — the vLLM "append" operation), so a sequence that
   retires early via EOS hands its untouched budget back immediately.
+* **Refcounted prefix sharing (PR 5).** Every live block carries a
+  refcount. A sequence that has materialized the KV of a token prefix
+  can publish it under a content hash (`register_prefix(key, seq,
+  n_tokens)`); a later `reserve(seq, max_tokens, prefix_key=key)` maps
+  the identical prefix onto the SAME physical blocks — refcount++
+  instead of allocation, and only the unique suffix draws new blocks.
+  The registry is non-owning: an entry lives exactly as long as every
+  one of its blocks is still referenced by some live sequence, so a
+  fully drained pool always returns to pristine state.
+* **Copy-on-write.** The engine calls `prepare_write(seq, start, end)`
+  before scattering new K/V into token positions `[start, end)`. Any
+  touched block with refcount > 1 is detached: a fresh block is taken
+  (funded by the CoW credit the attaching reservation posted for the
+  shared partial block), the table entry is swapped, and the (old, new)
+  pair is returned so the engine can copy the block device-side.
+  Divergent continuations therefore never touch shared KV, and the last
+  holder of a block writes in place with no copy at all.
 * **Block tables.** `table(seq)` / `tables(seqs)` render the per-sequence
   physical-block lists as dense, null-padded int32 rows — the gather
   indices the paged attention read path in `models/attention.py`
@@ -34,14 +51,17 @@ number of tokens actually resident instead of `n_slots * cache_len`.
 The device-side half — the `(L, n_blocks, block_size, kh, hd)` K/V pools
 and the gather/scatter read/write path — lives with the models
 (`models/transformer.py` `init_paged_caches`/`paged_step`); the engine
-(`continuous_batching.py`) glues the two together and adds chunked
-prefill so long prompts stream into the pool in `prefill_chunk`-sized
-pieces interleaved with decode.
+(`continuous_batching.py`) glues the two together, adds chunked prefill
+so long prompts stream into the pool in `prefill_chunk`-sized pieces
+interleaved with decode, and skips prefill entirely for the shared span
+of a prefix hit. The attention gather path is unchanged by sharing:
+whether a table row points at private or shared blocks is invisible to
+`models/attention.paged_attend`.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -50,6 +70,16 @@ NULL_BLOCK = 0  # physical block reserved for masked/inactive writes
 
 class OutOfBlocks(RuntimeError):
     """Pool cannot cover a reservation — the admission backpressure signal."""
+
+
+class PrefixEntry(NamedTuple):
+    """One published prefix: the physical blocks holding its KV and the
+    number of token positions they cover (the last block may be partial
+    and may also hold the publisher's private suffix tokens — readers
+    mask to their own true length, and writers copy-on-write first)."""
+
+    blocks: tuple
+    n_tokens: int
 
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
@@ -66,7 +96,7 @@ def pow2_at_least(n: int) -> int:
 
 
 class PagedCacheManager:
-    """Free-list allocator + block tables over a fixed pool of KV blocks.
+    """Refcounted free-list allocator + block tables over a fixed KV pool.
 
     n_blocks: total physical blocks in the pool, INCLUDING the reserved
         null block; `n_usable_blocks == n_blocks - 1` are allocatable.
@@ -79,6 +109,16 @@ class PagedCacheManager:
     indices). All methods are plain-Python/numpy and O(blocks touched);
     the manager is driven under the engine's step lock and does no
     locking of its own.
+
+    Accounting model: `_reserved[seq]` is the sequence's NEW-block budget
+    (its worst case minus any blocks it attached via a prefix hit) and
+    `_n_new[seq]` counts the free-list pops `ensure` made for it. A
+    prefix hit on a partially filled last block additionally posts one
+    *CoW credit* on that block (`_cow_pot`): the block is certain to be
+    diverged on by somebody, and whoever writes it first — publisher or
+    attacher — consumes the credit, so copy-on-write can never exhaust
+    the pool mid-flight. `free_blocks()` nets all three against the
+    physical free list.
     """
 
     def __init__(self, n_blocks: int, block_size: int, max_blocks_per_seq: int):
@@ -94,8 +134,17 @@ class PagedCacheManager:
         # LIFO free list of physical ids; block 0 (NULL_BLOCK) is never free
         self._free: list[int] = list(range(n_blocks - 1, NULL_BLOCK, -1))
         self._blocks: dict = {}  # seq id -> [physical block ids]
-        self._reserved: dict = {}  # seq id -> total block budget
+        self._reserved: dict = {}  # seq id -> new-block budget
+        self._n_new: dict = {}  # seq id -> free-list pops made so far
+        self._ref: dict[int, int] = {}  # physical id -> live refcount
+        self._shared: dict = {}  # seq id -> (n shared blocks, shared tokens)
+        self._cow_pot: dict[int, int] = {}  # physical id -> CoW credits
+        self._funded: dict = {}  # seq id -> [blocks it posted credits on]
+        self._prefix_index: dict = {}  # prefix key -> PrefixEntry
         self.n_oob_events = 0  # reservation attempts refused (stats)
+        self.n_cow_copies = 0  # copy-on-write detachments performed
+        self.n_prefix_hits = 0  # reserve(prefix_key=) that attached
+        self.n_prefix_misses = 0  # reserve(prefix_key=) that did not
 
     # --------------------------------------------------------------- sizing
     @property
@@ -116,10 +165,10 @@ class PagedCacheManager:
         return blocks_for(n_tokens, self.block_size)
 
     def free_blocks(self) -> int:
-        """Blocks neither allocated nor spoken for by a reservation."""
-        reserved = sum(self._reserved.values())
-        allocated = sum(len(b) for b in self._blocks.values())
-        return len(self._free) - (reserved - allocated)
+        """Blocks neither allocated nor spoken for by a reservation or an
+        outstanding copy-on-write credit."""
+        outstanding = sum(self._reserved.values()) - sum(self._n_new.values())
+        return len(self._free) - outstanding - sum(self._cow_pot.values())
 
     def seqs(self) -> list:
         """Live sequence ids (reserved and not yet freed)."""
@@ -128,18 +177,76 @@ class PagedCacheManager:
     def __contains__(self, seq) -> bool:
         return seq in self._reserved
 
-    # ---------------------------------------------------- reserve / release
-    def can_reserve(self, n_tokens: int) -> bool:
+    # --------------------------------------------------------- prefix index
+    def has_prefix(self, key) -> bool:
+        return key in self._prefix_index
+
+    def register_prefix(self, key, seq, n_tokens: int) -> bool:
+        """Publish the first `n_tokens` positions of `seq` under `key`.
+
+        The caller guarantees the KV for those positions has been written
+        (the engine registers once its prefill cursor passes the span).
+        Returns False (and changes nothing) when the key is already
+        published; first writer wins. The entry is dropped automatically
+        as soon as any of its blocks is returned to the free list.
+        """
+        if seq not in self._reserved:
+            raise KeyError(f"sequence {seq!r} has no reservation")
+        if n_tokens < 1:
+            raise ValueError("a prefix must cover at least one token")
         n = self.blocks_needed(n_tokens)
-        return n <= self.max_blocks_per_seq and n <= self.free_blocks()
+        if n > len(self._blocks[seq]):
+            raise ValueError(
+                f"prefix of {n_tokens} tokens ({n} blocks) is not yet"
+                f" materialized for sequence {seq!r}"
+            )
+        if key in self._prefix_index:
+            return False
+        self._prefix_index[key] = PrefixEntry(
+            tuple(self._blocks[seq][:n]), n_tokens
+        )
+        return True
 
-    def reserve(self, seq, n_tokens: int) -> int:
-        """Claim a `n_tokens` worst-case budget for `seq`; returns blocks.
+    def shared_tokens(self, seq) -> int:
+        """Token positions `seq` attached from a published prefix (0 when
+        it reserved without a hit)."""
+        return self._shared.get(seq, (0, 0))[1]
 
-        Raises OutOfBlocks when the pool cannot cover the budget right
-        now (the caller should queue and retry) and ValueError when the
-        request exceeds the per-sequence table width — i.e. could NEVER
-        be admitted regardless of load.
+    def _attachable(self, n_tokens: int, prefix_key) -> Optional[PrefixEntry]:
+        """The entry a reservation of `n_tokens` can attach, if any. The
+        request must extend past the prefix (the engine always recomputes
+        at least the final prompt token to obtain logits)."""
+        if prefix_key is None:
+            return None
+        entry = self._prefix_index.get(prefix_key)
+        if entry is not None and n_tokens > entry.n_tokens:
+            return entry
+        return None
+
+    # ---------------------------------------------------- reserve / release
+    def can_reserve(self, n_tokens: int, prefix_key=None) -> bool:
+        n = self.blocks_needed(n_tokens)
+        if n > self.max_blocks_per_seq:
+            return False
+        entry = self._attachable(n_tokens, prefix_key)
+        need = n if entry is None else (
+            n - len(entry.blocks) + (1 if entry.n_tokens % self.block_size else 0)
+        )
+        return need <= self.free_blocks()
+
+    def reserve(self, seq, n_tokens: int, prefix_key=None) -> int:
+        """Claim a `n_tokens` worst-case budget for `seq`; returns the
+        number of NEW blocks budgeted.
+
+        With `prefix_key` published, the identical token prefix is mapped
+        onto the same physical blocks (refcount++, no allocation) and
+        only the unique suffix is budgeted — plus one copy-on-write
+        credit when the last shared block is partially filled, since a
+        divergent continuation is certain to detach it. Raises
+        OutOfBlocks when the pool cannot cover the budget right now (the
+        caller should queue and retry) and ValueError when the request
+        exceeds the per-sequence table width — i.e. could NEVER be
+        admitted regardless of load.
         """
         if seq in self._reserved:
             raise ValueError(f"sequence {seq!r} already has a reservation")
@@ -151,25 +258,81 @@ class PagedCacheManager:
                 f" (max_seq_tokens={self.max_seq_tokens})"
             )
             raise ValueError(msg)
-        if n > self.free_blocks():
+        entry = self._attachable(n_tokens, prefix_key)
+        credit = 0
+        need = n
+        if entry is not None:
+            credit = 1 if entry.n_tokens % self.block_size else 0
+            need = n - len(entry.blocks) + credit
+        if need > self.free_blocks():
             self.n_oob_events += 1
+            if prefix_key is not None:
+                self.n_prefix_misses += 1
             msg = (
-                f"{n_tokens} tokens need {n} blocks;"
+                f"{n_tokens} tokens need {need} blocks;"
                 f" {self.free_blocks()} of {self.n_usable_blocks} free"
             )
             raise OutOfBlocks(msg)
-        self._reserved[seq] = n
-        self._blocks[seq] = []
-        return n
+        if entry is None:
+            if prefix_key is not None:
+                self.n_prefix_misses += 1
+            self._reserved[seq] = n
+            self._blocks[seq] = []
+        else:
+            self.n_prefix_hits += 1
+            self._reserved[seq] = n - len(entry.blocks)
+            self._blocks[seq] = list(entry.blocks)
+            for b in entry.blocks:
+                self._ref[b] += 1
+            self._shared[seq] = (len(entry.blocks), entry.n_tokens)
+            if credit:
+                last = entry.blocks[-1]
+                self._cow_pot[last] = self._cow_pot.get(last, 0) + 1
+                self._funded.setdefault(seq, []).append(last)
+        self._n_new[seq] = 0
+        return self._reserved[seq]
+
+    def _return_credit(self, block: int) -> None:
+        """Give one CoW credit on `block` back to the pool (clamped: the
+        credit may already have been consumed by another holder's copy)."""
+        left = self._cow_pot.get(block, 0)
+        if left > 1:
+            self._cow_pot[block] = left - 1
+        elif left:
+            del self._cow_pot[block]
 
     def free(self, seq) -> int:
-        """Return every block (allocated or still budgeted) of `seq`."""
+        """Drop `seq`'s references; returns blocks actually freed.
+
+        A block goes back to the free list only when its last reference
+        drops; prefix-registry entries touching a freed block are evicted
+        so a fully drained pool is pristine. Unconsumed CoW credits the
+        sequence posted are returned.
+        """
         if seq not in self._reserved:
             raise KeyError(f"sequence {seq!r} has no reservation")
         blocks = self._blocks.pop(seq)
-        self._free.extend(reversed(blocks))  # LIFO: reuse hot blocks first
+        freed = []
+        for b in reversed(blocks):  # LIFO: reuse hot blocks first
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._cow_pot.pop(b, None)
+                self._free.append(b)
+                freed.append(b)
         del self._reserved[seq]
-        return len(blocks)
+        del self._n_new[seq]
+        self._shared.pop(seq, None)
+        for b in self._funded.pop(seq, []):
+            self._return_credit(b)
+        if freed:
+            dead = set(freed)
+            stale = [
+                k for k, e in self._prefix_index.items() if dead & set(e.blocks)
+            ]
+            for k in stale:
+                del self._prefix_index[k]
+        return len(freed)
 
     # ------------------------------------------------------- allocate/append
     def ensure(self, seq, n_tokens: int) -> list[int]:
@@ -183,18 +346,72 @@ class PagedCacheManager:
         if seq not in self._reserved:
             raise KeyError(f"sequence {seq!r} has no reservation")
         need = self.blocks_needed(n_tokens)
-        if need > self._reserved[seq]:
+        shared_blocks = self._shared.get(seq, (0, 0))[0]
+        if need > shared_blocks + self._reserved[seq]:
             msg = (
                 f"sequence {seq!r} grew to {n_tokens} tokens ({need} blocks)"
-                f" past its {self._reserved[seq]}-block reservation"
+                f" past its {shared_blocks + self._reserved[seq]}-block"
+                f" reservation"
             )
             raise ValueError(msg)
         added = []
         blocks = self._blocks[seq]
         while len(blocks) < need:
-            added.append(self._free.pop())
-            blocks.append(added[-1])
+            b = self._free.pop()
+            self._ref[b] = 1
+            self._n_new[seq] += 1
+            blocks.append(b)
+            added.append(b)
         return added
+
+    def prepare_write(self, seq, start: int, end: int) -> list[tuple[int, int]]:
+        """Copy-on-write barrier for a scatter into positions [start, end).
+
+        Every touched block still shared with another sequence (refcount
+        > 1) is detached: a fresh block is taken from the free list
+        (consuming the block's CoW credit when one is posted), the table
+        entry is swapped, and the (old, new) physical pair is appended to
+        the returned list — the caller MUST copy old -> new in the device
+        pools before scattering. Blocks this sequence holds exclusively
+        are written in place (empty return). Call `ensure` first; the
+        span must already be covered by the sequence's block list.
+        """
+        if seq not in self._reserved:
+            raise KeyError(f"sequence {seq!r} has no reservation")
+        if end <= start:
+            return []
+        blocks = self._blocks[seq]
+        last_bi = (end - 1) // self.block_size
+        if last_bi >= len(blocks):
+            raise ValueError(
+                f"write span [{start}, {end}) of sequence {seq!r} is not"
+                f" covered by its {len(blocks)} blocks — call ensure() first"
+            )
+        pairs = []
+        for bi in range(start // self.block_size, last_bi + 1):
+            b = blocks[bi]
+            if self._ref[b] <= 1:
+                continue
+            if not self._free:
+                raise OutOfBlocks(
+                    f"copy-on-write of block {b} for sequence {seq!r} found"
+                    " an empty free list (CoW accounting bug)"
+                )
+            nb = self._free.pop()
+            if self._cow_pot.get(b, 0):
+                # consume the credit posted for this block's divergence;
+                # treat it as this sequence's own even if another holder
+                # funded it — credits are fungible per block
+                self._return_credit(b)
+                funded = self._funded.get(seq)
+                if funded and b in funded:
+                    funded.remove(b)
+            self._ref[nb] = 1
+            self._ref[b] -= 1
+            blocks[bi] = nb
+            self.n_cow_copies += 1
+            pairs.append((b, nb))
+        return pairs
 
     def allocated(self, seq) -> list[int]:
         return list(self._blocks[seq])
@@ -220,13 +437,20 @@ class PagedCacheManager:
 
     # ----------------------------------------------------------------- stats
     def stats(self) -> dict:
-        allocated = sum(len(b) for b in self._blocks.values())
+        hits, misses = self.n_prefix_hits, self.n_prefix_misses
         return {
             "n_usable_blocks": self.n_usable_blocks,
             "block_size": self.block_size,
             "n_seqs": len(self._reserved),
-            "allocated_blocks": allocated,
-            "reserved_blocks": sum(self._reserved.values()),
+            "allocated_blocks": len(self._ref),
+            "reserved_blocks": sum(self._reserved.values())
+            + sum(n for n, _ in self._shared.values()),
             "free_blocks": self.free_blocks(),
             "n_oob_events": self.n_oob_events,
+            "n_shared_blocks": sum(1 for r in self._ref.values() if r >= 2),
+            "n_cow_copies": self.n_cow_copies,
+            "n_prefix_entries": len(self._prefix_index),
+            "n_prefix_hits": hits,
+            "n_prefix_misses": misses,
+            "prefix_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
         }

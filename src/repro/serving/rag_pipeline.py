@@ -25,6 +25,16 @@ per-slot cache regions for the shared block pool in
 augmented prompts are exactly the workload fixed regions waste HBM on
 (see the module docstrings of `continuous_batching` / `paged_cache` and
 ROADMAP.md "Serving memory model").
+
+Prefix sharing (PR 5): RAG traffic repeats itself — the same retrieved
+documents head many augmented prompts. Under `paged=True` the pipeline
+derives a prefix hint from the prompt layout (`encode_prompt_with_prefix`
+splits the `[BOS] docs SEP` context header from the user query), so
+`query_stream(generate=True, paged=True)` automatically maps concurrent
+queries that retrieved the same documents onto the SAME physical KV
+blocks, copy-on-write protecting their divergent answers
+(`prefix_sharing=None` resolves to "on whenever the model's KV is
+paged"; pass False to opt out).
 """
 from __future__ import annotations
 
@@ -39,6 +49,7 @@ import numpy as np
 
 from repro.core.retrieval import DircRagIndex, RetrievalConfig
 from repro.core.sharded_index import ShardedDircIndex
+from repro.models import supports_paged_kv
 from repro.core.simulator import simulate_query
 from repro.data.tokenizer import ByteTokenizer
 from .async_scheduler import DEFAULT_TENANT, AsyncBatchScheduler, SchedulerError
@@ -184,6 +195,7 @@ class RagPipeline:
                       block_size: Optional[int] = None,
                       n_blocks: Optional[int] = None,
                       prefill_chunk: Optional[int] = None,
+                      prefix_sharing: Optional[bool] = None,
                       start: bool = True) -> ContinuousBatchingEngine:
         """A ContinuousBatchingEngine over this pipeline's model.
 
@@ -199,13 +211,18 @@ class RagPipeline:
         prompts stop stalling admission, and `n_slots` can exceed what
         fixed regions would allow at the same memory. `block_size` /
         `n_blocks` / `prefill_chunk` pass straight through (n_blocks
-        defaults to the fixed-slot footprint).
+        defaults to the fixed-slot footprint). `prefix_sharing=None`
+        turns copy-on-write prefix sharing on exactly when the model's
+        KV is paged (attention families under `paged=True`); pass
+        True/False to force it.
         """
         if self.engine is None:
             raise TypeError("decode_engine requires a model "
                             "(RagPipeline(..., model=, params=))")
         if cache_len is None:
             cache_len = self.max_prompt_len + max_new_tokens
+        if prefix_sharing is None:
+            prefix_sharing = paged and supports_paged_kv(self.engine.model)
         eos = self.tokenizer.eos_id
         vocab = self.engine.model.cfg.vocab_size
         return ContinuousBatchingEngine(
@@ -214,15 +231,34 @@ class RagPipeline:
             eos_id=eos if eos < vocab else None,
             temperature=temperature,
             paged=paged, block_size=block_size, n_blocks=n_blocks,
-            prefill_chunk=prefill_chunk, start=start,
+            prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+            start=start,
         )
 
     def encode_prompt(self, text: str, retrieved_texts: Sequence[str]) -> list:
         """Augmented-prompt token ids, folded into the model vocab."""
+        return self.encode_prompt_with_prefix(text, retrieved_texts)[0]
+
+    def encode_prompt_with_prefix(
+            self, text: str, retrieved_texts: Sequence[str],
+    ) -> tuple[list, int]:
+        """(augmented-prompt token ids, shareable prefix length).
+
+        The prefix is the `[BOS] doc1 SEP doc2 ... SEP` context header —
+        everything before the user query — which is a pure function of
+        the retrieved doc ids + prompt template, so concurrent queries
+        that retrieved the same documents produce bit-identical prefixes
+        and share their context KV under `prefix_sharing`. When
+        `max_prompt_len` truncation cuts into the header (the template
+        keeps the prompt TAIL), the surviving header is still shared;
+        0 means nothing shareable survived.
+        """
         prompt = self.tokenizer.encode_rag_prompt(
             text, list(retrieved_texts), self.max_prompt_len)
+        n_query = len(self.tokenizer.encode(text, bos=False))
+        prefix_len = max(len(prompt) - n_query, 0)
         vocab = self.engine.model.cfg.vocab_size
-        return [t % vocab for t in prompt]
+        return [t % vocab for t in prompt], prefix_len
 
     def query_stream(self, requests, k: int = 3, max_batch: int = 32,
                      max_wait_ms: float = 5.0,
@@ -232,7 +268,8 @@ class RagPipeline:
                      paged: bool = False,
                      block_size: Optional[int] = None,
                      n_blocks: Optional[int] = None,
-                     prefill_chunk: Optional[int] = None):
+                     prefill_chunk: Optional[int] = None,
+                     prefix_sharing: Optional[bool] = None):
         """Stream results as they are served (completion order).
 
         `requests` is an iterable of query strings or (tenant, text)
@@ -254,6 +291,13 @@ class RagPipeline:
         retrieval failed for a request — or its generation could not be
         started — the retrieval AsyncTicket is yielded instead, with its
         `result()` re-raising the error.
+
+        Under `paged=True` the decode engine also gets a shareable-prefix
+        hint per prompt (the retrieved-context header from
+        `encode_prompt_with_prefix`), so concurrent queries hitting the
+        same documents share their context KV automatically;
+        `prefix_sharing` forces the engine knob (None: on iff the
+        model's KV is paged).
         """
         import queue as _queue
 
@@ -269,6 +313,7 @@ class RagPipeline:
                 temperature=temperature, paged=paged,
                 block_size=block_size, n_blocks=n_blocks,
                 prefill_chunk=prefill_chunk,
+                prefix_sharing=prefix_sharing,
                 start=True) if generate else None
             sched = self.scheduler(max_batch=max_batch, key=key,
                                    max_wait_ms=max_wait_ms, start=True)
@@ -278,9 +323,11 @@ class RagPipeline:
                 try:
                     texts_k = [self.doc_texts[i]
                                for i in ticket.doc_ids if i >= 0]
+                    prompt, prefix_len = self.encode_prompt_with_prefix(
+                        ticket.text, texts_k)
                     gen = engine.submit(
-                        self.encode_prompt(ticket.text, texts_k),
-                        max_new_tokens=max_new_tokens, tenant=ticket.tenant)
+                        prompt, max_new_tokens=max_new_tokens,
+                        tenant=ticket.tenant, prefix_len=prefix_len)
                     gen.text = ticket.text
                     gen.retrieval = ticket
                     gen.add_done_callback(done_q.put)
@@ -343,7 +390,8 @@ class RagPipeline:
                         paged: bool = False,
                         block_size: Optional[int] = None,
                         n_blocks: Optional[int] = None,
-                        prefill_chunk: Optional[int] = None):
+                        prefill_chunk: Optional[int] = None,
+                        prefix_sharing: Optional[bool] = None):
         """Stream plain (retrieval-free) generations in completion order.
 
         `requests` is an iterable of prompt strings or (tenant, text)
@@ -368,7 +416,7 @@ class RagPipeline:
             n_slots=n_slots, cache_len=cache_len,
             max_new_tokens=max_new_tokens, temperature=temperature,
             paged=paged, block_size=block_size, n_blocks=n_blocks,
-            prefill_chunk=prefill_chunk,
+            prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
             start=True)
         vocab = self.engine.model.cfg.vocab_size
 

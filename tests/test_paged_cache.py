@@ -1,18 +1,24 @@
 """Paged KV-cache subsystem: PagedCacheManager allocator invariants,
+a randomized allocator fuzz suite (refcounts, prefix sharing and
+copy-on-write included — seeded-random driver always runs in the fast
+tier, a hypothesis twin explores further where hypothesis is installed),
 block-table plumbing through a deterministic paged script model, chunked
 prefill interleaving, pool backpressure, and the acceptance property —
 paged engine output is token-identical to the fixed-slot engine and to
 per-query GenerationEngine.generate across staggered admission, mixed
-prompt lengths, and chunked prefill (dense and Mamba models).
+prompt lengths, and chunked prefill (dense and Mamba models). The
+prefix-sharing/CoW *engine* behaviour lives in tests/test_prefix_sharing.py.
 """
 
 import dataclasses
+import random
 from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.models import build_model, supports_paged_kv
@@ -89,6 +95,227 @@ def test_block_tables_null_padded_and_lifo_reuse():
     pcm.reserve("b", 2)
     pcm.ensure("b", 2)
     assert pcm.allocated("b") == [blocks[0]]  # LIFO: hottest block reused
+
+
+# ------------------------------------------------- prefix sharing + CoW unit
+def test_prefix_attach_shares_blocks_and_budgets_suffix_only():
+    pcm = PagedCacheManager(n_blocks=9, block_size=4, max_blocks_per_seq=6)
+    pcm.reserve("own", 16)  # 4 blocks
+    pcm.ensure("own", 16)
+    assert pcm.register_prefix("ctx", "own", 8)  # 2 FULL blocks
+    assert not pcm.register_prefix("ctx", "own", 8)  # first writer wins
+    assert pcm.shared_tokens("own") == 0
+    assert pcm.reserve("att", 16, prefix_key="ctx") == 2  # only the suffix
+    assert pcm.shared_tokens("att") == 8
+    assert pcm.allocated("att")[:2] == pcm.allocated("own")[:2]
+    st = pcm.stats()
+    assert st["n_shared_blocks"] == 2
+    assert st["n_prefix_hits"] == 1 and st["prefix_hit_rate"] == 1.0
+    # full-block prefix: nobody ever writes the shared blocks, no credit
+    assert st["free_blocks"] == 8 - 4 - 2
+    pcm.ensure("att", 16)
+    assert pcm.prepare_write("att", 8, 16) == []  # suffix blocks private
+    pcm.free("own")
+    # own's first 2 blocks are still held by att: the entry survives
+    # until the LAST reference drops
+    assert pcm.stats()["n_prefix_entries"] == 1
+    pcm.free("att")
+    assert pcm.stats()["n_prefix_entries"] == 0
+    assert pcm.stats()["free_blocks"] == pcm.n_usable_blocks
+
+
+def test_prefix_entry_survives_publisher_until_last_reference():
+    pcm = PagedCacheManager(n_blocks=9, block_size=4, max_blocks_per_seq=6)
+    pcm.reserve("own", 8)
+    pcm.ensure("own", 8)
+    pcm.register_prefix("ctx", "own", 8)
+    pcm.reserve("att", 12, prefix_key="ctx")
+    pcm.free("own")  # attacher keeps the blocks (ref >= 1) and the entry
+    assert pcm.has_prefix("ctx")
+    assert pcm.reserve("att2", 12, prefix_key="ctx") == 1  # still attachable
+    pcm.free("att")
+    pcm.free("att2")
+    assert not pcm.has_prefix("ctx")  # last ref dropped: entry evicted
+    assert pcm.stats()["free_blocks"] == pcm.n_usable_blocks
+
+
+def test_unregistered_or_too_short_prefix_key_is_a_miss():
+    pcm = PagedCacheManager(n_blocks=9, block_size=4, max_blocks_per_seq=6)
+    assert pcm.reserve("a", 8, prefix_key="nope") == 2  # miss: full budget
+    assert pcm.shared_tokens("a") == 0
+    pcm.ensure("a", 8)
+    pcm.register_prefix("ctx", "a", 8)
+    # a request that does NOT extend past the prefix cannot attach (the
+    # engine always recomputes the final prompt token for logits)
+    assert pcm.reserve("b", 8, prefix_key="ctx") == 2
+    assert pcm.shared_tokens("b") == 0
+    st = pcm.stats()
+    assert st["n_prefix_hits"] == 0 and st["n_prefix_misses"] == 2
+    assert st["prefix_hit_rate"] == 0.0
+
+
+def test_cow_shrunk_regression():
+    """Shrunk from the fuzz driver: owner + attacher share a prefix whose
+    last block is partial; the OWNER diverges first (mid-decode in engine
+    terms) and consumes the attacher-funded CoW credit; the attacher then
+    holds the original block exclusively and writes in place; full
+    release returns the pool to pristine state."""
+    pcm = PagedCacheManager(n_blocks=6, block_size=4, max_blocks_per_seq=5)
+    pcm.reserve("own", 10)  # 3-block budget
+    pcm.ensure("own", 6)  # 2 blocks materialized, tokens 0..6
+    assert pcm.prepare_write("own", 0, 6) == []  # sole holder: in place
+    assert pcm.register_prefix("ctx", "own", 6)  # block 2 is partial
+    assert not pcm.can_reserve(99, prefix_key="ctx")  # width guard first
+    assert pcm.can_reserve(12, prefix_key="ctx")
+    # attach: 3 blocks needed - 2 shared + 1 CoW credit = 2 budgeted
+    assert pcm.reserve("att", 12, prefix_key="ctx") == 1
+    assert pcm.shared_tokens("att") == 6
+    st = pcm.stats()
+    assert st["n_shared_blocks"] == 2 and st["n_prefix_hits"] == 1
+    assert st["free_blocks"] == 0  # 5 - own(3) - att(1) - credit(1)
+    # owner writes token 6 — inside the shared partial block -> CoW,
+    # paid by the posted credit (free_blocks unchanged)
+    pairs = pcm.prepare_write("own", 6, 7)
+    assert len(pairs) == 1
+    src, dst = pairs[0]
+    assert pcm.allocated("att")[1] == src and pcm.allocated("own")[1] == dst
+    st = pcm.stats()
+    assert st["n_cow_copies"] == 1 and st["free_blocks"] == 0
+    # attacher is now the sole holder of the original block: in place
+    pcm.ensure("att", 8)
+    assert pcm.prepare_write("att", 6, 8) == []
+    assert pcm.stats()["n_cow_copies"] == 1
+    pcm.free("own")
+    pcm.free("att")
+    st = pcm.stats()
+    assert st["free_blocks"] == pcm.n_usable_blocks
+    assert st["n_seqs"] == 0 and st["n_prefix_entries"] == 0
+
+
+# ------------------------------------------------------------- allocator fuzz
+def _assert_allocator_invariants(pcm: PagedCacheManager) -> None:
+    """The invariants every op sequence must preserve (ISSUE 5)."""
+    live: dict[int, int] = {}  # block -> appearances across tables
+    for blocks in pcm._blocks.values():
+        assert len(set(blocks)) == len(blocks)  # no dup inside one table
+        for b in blocks:
+            assert b != NULL_BLOCK  # null block never allocated
+            live[b] = live.get(b, 0) + 1
+    # every live block has refcount >= 1, and a block appears in two
+    # tables only when its refcount says so
+    assert set(pcm._ref) == set(live)
+    for b, n in live.items():
+        assert pcm._ref[b] == n >= 1
+    # free + allocated sum to the usable pool, with no overlap
+    assert NULL_BLOCK not in pcm._free
+    assert len(set(pcm._free)) == len(pcm._free)
+    assert not set(pcm._free) & set(live)
+    assert len(pcm._free) + len(live) == pcm.n_usable_blocks
+    # budget accounting never oversubscribes the pool
+    st = pcm.stats()
+    assert st["free_blocks"] >= 0
+    assert st["allocated_blocks"] == len(live)
+    assert st["n_shared_blocks"] == sum(1 for n in live.values() if n >= 2)
+    # the registry only references live blocks (entries are evicted with
+    # their blocks) and every CoW credit sits on a live shared block
+    for entry in pcm._prefix_index.values():
+        assert all(b in live for b in entry.blocks)
+    for b, credits in pcm._cow_pot.items():
+        assert credits >= 1 and b in live
+    # rendered tables agree with the allocator's view
+    for seq in pcm.seqs():
+        row, blocks = pcm.table(seq), pcm._blocks[seq]
+        assert list(row[: len(blocks)]) == blocks
+        assert all(row[len(blocks) :] == NULL_BLOCK)
+
+
+def _fuzz_round(seed: int, n_ops: int = 40) -> None:
+    """One randomized op sequence mirroring the engine's allocator
+    contract: reserve (with/without prefix_key) -> ensure+prepare_write
+    in monotone spans -> register once covered -> free; invariants are
+    asserted after EVERY op and the drained pool must be pristine."""
+    rng = random.Random(seed)
+    block_size = rng.choice([1, 2, 4])
+    width = rng.randint(2, 6)
+    n_blocks = rng.randint(4, 24)
+    pcm = PagedCacheManager(n_blocks, block_size, width)
+    keys = [f"k{i}" for i in range(3)]
+    seqs: dict[int, dict] = {}  # sid -> {n, cur, key, published}
+    next_sid = 0
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.35:  # reserve, sometimes too wide / over-subscribed
+            sid, next_sid = next_sid, next_sid + 1
+            n_tok = rng.randint(1, pcm.max_seq_tokens + block_size)
+            key = rng.choice(keys + [None, None])
+            fits = pcm.can_reserve(n_tok, prefix_key=key)
+            if blocks_for(n_tok, block_size) > width:
+                with pytest.raises(ValueError, match="wide"):
+                    pcm.reserve(sid, n_tok, prefix_key=key)
+            elif not fits:
+                with pytest.raises(OutOfBlocks):
+                    pcm.reserve(sid, n_tok, prefix_key=key)
+            else:
+                pcm.reserve(sid, n_tok, prefix_key=key)
+                shared = pcm.shared_tokens(sid)
+                seqs[sid] = {
+                    "n": n_tok,
+                    "cur": shared,
+                    "key": key if shared == 0 else None,
+                    "published": False,
+                }
+        elif op < 0.65 and seqs:  # grow + write (the only write pattern
+            sid = rng.choice(list(seqs))  # the engine ever issues)
+            s = seqs[sid]
+            if s["cur"] < s["n"]:
+                new_cur = rng.randint(s["cur"] + 1, s["n"])
+                pcm.ensure(sid, new_cur)
+                pcm.prepare_write(sid, s["cur"], new_cur)
+                # after the CoW barrier the whole span is exclusive
+                blocks = pcm._blocks[sid]
+                lo = s["cur"] // block_size
+                hi = (new_cur - 1) // block_size
+                assert all(pcm._ref[blocks[i]] == 1
+                           for i in range(lo, hi + 1))
+                s["cur"] = new_cur
+        elif op < 0.8 and seqs:  # publish a covered span
+            cands = [i for i, s in seqs.items()
+                     if s["key"] is not None and not s["published"]
+                     and s["cur"] >= 1]
+            if cands:
+                sid = rng.choice(cands)
+                s = seqs[sid]
+                if pcm.register_prefix(s["key"], sid, rng.randint(1, s["cur"])):
+                    s["published"] = True
+        elif seqs:  # retire
+            sid = rng.choice(list(seqs))
+            pcm.free(sid)
+            del seqs[sid]
+        _assert_allocator_invariants(pcm)
+    for sid in list(seqs):
+        pcm.free(sid)
+        _assert_allocator_invariants(pcm)
+    # full release returns the pool to pristine state
+    st = pcm.stats()
+    assert st["free_blocks"] == pcm.n_usable_blocks
+    assert len(pcm._free) == pcm.n_usable_blocks
+    assert not pcm._ref and not pcm._cow_pot and not pcm._prefix_index
+    assert not pcm._blocks and not pcm._reserved and not pcm._funded
+
+
+def test_allocator_fuzz_seeded():
+    """The fast-tier fuzz floor: >= 200 generated op sequences, no
+    hypothesis required (the container image does not ship it)."""
+    for seed in range(240):
+        _fuzz_round(seed)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1), st.integers(40, 120))
+def test_allocator_fuzz_hypothesis(seed, n_ops):
+    """Hypothesis twin of the seeded driver (runs where hypothesis is
+    installed, e.g. the CI matrix): same contract, wider exploration."""
+    _fuzz_round(seed, n_ops=n_ops)
 
 
 # ----------------------------------------- deterministic paged script models

@@ -1,0 +1,444 @@
+"""Copy-on-write prefix sharing on the paged KV pool: engine behaviour.
+
+The allocator-level invariants (refcounts, CoW credits, registry
+eviction) are fuzzed in tests/test_paged_cache.py; this file drives the
+`ContinuousBatchingEngine` integration — the load-bearing acceptance
+property is the THREE-WAY greedy-parity matrix: shared-prefix paged vs
+unshared paged vs fixed-slot engines produce token-identical output at
+fp32, including the staggered-admission case where a late request
+attaches a prefix published by a mid-decode sequence and both then
+diverge (the copy-on-write trigger path). The checksum script models
+make every emitted token a function of the ENTIRE token history read
+back from the pool, so a corrupted shared block or a missing CoW device
+copy breaks parity immediately instead of silently. Skip-ahead admission
+under backpressure (bounded lookahead, no starvation) rides the same
+admission path and is regression-tested here too.
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model, supports_paged_kv
+from repro.serving import (
+    ContinuousBatchingEngine,
+    GenerationEngine,
+)
+
+
+# --------------------------------------------- checksum paged script models
+class ChecksumScriptModel:
+    """Next token = (sum of every token seen so far) % vocab.
+
+    Unlike the +1-chain ScriptModel (which only reads the LAST position
+    back from the pool), every emitted token depends on the whole
+    history, so shared-prefix corruption anywhere in the window changes
+    the output — the property the parity matrix leans on."""
+
+    def __init__(self, vocab: int = 97):
+        self.cfg = SimpleNamespace(vocab_size=vocab)
+        self.vocab = vocab
+
+    def init_caches(self, batch, cache_len, prefix_len):
+        return {
+            "sum": jnp.zeros((batch,), jnp.int32),
+            "length": jnp.full((batch,), prefix_len, jnp.int32),
+        }
+
+    def decode_step(self, params, caches, token):
+        s = caches["sum"] + token[:, 0]
+        logits = jax.nn.one_hot(s % self.vocab, self.vocab, dtype=jnp.float32)
+        return logits, {"sum": s, "length": caches["length"] + 1}
+
+
+class ChecksumPagedScriptModel(ChecksumScriptModel):
+    """Checksum model over a REAL block-pooled store: tokens are
+    scattered through the engine's block tables and the checksum is
+    gathered back over the FULL valid window — wrong tables, a stale
+    shared block, or a skipped copy-on-write device copy all corrupt the
+    sum and therefore the next token."""
+
+    def init_paged_caches(self, n_blocks, block_size):
+        return jnp.zeros((n_blocks, block_size), jnp.int32)
+
+    def paged_step(self, params, pools, tables, lengths, tokens, n_valid):
+        b, t = tokens.shape
+        bs = pools.shape[1]
+        mb = tables.shape[1]
+        pos = lengths[:, None] + jnp.arange(t)[None, :]
+        valid = jnp.arange(t)[None, :] < n_valid[:, None]
+        blk = jnp.take_along_axis(tables, jnp.clip(pos // bs, 0, mb - 1), axis=1)
+        blk = jnp.where(valid, blk, 0)
+        off = jnp.where(valid, pos % bs, 0)
+        pools = pools.at[blk, off].set(tokens)
+        window = pools[tables]  # (b, mb, bs): the row's whole visible pool
+        wpos = (jnp.arange(mb)[:, None] * bs + jnp.arange(bs)[None, :])[None]
+        mask = wpos < (lengths + jnp.maximum(n_valid, 1))[:, None, None]
+        total = jnp.sum(jnp.where(mask, window, 0), axis=(1, 2))
+        logits = jax.nn.one_hot(
+            total % self.vocab, self.vocab, dtype=jnp.float32)
+        return logits, pools
+
+
+class PlusOnePagedModel(ChecksumScriptModel):
+    """+1-chain paged model reused from test_paged_cache (redeclared
+    here to keep this module import-independent): next = (last + 1) %
+    vocab, last read back from the pool."""
+
+    def init_paged_caches(self, n_blocks, block_size):
+        return jnp.zeros((n_blocks, block_size), jnp.int32)
+
+    def decode_step(self, params, caches, token):
+        nxt = (token[:, 0] + 1) % self.vocab
+        logits = jax.nn.one_hot(nxt, self.vocab, dtype=jnp.float32)
+        return logits, {"sum": caches["sum"], "length": caches["length"] + 1}
+
+    def paged_step(self, params, pools, tables, lengths, tokens, n_valid):
+        b, t = tokens.shape
+        bs = pools.shape[1]
+        mb = tables.shape[1]
+        pos = lengths[:, None] + jnp.arange(t)[None, :]
+        valid = jnp.arange(t)[None, :] < n_valid[:, None]
+        blk = jnp.take_along_axis(tables, jnp.clip(pos // bs, 0, mb - 1), axis=1)
+        blk = jnp.where(valid, blk, 0)
+        off = jnp.where(valid, pos % bs, 0)
+        pools = pools.at[blk, off].set(tokens)
+        last = lengths + jnp.maximum(n_valid, 1) - 1
+        lb = jnp.take_along_axis(tables, (last // bs)[:, None], axis=1)[:, 0]
+        last_tok = pools[lb, last % bs]
+        logits = jax.nn.one_hot(
+            (last_tok + 1) % self.vocab, self.vocab, dtype=jnp.float32)
+        return logits, pools
+
+
+def _baseline(model, prompt, max_new):
+    out = GenerationEngine(model, {}).generate(
+        jnp.asarray(prompt, jnp.int32)[None],
+        max_new_tokens=max_new,
+        cache_len=64,
+    )
+    return np.asarray(out)[0]
+
+
+# ------------------------------------------------ three-way parity (script)
+def _run_matrix_engine(reqs, first_wave, *, paged, sharing, vocab=97):
+    """Run the request mix through one engine flavour with staggered
+    admission (`first_wave` requests submitted before the first step)."""
+    eng = ContinuousBatchingEngine(
+        ChecksumPagedScriptModel(vocab=vocab),
+        {},
+        n_slots=3,
+        cache_len=32,
+        paged=paged,
+        **(dict(block_size=8, prefill_chunk=4, prefix_sharing=sharing)
+           if paged else {}),
+    )
+    tickets = [eng.submit(p, max_new_tokens=m, prefix_len=h)
+               for p, m, h in reqs[:first_wave]]
+    while not any(t.tokens for t in tickets):
+        eng.step()  # the late wave arrives while the first is mid-decode
+    tickets += [eng.submit(p, max_new_tokens=m, prefix_len=h)
+                for p, m, h in reqs[first_wave:]]
+    eng.run_until_drained()
+    return [np.asarray(t.result()) for t in tickets], eng.stats()
+
+
+def test_three_way_parity_matrix_with_staggered_cow_divergence():
+    """Shared-prefix paged == unshared paged == fixed-slot == per-query
+    baseline, token for token, on a workload where a late request shares
+    a 10-token prefix (partial 8-token block!) with a mid-decode
+    sequence and both diverge — the CoW trigger path."""
+    ctx = list(range(1, 11))  # 10 tokens: 1 full block + 2 in a partial
+    reqs = [
+        (ctx + [40, 41], 5, 10),   # publisher, decodes into the partial
+        (list(range(50, 56)), 3, None),  # unrelated traffic in between
+        (ctx + [60], 4, 10),       # late attacher, diverges immediately
+        (ctx + [70, 71, 72], 3, 10),  # second attacher
+    ]
+    refs = [_baseline(ChecksumScriptModel(vocab=97), p, m)
+            for p, m, _ in reqs]
+
+    fixed_outs, _ = _run_matrix_engine(reqs, 2, paged=False, sharing=False)
+    plain_outs, plain_stats = _run_matrix_engine(
+        reqs, 2, paged=True, sharing=False)
+    shared_outs, shared_stats = _run_matrix_engine(
+        reqs, 2, paged=True, sharing=True)
+
+    for ref, fx, pl, sh in zip(refs, fixed_outs, plain_outs, shared_outs):
+        assert np.array_equal(ref, fx)
+        assert np.array_equal(ref, pl)
+        assert np.array_equal(ref, sh)
+    # sharing really happened, CoW really fired, and the drained pool is
+    # pristine in both paged flavours
+    pool = shared_stats["pool"]
+    assert pool["n_prefix_hits"] >= 1
+    assert pool["n_cow_copies"] >= 1
+    for stats in (plain_stats, shared_stats):
+        p = stats["pool"]
+        assert p["free_blocks"] == p["n_usable_blocks"]
+        assert p["n_seqs"] == 0 and p["n_prefix_entries"] == 0
+    assert plain_stats["pool"]["n_prefix_hits"] == 0
+
+
+def test_shared_prefill_skips_resident_span():
+    """A prefix hit must prefill ONLY the unique suffix: the attacher of
+    a 10-token shared prefix with a 2-token suffix takes a single chunk
+    where the publisher took three."""
+    ctx = list(range(1, 11))
+    eng = ContinuousBatchingEngine(
+        ChecksumPagedScriptModel(vocab=97), {}, n_slots=2, cache_len=32,
+        paged=True, block_size=8, prefill_chunk=4, prefix_sharing=True)
+    owner = eng.submit(ctx + [40, 41], max_new_tokens=6, prefix_len=10)
+    while not owner.tokens:
+        eng.step()
+    chunks_owner = eng.stats()["n_prefill_chunks"]
+    assert chunks_owner == 3  # ceil(12 / 4)
+    att = eng.submit(ctx + [60, 61], max_new_tokens=2, prefix_len=10)
+    eng.run_until_drained()
+    assert np.array_equal(
+        att.result(), _baseline(ChecksumScriptModel(97), ctx + [60, 61], 2))
+    assert eng.stats()["n_prefill_chunks"] == chunks_owner + 1  # suffix only
+    assert eng.stats()["pool"]["n_prefix_hits"] == 1
+
+
+def test_identical_prompts_defer_until_publication_then_share():
+    """Two identical prompts submitted together: the second is deferred
+    (not missed) while the first publishes, then attaches — one hit, one
+    miss, identical outputs, pristine pool."""
+    prompt = list(range(2, 20))  # 18 tokens, span 17 (partial block)
+    eng = ContinuousBatchingEngine(
+        ChecksumPagedScriptModel(vocab=97), {}, n_slots=2, cache_len=32,
+        paged=True, block_size=8, prefill_chunk=4, prefix_sharing=True)
+    a = eng.submit(prompt, max_new_tokens=3)
+    b = eng.submit(prompt, max_new_tokens=3)
+    eng.step()
+    assert eng.active() == 1  # b deferred behind the publication
+    eng.run_until_drained()
+    ref = _baseline(ChecksumScriptModel(97), prompt, 3)
+    assert np.array_equal(a.result(), ref)
+    assert np.array_equal(b.result(), ref)
+    pool = eng.stats()["pool"]
+    assert pool["n_prefix_hits"] == 1 and pool["n_prefix_misses"] == 1
+    assert pool["prefix_hit_rate"] == 0.5
+    assert pool["free_blocks"] == pool["n_usable_blocks"]
+
+
+# --------------------------------------------- three-way parity (real model)
+def _fp32(cfg):
+    return dataclasses.replace(cfg, compute_dtype="float32")
+
+
+def test_three_way_parity_real_dense_model_with_sharing():
+    """Acceptance: on a real dense model at fp32, shared-prefix paged ==
+    unshared paged == fixed-slot == per-query generate with a common
+    19-token context (partial block at block_size=8), staggered
+    admission, and chunked prefill."""
+    cfg = _fp32(get_config("phi4-mini-3.8b", smoke=True))
+    model = build_model(cfg)
+    assert supports_paged_kv(model)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(7)
+    ctx = rng.integers(0, cfg.vocab_size, size=19).astype(np.int32)
+    suffixes = [5, 2, 9]
+    max_news = [4, 5, 3]
+    reqs = []
+    for n, m in zip(suffixes, max_news):
+        sfx = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+        reqs.append((np.concatenate([ctx, sfx]), m, 19))
+    cache_len = 48
+    base = GenerationEngine(model, params)
+    refs = [
+        np.asarray(base.generate(jnp.asarray(p, jnp.int32)[None],
+                                 max_new_tokens=m, cache_len=cache_len))[0]
+        for p, m, _ in reqs
+    ]
+
+    def run(paged, sharing):
+        kw = (dict(paged=True, block_size=8, prefill_chunk=8,
+                   prefix_sharing=sharing) if paged else {})
+        eng = ContinuousBatchingEngine(
+            model, params, n_slots=3, cache_len=cache_len, **kw)
+        tickets = [eng.submit(p, max_new_tokens=m, prefix_len=h)
+                   for p, m, h in reqs[:1]]
+        eng.step()  # staggered: the attachers arrive mid-flight
+        tickets += [eng.submit(p, max_new_tokens=m, prefix_len=h)
+                    for p, m, h in reqs[1:]]
+        eng.run_until_drained()
+        return [np.asarray(t.result()) for t in tickets], eng.stats()
+
+    for paged, sharing in ((False, False), (True, False), (True, True)):
+        outs, stats = run(paged, sharing)
+        for ref, out in zip(refs, outs):
+            assert np.array_equal(ref, out), (paged, sharing)
+        if paged:
+            pool = stats["pool"]
+            assert pool["free_blocks"] == pool["n_usable_blocks"]
+            assert pool["n_prefix_hits"] == (2 if sharing else 0)
+
+
+# ------------------------------------------------------- skip-ahead admission
+def test_skip_ahead_admits_small_request_behind_blocked_large_one():
+    """ROADMAP open item: a small request queued behind a large one that
+    cannot reserve right now is admitted past it (bounded lookahead),
+    and the large one still runs once blocks free up."""
+    vocab = 64
+    eng = ContinuousBatchingEngine(
+        PlusOnePagedModel(vocab=vocab), {}, n_slots=4, cache_len=24,
+        paged=True, block_size=4, n_blocks=8, prefill_chunk=8,
+        prefix_sharing=False)
+    running = eng.submit(list(range(8)), max_new_tokens=8)  # 4 blocks
+    eng.step()
+    assert running.slot is not None
+    large = eng.submit(list(range(10, 26)), max_new_tokens=8)  # 6 blocks
+    small = eng.submit([1, 2], max_new_tokens=2)  # 1 block
+    eng.step()
+    st = eng.stats()
+    assert small.slot is not None and large.slot is None  # skipped ahead
+    assert st["n_skip_ahead"] >= 1 and st["n_backpressure"] >= 1
+    eng.run_until_drained()
+    assert np.array_equal(small.result(),
+                          _baseline(PlusOnePagedModel(vocab), [1, 2], 2))
+    assert np.array_equal(  # the large one eventually ran, correctly
+        large.result(),
+        _baseline(PlusOnePagedModel(vocab), list(range(10, 26)), 8))
+    pool = eng.stats()["pool"]
+    assert pool["free_blocks"] == pool["n_usable_blocks"]
+
+
+def test_skip_ahead_lookahead_is_bounded_by_max_head_skips():
+    """After `max_head_skips` skips of the same head, admission reverts
+    to strict FIFO: later fitting requests wait until the head gets in
+    — the anti-starvation half of the contract."""
+    vocab = 64
+    eng = ContinuousBatchingEngine(
+        PlusOnePagedModel(vocab=vocab), {}, n_slots=6, cache_len=24,
+        paged=True, block_size=4, n_blocks=8, prefill_chunk=8,
+        max_head_skips=2)
+    running = eng.submit(list(range(8)), max_new_tokens=8)  # 4 blocks
+    eng.step()
+    large = eng.submit(list(range(10, 26)), max_new_tokens=8)  # 6 blocks
+    smalls = [eng.submit([i, i + 1], max_new_tokens=2) for i in range(3)]
+    eng.step()
+    # two skips allowed, then strict FIFO: the third small must wait
+    assert smalls[0].slot is not None and smalls[1].slot is not None
+    assert smalls[2].slot is None and large.slot is None
+    eng.step()
+    assert smalls[2].slot is None  # still FIFO-blocked behind the head
+    eng.run_until_drained()
+    for i, s in enumerate(smalls):  # everyone finished, in-order semantics
+        assert np.array_equal(
+            s.result(),
+            _baseline(PlusOnePagedModel(vocab), [i, i + 1], 2))
+    assert np.array_equal(
+        large.result(),
+        _baseline(PlusOnePagedModel(vocab), list(range(10, 26)), 8))
+    assert np.array_equal(
+        running.result(),
+        _baseline(PlusOnePagedModel(vocab), list(range(8)), 8))
+
+
+def test_strict_fifo_with_zero_lookahead():
+    """admit_lookahead=0 restores the PR 4 behaviour exactly: nothing
+    passes a blocked head."""
+    eng = ContinuousBatchingEngine(
+        PlusOnePagedModel(vocab=64), {}, n_slots=4, cache_len=24,
+        paged=True, block_size=4, n_blocks=8, prefill_chunk=8,
+        admit_lookahead=0)
+    eng.submit(list(range(8)), max_new_tokens=8)
+    eng.step()
+    large = eng.submit(list(range(10, 26)), max_new_tokens=8)
+    small = eng.submit([1, 2], max_new_tokens=2)
+    eng.step()
+    assert small.slot is None and large.slot is None
+    assert eng.stats()["n_skip_ahead"] == 0
+    eng.run_until_drained()
+    assert len(small.result()) == 2 and len(large.result()) == 8
+
+
+# ------------------------------------------------------------------ knobs
+def test_sharing_and_lookahead_knobs_require_paged_mode():
+    with pytest.raises(ValueError, match="paged=True"):
+        ContinuousBatchingEngine(ChecksumScriptModel(), {},
+                                 prefix_sharing=True)
+    with pytest.raises(ValueError, match="paged=True"):
+        ContinuousBatchingEngine(ChecksumScriptModel(), {},
+                                 admit_lookahead=2)
+    with pytest.raises(ValueError, match="paged=True"):
+        ContinuousBatchingEngine(ChecksumScriptModel(), {},
+                                 max_head_skips=2)
+
+
+def test_prefix_sharing_warns_and_disables_without_pageable_kv():
+    with pytest.warns(RuntimeWarning, match="no pageable KV"):
+        eng = ContinuousBatchingEngine(
+            ChecksumScriptModel(), {}, paged=True, prefix_sharing=True)
+    assert eng.prefix_sharing is False
+
+
+# ------------------------------------------------------------- RAG pipeline
+def _pipeline(model):
+    from repro.core.retrieval import RetrievalConfig
+    from repro.serving import HashEmbedder, RagPipeline
+
+    return RagPipeline(
+        [f"document {i} body text" for i in range(8)],
+        RetrievalConfig(bits=8, path="int_exact"),
+        model=model, params={}, dim=16,
+        embedder=HashEmbedder(dim=16), max_prompt_len=128)
+
+
+def test_encode_prompt_with_prefix_splits_context_from_query():
+    pipe = _pipeline(PlusOnePagedModel(vocab=512))
+    docs = ["alpha doc", "beta doc"]
+    p1, n1 = pipe.encode_prompt_with_prefix("what is alpha?", docs)
+    p2, n2 = pipe.encode_prompt_with_prefix("tell me about beta", docs)
+    assert n1 == n2 > 0  # same docs -> same context header
+    assert p1[:n1] == p2[:n2]  # ... bit-identical, the shareable span
+    assert p1[n1:] != p2[n2:]  # the queries differ
+    assert p1 == pipe.encode_prompt("what is alpha?", docs)
+    p3, n3 = pipe.encode_prompt_with_prefix("what is alpha?", ["gamma doc"])
+    assert p3[:n3] != p1[:n1]  # different docs -> different prefix
+
+
+def test_decode_engine_auto_enables_sharing_for_paged_attention():
+    pipe = _pipeline(PlusOnePagedModel(vocab=512))
+    eng = pipe.decode_engine(n_slots=2, paged=True, block_size=8,
+                             start=False)
+    assert eng.prefix_sharing is True  # None resolved to "KV is paged"
+    eng.close()
+    eng = pipe.decode_engine(n_slots=2, paged=True, block_size=8,
+                             prefix_sharing=False, start=False)
+    assert eng.prefix_sharing is False
+    eng.close()
+    eng = pipe.decode_engine(n_slots=2, start=False)
+    assert eng.prefix_sharing is False  # fixed-slot: no pool to share
+    eng.close()
+
+
+def test_query_stream_generate_shares_repeated_context():
+    """Concurrent queries that retrieve the same documents share their
+    context KV automatically: drive the pipeline-computed prefix hints
+    through a paged engine and observe pool-level hits."""
+    pipe = _pipeline(PlusOnePagedModel(vocab=512))
+    eng = pipe.decode_engine(n_slots=4, paged=True, block_size=8,
+                             prefill_chunk=8, max_new_tokens=4,
+                             start=False)
+    docs = ["document 3 body text", "document 5 body text"]
+    tickets = []
+    for q in ("same docs, query one", "same docs, query two",
+              "same docs, query three"):
+        prompt, prefix_len = pipe.encode_prompt_with_prefix(q, docs)
+        tickets.append(eng.submit(prompt, max_new_tokens=4,
+                                  prefix_len=prefix_len))
+    eng.run_until_drained()
+    for t in tickets:
+        assert t.done() and t._error is None
+    pool = eng.stats()["pool"]
+    assert pool["n_prefix_hits"] == 2  # one publisher, two attachers
+    assert pool["free_blocks"] == pool["n_usable_blocks"]
+    eng.close()
