@@ -24,6 +24,12 @@ that strict token parity would flake. At fp32 the rounding gap is ~1e-7
 against typical top-2 gaps of ~1e-3, so the parity assert is exact and
 stable across XLA versions.
 
+A third engine variant, `paged_kernel`, runs the same paged pool with
+decode routed through the fused Pallas flash-decoding kernel
+(`kernels/paged_attend.py`) instead of the dense-window gather: its rows
+are the kernel-vs-gather column of the artifact, and it is held to the
+same greedy token-parity gate as the other engines.
+
 Emits BENCH_paged_cache.json (rows + config) for the CI perf artifact.
 
 Run: PYTHONPATH=src python -m benchmarks.bench_paged_cache [--tiny]
@@ -112,7 +118,8 @@ def _pool_tokens(bench_cfg: dict) -> int:
     return bench_cfg["fixed_slots"] * bench_cfg["cache_len"]
 
 
-def _make_engine(model, params, bench_cfg: dict, paged: bool, kind: str):
+def _make_engine(model, params, bench_cfg: dict, paged: bool, kind: str,
+                 paged_kernel: bool = False):
     """Equal-HBM engines. The fixed engine must provision every slot for
     the worst-case request (`cache_len`), which caps it at `fixed_slots`;
     the paged engine spends the same tokens as a shared pool and sizes
@@ -133,6 +140,7 @@ def _make_engine(model, params, bench_cfg: dict, paged: bool, kind: str):
             block_size=bench_cfg["block_size"],
             n_blocks=n_blocks,
             prefill_chunk=bench_cfg["prefill_chunk"],
+            paged_kernel=paged_kernel or None,
         )
     return ContinuousBatchingEngine(
         model,
@@ -206,10 +214,16 @@ def run(bench_cfg: dict) -> list[dict]:
                 cache_len=len(p) + new,
             )
             refs.append(np.asarray(out)[0])
-        for paged in (False, True):
-            engine = _make_engine(model, params, bench_cfg, paged, kind)
+        # third variant: same paged pool, decode through the fused Pallas
+        # flash-decoding kernel instead of the dense-window gather — the
+        # kernel-vs-gather column of the BENCH artifact
+        for name, paged, kernel in (("fixed", False, False),
+                                    ("paged", True, False),
+                                    ("paged_kernel", True, True)):
+            engine = _make_engine(model, params, bench_cfg, paged, kind,
+                                  paged_kernel=kernel)
             row = _bench_cell(engine, reqs, refs, repeats)
-            row["engine"] = "paged" if paged else "fixed"
+            row["engine"] = name
             row["workload"] = kind
             row["cache_tokens"] = _pool_tokens(bench_cfg)
             # keep row schemas homogeneous across engines (BENCH contract)
@@ -259,6 +273,13 @@ def main(argv=None) -> None:
     )
     print(msg)
     print(f"uniform decode throughput: paged/fixed = {tput:.2f}x")
+    # kernel-vs-gather: informational column (interpret-mode Pallas on CPU
+    # is expected to trail the fused-XLA gather; the hard gate is parity,
+    # which `bad` above enforces for kernel rows too)
+    for kind in ("bimodal", "uniform"):
+        kps = _cell(rows, "paged_kernel", kind)["tok_per_s"]
+        gps = _cell(rows, "paged", kind)["tok_per_s"]
+        print(f"{kind} decode throughput: kernel/gather = {kps / gps:.2f}x")
     if conc < cfg["min_concurrency"]:
         raise SystemExit(f"paged concurrency {conc:.2f}x < 2x fixed at equal memory")
     if tput < cfg["min_uniform_tput"]:

@@ -92,6 +92,9 @@ class ModelConfig:
     scan_unroll: bool = False        # unroll layer scans (flop-accounting
                                      # minis only: XLA cost analysis counts
                                      # scan bodies ONCE, ignoring trip count)
+    paged_kernel: bool = False       # paged decode via the fused Pallas
+                                     # flash-decoding kernel instead of the
+                                     # dense-window gather reference path
 
     @property
     def padded_vocab_size(self) -> int:

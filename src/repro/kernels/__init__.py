@@ -3,8 +3,11 @@
   dirc_mac      bit-serial bit-plane MAC (paper-faithful digital CIM math)
   score_matmul  MXU-path INT8 score matmul (+fused cosine) — beyond-paper
   topk_select   per-block local top-k (the local comparator)
+  paged_attend  fused paged-attention decode: flash-decoding split-KV over
+                the block table, new-token scatter folded into the launch
 
 ops.py = jit'd public wrappers; ref.py = pure-jnp oracles. All kernels are
-validated in interpret mode on CPU; on TPU set REPRO_PALLAS_INTERPRET=0.
+validated in interpret mode on CPU; the `REPRO_PALLAS_INTERPRET` env var
+(see _env.py) is the single interpret/compile switch — set it to 0 on TPU.
 """
-from . import ops, ref  # noqa: F401
+from . import ops, paged_attend, ref  # noqa: F401

@@ -22,10 +22,13 @@ with nw = dim / 32 packed words.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ._env import resolve_interpret
 
 BLOCK_N = 128  # docs per block = one DIRC column's worth of parallelism
 
@@ -54,7 +57,7 @@ def dirc_mac_packed(
     q_planes: jax.Array,
     d_planes: jax.Array,
     bits: int = 8,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     block_n: int = BLOCK_N,
 ) -> jax.Array:
     """q_planes (b, bits, nw) uint32, d_planes (bits, nw, n) uint32 -> (b, n) int32.
@@ -78,5 +81,5 @@ def dirc_mac_packed(
         ],
         out_specs=pl.BlockSpec((b, block_n), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q_planes, d_planes)

@@ -6,18 +6,16 @@ bodies in interpret mode; on TPU set REPRO_PALLAS_INTERPRET=0).
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bitplane
+from ._env import INTERPRET
 from . import dirc_mac as _dirc
 from . import score_matmul as _score
 from . import topk_select as _topk
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:

@@ -1,0 +1,196 @@
+"""Pallas kernel: fused paged-attention decode (flash-decoding split-KV).
+
+The gather path in `models.attention.paged_attend` materializes every
+row's full logical KV window — `(b, max_blocks * block_size, kh, hd)` of
+activation per step — before attending: paged HBM *residency* with
+dense-window *compute*. This kernel removes the materialization by
+walking the block table inside the kernel.
+
+Split-KV dataflow (flash-decoding):
+
+    grid = (row, kv_chunk)   # one program per (b, chunk of the block table)
+
+Each program
+  1. scatters the new-token K/V that land inside its chunk into the
+     shared pools (the `_paged_write` fold-in — pools are aliased
+     input/outputs, so the write is in place and rows' chunks are
+     disjoint by construction; invalid lanes simply skip the write
+     instead of scribbling the NULL scratch block),
+  2. gathers only its `chunk_blocks` physical blocks through the block
+     table,
+  3. computes scores for all `t` query positions against its chunk with
+     a causal + true-length mask, keeping *local* softmax statistics:
+     chunk max `m`, unnormalized weight sum `denom`, and weighted-value
+     accumulator `acc` in fp32.
+
+The per-chunk `(acc, m, denom)` partials are reduced in a second pass
+(plain jnp in the jitted wrapper): with `M = max_c m_c` and
+`alpha_c = exp(m_c - M)`, the exact softmax-weighted output is
+`sum_c acc_c * alpha_c / sum_c denom_c * alpha_c` — the standard
+online-softmax rescale, so long contexts parallelize over the KV axis
+instead of serializing per row.
+
+Layout notes: the block table and per-row length/n_valid scalars ride in
+SMEM; the K/V pools are unblocked `ANY`-space refs indexed dynamically
+per physical block (interpret mode executes this directly; a Mosaic
+build would double-buffer the per-block loads with `make_async_copy`).
+Like every kernel in this package it is validated in interpret mode on
+CPU; `REPRO_PALLAS_INTERPRET=0` compiles it for TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._env import resolve_interpret
+
+NEG_INF = -1.0e30
+# Target tokens per chunk: one program's KV tile. 128 keeps the score
+# matmul lane-aligned while bounding per-program VMEM.
+CHUNK_TOKENS = 128
+
+
+def _paged_attend_kernel(table_ref, len_ref, nv_ref, q_ref, kn_ref, vn_ref,
+                         kpool_ref, vpool_ref,
+                         acc_ref, m_ref, den_ref, kout_ref, vout_ref,
+                         *, block_size: int, chunk_blocks: int, scale: float):
+    j = pl.program_id(1)
+    t, h, hd = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    kh = kn_ref.shape[2]
+    g = h // kh
+    bs, cb = block_size, chunk_blocks
+    ct = cb * bs
+
+    length = len_ref[0]
+    n_valid = nv_ref[0]
+
+    # -- fused `_paged_write`: scatter the new tokens owned by this chunk.
+    # Each logical position belongs to exactly one (row, chunk) program,
+    # and live rows' physical blocks are disjoint (CoW barriers guarantee
+    # shared blocks are never write targets), so the in-place pool writes
+    # below never race.
+    for i in range(t):
+        pos = length + i
+        lb = pos // bs
+        own = (lb >= j * cb) & (lb < (j + 1) * cb) & (i < n_valid)
+        phys = table_ref[0, lb]
+        off = pos % bs
+
+        @pl.when(own)
+        def _():
+            kout_ref[phys, off] = kn_ref[0, i].astype(kout_ref.dtype)
+            vout_ref[phys, off] = vn_ref[0, i].astype(vout_ref.dtype)
+
+    # -- gather this chunk's physical blocks through the block table.
+    ks, vs = [], []
+    for c in range(cb):
+        phys = table_ref[0, j * cb + c]
+        ks.append(kpool_ref[phys])
+        vs.append(vpool_ref[phys])
+    kc = jnp.concatenate(ks, axis=0)                      # (ct, kh, hd)
+    vc = jnp.concatenate(vs, axis=0)
+
+    # Overlay the new tokens in-register: the aliased pool read above may
+    # predate this program's own scatter, and the overlay keeps compute
+    # independent of cross-buffer read-after-write ordering.
+    local_iota = jax.lax.broadcasted_iota(jnp.int32, (ct, 1), 0)[:, 0]
+    for i in range(t):
+        hit = (local_iota == length + i - j * ct) & (i < n_valid)
+        kc = jnp.where(hit[:, None, None], kn_ref[0, i][None], kc)
+        vc = jnp.where(hit[:, None, None], vn_ref[0, i][None], vc)
+
+    # -- local online-softmax statistics for this chunk.
+    q = q_ref[0].astype(jnp.float32).reshape(t, kh, g, hd) * scale
+    s = jnp.einsum("tkgd,skd->tkgs", q, kc.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    kv_pos = j * ct + local_iota
+    q_pos = length + jax.lax.broadcasted_iota(jnp.int32, (t, 1), 0)[:, 0]
+    visible = kv_pos[None, :] <= q_pos[:, None]           # (t, ct)
+    s = jnp.where(visible[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                               # (t, kh, g)
+    p = jnp.where(visible[:, None, None, :], jnp.exp(s - m[..., None]), 0.0)
+    den = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("tkgs,skd->tkgd", p.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    acc_ref[0, 0] = acc.reshape(t, h, hd)
+    m_ref[0, 0] = m.reshape(t, h)
+    den_ref[0, 0] = den.reshape(t, h)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_blocks", "interpret"))
+def paged_attend_fused(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                       k_pool: jax.Array, v_pool: jax.Array,
+                       block_table: jax.Array, length: jax.Array,
+                       n_valid: jax.Array,
+                       chunk_blocks: Optional[int] = None,
+                       interpret: Optional[bool] = None):
+    """Fused scatter + block-table attention over `t` new positions.
+
+    q (b, t, h, hd) post-RoPE queries; k_new/v_new (b, t, kh, hd) the new
+    K/V for logical positions `length[b] .. length[b] + t - 1` (entries
+    past `n_valid[b]` are padding and are neither written nor attended);
+    pools (n_blocks, block_size, kh, hd); block_table (b, max_blocks)
+    int32. Returns (out (b, t, h, hd) in q.dtype, k_pool', v_pool') with
+    identical semantics to the gather path in `models.attention`, except
+    invalid lanes skip the scatter entirely instead of writing the
+    NULL_BLOCK scratch (both leave scratch content unspecified).
+    """
+    b, t, h, hd = q.shape
+    _, bs, kh, _ = k_pool.shape
+    mb = block_table.shape[1]
+    cb = min(mb, chunk_blocks or max(1, CHUNK_TOKENS // bs))
+    # Pad the table to a chunk multiple with NULL_BLOCK: the padded
+    # logical positions sit past every row's capacity, so the mask
+    # already hides whatever the scratch block holds.
+    mb_p = (mb + cb - 1) // cb * cb
+    if mb_p != mb:
+        block_table = jnp.pad(block_table, ((0, 0), (0, mb_p - mb)))
+    nc = mb_p // cb
+
+    smem = pltpu.TPUMemorySpace.SMEM
+    anym = pltpu.TPUMemorySpace.ANY
+    acc, m, den, kp, vp = pl.pallas_call(
+        functools.partial(_paged_attend_kernel, block_size=bs,
+                          chunk_blocks=cb, scale=hd**-0.5),
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((1, mb_p), lambda i, j: (i, 0), memory_space=smem),
+            pl.BlockSpec((1,), lambda i, j: (i,), memory_space=smem),
+            pl.BlockSpec((1,), lambda i, j: (i,), memory_space=smem),
+            pl.BlockSpec((1, t, h, hd), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, kh, hd), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, kh, hd), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec(memory_space=anym),
+            pl.BlockSpec(memory_space=anym),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, t, h, hd), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, t, h), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, t, h), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec(memory_space=anym),
+            pl.BlockSpec(memory_space=anym),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, t, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, t, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, t, h), jnp.float32),
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+        ],
+        input_output_aliases={6: 3, 7: 4},
+        interpret=resolve_interpret(interpret),
+    )(block_table, length.astype(jnp.int32), n_valid.astype(jnp.int32),
+      q, k_new, v_new, k_pool, v_pool)
+
+    # -- second pass: flash-decoding combine of the per-chunk partials.
+    big = jnp.max(m, axis=1)                              # (b, t, h)
+    alpha = jnp.exp(m - big[:, None])                     # (b, nc, t, h)
+    den_tot = jnp.sum(den * alpha, axis=1)
+    out = jnp.sum(acc * alpha[..., None], axis=1)
+    out = out / jnp.maximum(den_tot, 1e-30)[..., None]
+    return out.astype(q.dtype), kp, vp

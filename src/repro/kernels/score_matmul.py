@@ -13,10 +13,13 @@ the contraction dim is kept whole (128..1024 fits VMEM comfortably:
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ._env import resolve_interpret
 
 BLOCK_N = 128
 
@@ -42,7 +45,8 @@ def _score_cosine_kernel(q_ref, d_ref, qn_ref, dn_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
 def score_matmul_int(
-    q: jax.Array, docs: jax.Array, interpret: bool = True, block_n: int = BLOCK_N
+    q: jax.Array, docs: jax.Array, interpret: Optional[bool] = None,
+    block_n: int = BLOCK_N,
 ) -> jax.Array:
     """q (b, dim) int8 x docs (n, dim) int8 -> (b, n) int32 exact scores."""
     b, dim = q.shape
@@ -57,7 +61,7 @@ def score_matmul_int(
         ],
         out_specs=pl.BlockSpec((b, block_n), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, docs)
 
 
@@ -67,7 +71,7 @@ def score_matmul_cosine(
     docs: jax.Array,
     q_norms: jax.Array,
     doc_norms: jax.Array,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     block_n: int = BLOCK_N,
 ) -> jax.Array:
     """Fused cosine scores: (b, n) fp32 = (q @ D^T) / (|q| |d|).
@@ -89,5 +93,5 @@ def score_matmul_cosine(
         ],
         out_specs=pl.BlockSpec((b, block_n), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, docs, q_norms, doc_norms)

@@ -10,10 +10,13 @@ branch-free, VPU-only, no sort network. k <= 64.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ._env import resolve_interpret
 
 BLOCK_N = 512
 NEG_INF = -3.0e38  # python float: becomes an immediate inside the kernel
@@ -36,7 +39,8 @@ def _topk_kernel(s_ref, vals_ref, idx_ref, *, k: int):
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret", "block_n"))
 def blockwise_topk(
-    scores: jax.Array, k: int, interpret: bool = True, block_n: int = BLOCK_N
+    scores: jax.Array, k: int, interpret: Optional[bool] = None,
+    block_n: int = BLOCK_N,
 ) -> tuple[jax.Array, jax.Array]:
     """scores (b, n) fp32 -> (vals (b, nb, k), local idx (b, nb, k)).
 
@@ -58,6 +62,6 @@ def blockwise_topk(
             jax.ShapeDtypeStruct((b, nb, k), jnp.float32),
             jax.ShapeDtypeStruct((b, nb, k), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(scores)
     return vals, idx

@@ -17,7 +17,9 @@ batch at token boundaries), reporting end-to-end + time-to-first-token +
 per-token latency and decode slot occupancy. --paged swaps the fixed
 per-slot cache regions for the shared paged KV block pool
 (serving/paged_cache.py) with chunked prefill, adding pool-utilization
-and admission-backpressure counters to the report.
+and admission-backpressure counters to the report; --paged-kernel routes
+paged attention through the fused Pallas flash-decoding kernel
+(kernels/paged_attend.py) instead of the dense-window gather path.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
@@ -29,7 +31,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --rag --open-loop --generate \
       --offered-qps 20 --rag-queries 32 --new-tokens 16 --n-slots 4
   PYTHONPATH=src python -m repro.launch.serve --rag --open-loop --generate \
-      --paged --n-slots 16 --block-size 16 --prefill-chunk 32
+      --paged --n-slots 16 --block-size 16 --prefill-chunk 32 --paged-kernel
 """
 from __future__ import annotations
 
@@ -252,6 +254,7 @@ def serve_rag_open_loop_generate(
         paged: bool = False, block_size: Optional[int] = None,
         n_blocks: Optional[int] = None, prefill_chunk: Optional[int] = None,
         prefix_sharing: Optional[bool] = None,
+        paged_kernel: Optional[bool] = None,
         arch: str = "phi4-mini-3.8b", path: str = "int_exact",
         seed: int = 0, pipe: Optional[RagPipeline] = None) -> dict:
     """Open-loop retrieval+generation through the shared streaming front door.
@@ -271,6 +274,8 @@ def serve_rag_open_loop_generate(
     `prefix_sharing` (None: on iff paged attention) maps identical
     retrieved-context prefixes onto shared blocks with copy-on-write,
     adding shared-block / CoW / hit-rate counters to the report.
+    `paged_kernel=True` routes paged attention through the fused Pallas
+    flash-decoding kernel (None defers to the model config).
     """
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
@@ -289,7 +294,8 @@ def serve_rag_open_loop_generate(
                                 paged=paged, block_size=block_size,
                                 n_blocks=n_blocks,
                                 prefill_chunk=prefill_chunk,
-                                prefix_sharing=prefix_sharing, start=True)
+                                prefix_sharing=prefix_sharing,
+                                paged_kernel=paged_kernel, start=True)
 
     # compile every serving shape off-clock: the (max_batch, dim) search,
     # the (len<=max_prompt_len,) prefill, and the (n_slots, 1) decode step
@@ -382,6 +388,7 @@ def serve_rag_open_loop_generate(
         out["n_skip_ahead"] = est.get("n_skip_ahead", 0)
         out["n_prefill_chunks"] = est.get("n_prefill_chunks", 0)
         out["prefix_sharing"] = est.get("prefix_sharing", False)
+        out["paged_kernel"] = est.get("paged_kernel")
         if "pool" in est:
             out["pool"] = est["pool"]
     out.update(_percentiles_ms(e2e_s))
@@ -433,6 +440,12 @@ def main() -> None:
                          "prefixes as refcounted blocks with copy-on-write "
                          "divergence (default: on for paged attention; "
                          "--no-prefix-sharing disables)")
+    ap.add_argument("--paged-kernel", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="--paged: route paged attention through the fused "
+                         "Pallas flash-decoding kernel instead of the "
+                         "dense-window gather path (default: defer to the "
+                         "model config)")
     args = ap.parse_args()
     if args.rag and args.open_loop and args.generate:
         out = serve_rag_open_loop_generate(
@@ -445,6 +458,7 @@ def main() -> None:
             block_size=args.block_size, n_blocks=args.n_blocks,
             prefill_chunk=args.prefill_chunk,
             prefix_sharing=args.prefix_sharing,
+            paged_kernel=args.paged_kernel,
             arch=args.arch or "phi4-mini-3.8b")
         print(f"open-loop generate: offered {out['offered_qps']:.0f} q/s, "
               f"finished {out['n_finished']}/{out['n_queries']} requests "

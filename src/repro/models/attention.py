@@ -109,23 +109,38 @@ def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     scale = d**-0.5
     cq = min(chunk_q, sq) if chunk_q else sq
     ckv = min(chunk_kv, skv) if chunk_kv else skv
-    if sq % cq or skv % ckv:
-        return _dense_attention(q, k, v, causal)
-    nq, nkv = sq // cq, skv // ckv
+    # Non-divisible lengths are padded to chunk multiples and masked —
+    # never densified: padded KV columns are hidden by the validity mask,
+    # padded query rows are sliced off the output. The first KV chunk is
+    # always fully valid (ckv <= skv), so the running max is finite
+    # before any padded column is scanned.
+    pq, pkv = (-sq) % cq, (-skv) % ckv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    sq_p, skv_p = sq + pq, skv + pkv
+    nq, nkv = sq_p // cq, skv_p // ckv
 
     qc = (q * scale).reshape(b, nq, cq, kh, g, d)
     kc = k.reshape(b, nkv, ckv, kh, d)
     vc = v.reshape(b, nkv, ckv, kh, d)
-    q_pos = jnp.arange(sq).reshape(nq, cq)
-    k_pos = jnp.arange(skv).reshape(nkv, ckv)
+    q_pos = jnp.arange(sq_p).reshape(nq, cq)
+    k_pos = jnp.arange(skv_p).reshape(nkv, ckv)
 
     def kv_step(carry, inp):
         acc, m, denom, qi, qb = carry
         kb, vb, kp = inp
         s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
                        preferred_element_type=jnp.float32)
+        mask = None
         if causal:
             mask = q_pos[qi][:, None] >= kp[None, :]
+        if pkv:
+            kv_ok = (kp < skv)[None, :]
+            mask = kv_ok if mask is None else mask & kv_ok
+        if mask is not None:
             s = jnp.where(mask[None, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -152,8 +167,8 @@ def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     _, outs = jax.lax.scan(
         q_step, None, (jnp.arange(nq), qc.swapaxes(0, 1)), unroll=unroll
     )  # (nq, b, cq, kh, g, d)
-    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, d)
-    return out.astype(q.dtype)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, h, d)
+    return out[:, :sq].astype(q.dtype)
 
 
 def _dense_attention(q, k, v, causal):
@@ -238,10 +253,13 @@ def decode_step(cfg: ModelConfig, params: dict, x: jax.Array,
         k_new = rope_mod.apply_rotary(k_new, angles)
     b = x.shape[0]
     S = cache.k.shape[1]
-    # Scatter the new K/V at per-batch positions via one-hot (dynamic per-b).
-    onehot = jax.nn.one_hot(cache.length, S, dtype=cache.k.dtype)  # (b, S)
-    k = cache.k + onehot[:, :, None, None] * k_new
-    v = cache.v + onehot[:, :, None, None] * v_new
+    # Overwrite the new K/V at per-batch positions (dynamic per-b). An
+    # overwrite, not an additive one-hot: the target cell may hold stale
+    # nonzero data (e.g. a reused slot's retired cache), which an additive
+    # scatter would fold into the new entry.
+    hit = jnp.arange(S)[None, :] == cache.length[:, None]          # (b, S)
+    k = jnp.where(hit[:, :, None, None], k_new.astype(cache.k.dtype), cache.k)
+    v = jnp.where(hit[:, :, None, None], v_new.astype(cache.v.dtype), cache.v)
     g = h // kh
     qg = q.reshape(b, 1, kh, g, hd) * hd**-0.5
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
@@ -295,24 +313,31 @@ def _paged_write(pool: jax.Array, new: jax.Array, cache: PagedKVCache,
 def paged_attend(cfg: ModelConfig, params: dict, x: jax.Array,
                  cache: PagedKVCache, angles: Optional[jax.Array],
                  n_valid: jax.Array,
-                 h: Optional[int] = None, kh: Optional[int] = None):
+                 h: Optional[int] = None, kh: Optional[int] = None,
+                 paged_kernel: Optional[bool] = None):
     """Block-table attention over `t` new positions per row.
 
     x (b, t, d) holds each row's next `n_valid[b] <= t` tokens starting
     at logical position `cache.length[b]` (t == 1 is the decode step,
     t == prefill_chunk is one chunked-prefill piece; same trace, two
     compiled shapes). New K/V are scattered into the shared pools at
-    those positions, then the row's full logical window is gathered back
-    via its block table and attended with a causal + true-length mask —
-    position j is visible to query i iff j <= length + i. Returns
-    (y (b, t, d), k_pool', v_pool'); rows beyond n_valid produce garbage
-    outputs the caller must ignore (their writes went to the scratch
-    block, so the pools stay clean).
+    those positions, then the row's full logical window is attended with
+    a causal + true-length mask — position j is visible to query i iff
+    j <= length + i. Returns (y (b, t, d), k_pool', v_pool'); rows
+    beyond n_valid produce garbage outputs the caller must ignore (the
+    pools stay clean outside the scratch block).
 
-    The gather materializes (b, max_blocks * block_size, kh, hd) of
-    activation per step — paged HBM *residency* with dense-window
-    compute. A fused Pallas gather-attend kernel can remove the
-    materialization later without changing this interface.
+    Two dispatch paths, selected by `paged_kernel` (falling back to
+    `cfg.paged_kernel`):
+
+    * gather reference (default): scatter via `_paged_write`, then
+      gather the full window — (b, max_blocks * block_size, kh, hd) of
+      activation per step. Paged HBM *residency* with dense-window
+      compute; kept as the parity oracle.
+    * fused kernel: `kernels.paged_attend.paged_attend_fused` walks the
+      block table inside a flash-decoding Pallas kernel (split-KV
+      partials + combine) with the new-token scatter folded into the
+      same launch, so the dense window is never materialized.
     """
     from . import rope as rope_mod
 
@@ -323,9 +348,19 @@ def paged_attend(cfg: ModelConfig, params: dict, x: jax.Array,
     if angles is not None:
         q = rope_mod.apply_rotary(q, angles)
         k_new = rope_mod.apply_rotary(k_new, angles)
+    b, t = x.shape[:2]
+    cdt = layers.dt(cfg.compute_dtype)
+    use_kernel = cfg.paged_kernel if paged_kernel is None else paged_kernel
+    if use_kernel:
+        from repro.kernels.paged_attend import paged_attend_fused
+
+        out, k_pool, v_pool = paged_attend_fused(
+            q, k_new, v_new, cache.k_pool, cache.v_pool,
+            cache.block_table, cache.length, n_valid)
+        y = out.reshape(b, t, h * hd).astype(cdt) @ params["wo"].astype(cdt)
+        return y, k_pool, v_pool
     k_pool = _paged_write(cache.k_pool, k_new, cache, n_valid)
     v_pool = _paged_write(cache.v_pool, v_new, cache, n_valid)
-    b, t = x.shape[:2]
     block_size = k_pool.shape[1]
     mb = cache.block_table.shape[1]
     S = mb * block_size
@@ -341,7 +376,6 @@ def paged_attend(cfg: ModelConfig, params: dict, x: jax.Array,
     s = jnp.where(visible[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p, v).reshape(b, t, h * hd)
-    cdt = layers.dt(cfg.compute_dtype)
     y = out.astype(cdt) @ params["wo"].astype(cdt)
     return y, k_pool, v_pool
 

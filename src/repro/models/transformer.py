@@ -284,7 +284,8 @@ class DecoderLM:
     def paged_step(self, params, pools: PagedDecodeCaches,
                    block_tables: jax.Array, lengths: jax.Array,
                    tokens: jax.Array, n_valid: jax.Array,
-                   positions: Optional[jax.Array] = None):
+                   positions: Optional[jax.Array] = None,
+                   paged_kernel: Optional[bool] = None):
         """Advance each row by its next `n_valid[b] <= t` tokens.
 
         tokens (b, t) holds row b's tokens for logical positions
@@ -294,7 +295,9 @@ class DecoderLM:
         one trace, two compiled shapes. Returns (logits (b, V) at each
         row's LAST VALID position, new pools). Inactive rows (all-null
         block table, length 0) write only the scratch block and their
-        logits are garbage the caller ignores.
+        logits are garbage the caller ignores. `paged_kernel` selects the
+        fused Pallas path in `attention.paged_attend` (None defers to
+        `cfg.paged_kernel`).
         """
         cfg = self.cfg
         x = layers.embed_tokens(cfg, params["embedding"], tokens)
@@ -312,7 +315,8 @@ class DecoderLM:
                 length=lengths)
             h = layers.apply_norm(cfg, p["attn_norm"], x)
             y, kp2, vp2 = attention.paged_attend(
-                cfg, p["attn"], h, cache, angles, n_valid)
+                cfg, p["attn"], h, cache, angles, n_valid,
+                paged_kernel=paged_kernel)
             return self._block_join(p, x, h, y), (kp2, vp2)
 
         x, (k_new, v_new) = jax.lax.scan(

@@ -266,6 +266,11 @@ class ContinuousBatchingEngine:
     max_head_skips: starvation guard — after the same head request has
         been skipped this many times, admission reverts to strict FIFO
         until it gets in (default 16).
+    paged_kernel: route paged attention through the fused Pallas
+        flash-decoding kernel (`kernels.paged_attend`) instead of the
+        dense-window gather path. None (default) defers to the model
+        (`cfg.paged_kernel`) and keeps duck-typed models whose
+        `paged_step` lacks the knob working; True/False force it.
     clock: monotonic-seconds callable, injectable for deterministic tests.
     start: spawn the background decode loop. With start=False the engine
         is in *manual mode*: call `step()` yourself (or let
@@ -296,6 +301,7 @@ class ContinuousBatchingEngine:
         prefix_sharing: bool = False,
         admit_lookahead: Optional[int] = None,
         max_head_skips: Optional[int] = None,
+        paged_kernel: Optional[bool] = None,
         clock: Callable[[], float] = time.monotonic,
         start: bool = False,
     ):
@@ -304,13 +310,13 @@ class ContinuousBatchingEngine:
         if cache_len < 2:
             raise ValueError("cache_len must be >= 2")
         paged_knobs = (block_size, n_blocks, prefill_chunk,
-                       admit_lookahead, max_head_skips)
+                       admit_lookahead, max_head_skips, paged_kernel)
         if not paged and (any(k is not None for k in paged_knobs)
                           or prefix_sharing):
             raise ValueError(
                 "block/chunk/sharing knobs (block_size, n_blocks, "
                 "prefill_chunk, prefix_sharing, admit_lookahead, "
-                "max_head_skips) require paged=True")
+                "max_head_skips, paged_kernel) require paged=True")
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -318,6 +324,7 @@ class ContinuousBatchingEngine:
         self.eos_id = eos_id
         self.temperature = temperature
         self.paged = paged
+        self.paged_kernel: Optional[bool] = None
         self._key = key if key is not None else jax.random.key(0)
         self._clock = clock
         self._decode = jax.jit(
@@ -335,16 +342,18 @@ class ContinuousBatchingEngine:
         if paged:
             if not self._kv_paged and (block_size is not None
                                        or n_blocks is not None
+                                       or paged_kernel is not None
                                        or prefix_sharing):
-                # slot-resident state has no pool: explicit pool geometry
-                # or sharing would silently vanish — say so instead
+                # slot-resident state has no pool: explicit pool geometry,
+                # sharing, or the fused kernel would silently vanish —
+                # say so instead
                 import warnings
 
                 warnings.warn(
                     f"{type(model).__name__} has no pageable KV cache; "
-                    "block_size/n_blocks/prefix_sharing are ignored "
-                    "(state stays slot-resident, only chunked admission "
-                    "applies)",
+                    "block_size/n_blocks/prefix_sharing/paged_kernel are "
+                    "ignored (state stays slot-resident, only chunked "
+                    "admission applies)",
                     RuntimeWarning, stacklevel=2)
             block_size = block_size or 16
             if block_size < 1:
@@ -369,9 +378,18 @@ class ContinuousBatchingEngine:
                 n_blocks, block_size,
                 max_blocks_per_seq=blocks_for(cache_len, block_size))
             self._pools = model.init_paged_caches(n_blocks, block_size)
-            self._paged_step = jax.jit(
-                lambda p, pools, tbl, ln, tok, nv: model.paged_step(
-                    p, pools, tbl, ln, tok, nv))
+            self.paged_kernel = paged_kernel
+            if paged_kernel is None:
+                # model decides (cfg.paged_kernel); also keeps duck-typed
+                # models whose paged_step lacks the knob working
+                self._paged_step = jax.jit(
+                    lambda p, pools, tbl, ln, tok, nv: model.paged_step(
+                        p, pools, tbl, ln, tok, nv))
+            else:
+                self._paged_step = jax.jit(
+                    lambda p, pools, tbl, ln, tok, nv: model.paged_step(
+                        p, pools, tbl, ln, tok, nv,
+                        paged_kernel=paged_kernel))
             self._pool_block_axes = self._detect_block_axes(block_size)
             self._copy_block = jax.jit(self._copy_block_impl)
             self._lengths = np.zeros((n_slots,), np.int64)
@@ -609,6 +627,7 @@ class ContinuousBatchingEngine:
                 out["prefill_chunk"] = self.prefill_chunk
             if self._kv_paged:
                 out["prefix_sharing"] = self.prefix_sharing
+                out["paged_kernel"] = self.paged_kernel
                 out["pool"] = self._pcm.stats()
             return out
 

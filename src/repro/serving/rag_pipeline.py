@@ -41,7 +41,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -128,10 +128,13 @@ class RagPipeline:
         dim: int = 512,
         max_prompt_len: int = 512,
         n_shards: int = 0,
+        clock: Callable[[], float] = time.monotonic,
     ):
         """n_shards=0 builds the monolithic single-macro DircRagIndex;
         n_shards>=1 builds a ShardedDircIndex, which also unlocks
-        add_docs/delete_docs (incremental corpus updates)."""
+        add_docs/delete_docs (incremental corpus updates). `clock` is the
+        monotonic-seconds source for every pipeline deadline (and the
+        engines it builds) — injectable for deterministic tests."""
         self.tokenizer = ByteTokenizer()
         self.embedder = embedder or HashEmbedder(dim=dim)
         self.doc_texts = list(doc_texts)
@@ -145,6 +148,7 @@ class RagPipeline:
             GenerationEngine(model, params) if model is not None else None
         )
         self.max_prompt_len = max_prompt_len
+        self._clock = clock
 
     # ------------------------------------------------------------ retrieval
     def search_batch(
@@ -196,6 +200,7 @@ class RagPipeline:
                       n_blocks: Optional[int] = None,
                       prefill_chunk: Optional[int] = None,
                       prefix_sharing: Optional[bool] = None,
+                      paged_kernel: Optional[bool] = None,
                       start: bool = True) -> ContinuousBatchingEngine:
         """A ContinuousBatchingEngine over this pipeline's model.
 
@@ -214,7 +219,9 @@ class RagPipeline:
         defaults to the fixed-slot footprint). `prefix_sharing=None`
         turns copy-on-write prefix sharing on exactly when the model's
         KV is paged (attention families under `paged=True`); pass
-        True/False to force it.
+        True/False to force it. `paged_kernel` likewise passes through:
+        True routes paged attention through the fused Pallas
+        flash-decoding kernel, None defers to the model config.
         """
         if self.engine is None:
             raise TypeError("decode_engine requires a model "
@@ -232,6 +239,7 @@ class RagPipeline:
             temperature=temperature,
             paged=paged, block_size=block_size, n_blocks=n_blocks,
             prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+            paged_kernel=paged_kernel, clock=self._clock,
             start=start,
         )
 
@@ -435,7 +443,8 @@ class RagPipeline:
 
     async def aquery_stream(self, requests, k: int = 3, max_batch: int = 32,
                             max_wait_ms: float = 5.0,
-                            key: Optional[jax.Array] = None):
+                            key: Optional[jax.Array] = None,
+                            close_timeout: float = 30.0):
         """Async-generator twin of `query_stream` for asyncio servers.
 
         The blocking waits happen on worker threads via
@@ -443,39 +452,51 @@ class RagPipeline:
         background scheduler forms batches. Closing this generator early
         (break / `aclose()`) closes the underlying `query_stream`, whose
         `finally` shuts down the background scheduler thread — consumers
-        that bail out never leak the flush loop."""
-        import asyncio
-
+        that bail out never leak the flush loop. `close_timeout` bounds
+        (in injected-clock seconds) how long that shutdown retries a
+        still-executing generator before warning."""
         it = self.query_stream(requests, k=k, max_batch=max_batch,
                                max_wait_ms=max_wait_ms, key=key)
         sentinel = object()
         try:
+            import asyncio
+
             while True:
                 ticket = await asyncio.to_thread(next, it, sentinel)
                 if ticket is sentinel:
                     return
                 yield ticket
         finally:
-            # close on a worker thread: generator close() runs query_stream's
-            # finally (sched.close(drain=True)), which blocks on the flush
-            # thread. If a cancelled next() still has the generator running
-            # (blocked until its next completion lands, <= one flush away),
-            # retry until it suspends; a stuck generator is warned about
-            # loudly rather than silently leaking the scheduler thread.
-            deadline = time.monotonic() + 30.0
-            while True:
-                try:
-                    await asyncio.to_thread(it.close)
+            await self._aclose_stream(it, close_timeout)
+
+    async def _aclose_stream(self, it, close_timeout: float) -> None:
+        """Close a running `query_stream` generator from async context.
+
+        Close on a worker thread: generator close() runs query_stream's
+        finally (sched.close(drain=True)), which blocks on the flush
+        thread. If a cancelled next() still has the generator running
+        (blocked until its next completion lands, <= one flush away),
+        retry until it suspends; a stuck generator is warned about
+        loudly rather than silently leaking the scheduler thread. The
+        deadline runs on the pipeline's injected clock, so fake-clock
+        tests neither wall-hang nor flake under load.
+        """
+        import asyncio
+
+        deadline = self._clock() + close_timeout
+        while True:
+            try:
+                await asyncio.to_thread(it.close)
+                break
+            except ValueError:  # generator already executing
+                if self._clock() > deadline:
+                    warnings.warn(
+                        "aquery_stream could not close its query_stream "
+                        f"(still executing after {close_timeout:g}s); the "
+                        "background scheduler thread may leak",
+                        RuntimeWarning, stacklevel=1)
                     break
-                except ValueError:  # generator already executing
-                    if time.monotonic() > deadline:
-                        warnings.warn(
-                            "aquery_stream could not close its query_stream "
-                            "(still executing after 30s); the background "
-                            "scheduler thread may leak", RuntimeWarning,
-                            stacklevel=1)
-                        break
-                    await asyncio.sleep(0.02)
+                await asyncio.sleep(0.02)
 
     # ------------------------------------------------------ corpus updates
     def add_docs(self, texts: Sequence[str]) -> np.ndarray:

@@ -86,6 +86,55 @@ def test_rope_rotation_preserves_norm(rng):
         np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
 
 
+@pytest.mark.parametrize("sq,skv,cq,ckv,causal", [
+    (50, 50, 16, 16, True),    # self-attn, 50 % 16 != 0
+    (10, 37, 8, 8, False),     # cross-attn, both axes ragged
+    (7, 64, 16, 16, True),     # only the query axis ragged
+    (64, 21, 16, 16, False),   # only the KV axis ragged
+])
+def test_chunked_nondivisible_stays_chunked(rng, monkeypatch, sq, skv, cq,
+                                            ckv, causal):
+    """Regression: non-divisible lengths used to densify to the O(S^2)
+    fallback. They must now pad+mask inside the chunked scan — the dense
+    path is poisoned to prove it is never taken — and still match the
+    numpy oracle."""
+    def boom(*a, **kw):
+        raise AssertionError("dense fallback taken for non-divisible length")
+
+    monkeypatch.setattr(A, "_dense_attention", boom)
+    b, h, kh, d = 2, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, skv, kh, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, skv, kh, d)).astype(np.float32))
+    got = A._chunked_attention(q, k, v, cq, ckv, causal=causal)
+    want = _np_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_decode_step_overwrites_stale_cache_slot(rng):
+    """Regression: the decode write was an additive one-hot scatter, so a
+    reused cache row holding stale K/V at the write position folded the
+    garbage into the new entry. The write must overwrite."""
+    cfg = _mini_cfg(compute_dtype="float32")
+    params = A.init_attention(cfg, jax.random.key(0))
+    b, s, cache_len = 2, 5, 12
+    x = jnp.asarray(rng.normal(size=(b, s + 1, cfg.d_model)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s + 1)[None], (b, s + 1))
+    angles = rope.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+    _, cache = A.prefill(cfg, params, x[:, :s], angles[:, :s], cache_len)
+    # a retired sequence's K/V left behind past the valid prefix
+    poisoned = cache._replace(k=cache.k.at[:, s:].set(37.0),
+                              v=cache.v.at[:, s:].set(-37.0))
+    ang1 = angles[:, s : s + 1]
+    y_clean, c_clean = A.decode_step(cfg, params, x[:, s:], cache, ang1)
+    y_dirty, c_dirty = A.decode_step(cfg, params, x[:, s:], poisoned, ang1)
+    np.testing.assert_array_equal(np.asarray(y_dirty), np.asarray(y_clean))
+    np.testing.assert_array_equal(np.asarray(c_dirty.k[:, s]),
+                                  np.asarray(c_clean.k[:, s]))
+    np.testing.assert_array_equal(np.asarray(c_dirty.v[:, s]),
+                                  np.asarray(c_clean.v[:, s]))
+
+
 def test_mrope_sections(rng):
     pos = jnp.broadcast_to(jnp.arange(8)[None, None], (3, 2, 8))
     ang = rope.mrope_angles(pos, 16, 1e4, (2, 3, 3))

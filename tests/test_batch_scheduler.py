@@ -197,3 +197,34 @@ def test_aquery_stream_early_exit_closes_scheduler_thread(pipe):
         time.sleep(0.01)
     assert len(_scheduler_threads()) <= before, (
         "background AsyncBatchScheduler thread leaked after early exit")
+
+
+def test_aclose_stream_deadline_runs_on_injected_clock():
+    """Regression: the aquery_stream shutdown deadline was hard-coded to
+    `time.monotonic() + 30.0`, so a stuck generator stalled the event
+    loop for 30 real seconds and tests could not fake it. The deadline
+    must honour the pipeline's injected clock and the close_timeout
+    parameter."""
+    fake = {"t": 0.0}
+
+    def clock():
+        fake["t"] += 1.0
+        return fake["t"]
+
+    pipe2 = RagPipeline(
+        CORPUS[:6],
+        RetrievalConfig(bits=8, metric="cosine", path="int_exact"),
+        dim=64, embedder=HashEmbedder(dim=64), clock=clock)
+
+    class Stuck:
+        calls = 0
+
+        def close(self):
+            Stuck.calls += 1
+            raise ValueError("generator already executing")
+
+    t0 = time.monotonic()
+    with pytest.warns(RuntimeWarning, match="could not close"):
+        asyncio.run(pipe2._aclose_stream(Stuck(), close_timeout=5.0))
+    assert Stuck.calls > 1          # it retried before giving up
+    assert time.monotonic() - t0 < 10.0  # fake-clock deadline, not 30s wall

@@ -68,6 +68,23 @@ def test_bench_json_matches_shared_schema(path):
             assert math.isfinite(v), f"{path.name} {leaf_path}: {v}"
 
 
+def test_paged_cache_bench_has_kernel_vs_gather_column():
+    """The paged-cache artifact must carry the fused-kernel engine rows
+    next to the gather rows (one per workload), and every kernel row must
+    have passed the greedy token-parity gate — the committed evidence
+    that the Pallas decode kernel is live and correct."""
+    data = json.loads((REPO_ROOT / "BENCH_paged_cache.json").read_text())
+    rows = data["rows"]
+    engines = {r["engine"] for r in rows}
+    assert {"fixed", "paged", "paged_kernel"} <= engines
+    for workload in {r["workload"] for r in rows}:
+        cell = [r for r in rows
+                if r["engine"] == "paged_kernel" and r["workload"] == workload]
+        assert len(cell) == 1, f"{workload}: missing paged_kernel row"
+        assert cell[0]["parity"] is True
+        assert cell[0]["tok_per_s"] > 0
+
+
 @pytest.mark.parametrize("path", _bench_jsons(), ids=lambda p: p.name)
 def test_bench_json_producer_is_registered_in_run(path):
     """BENCH_<name>.json must come from benchmarks.bench_<name>, and that

@@ -79,3 +79,47 @@ def test_property_kernel_exactness(seed, bits):
     got = np.asarray(ops.dirc_mac(q, B.pack_words(planes), bits=bits))
     want = np.asarray(q, np.int64) @ np.asarray(d, np.int64).T
     assert (got == want).all()
+
+
+# ----------------------------------------------- interpret-default plumbing
+def test_public_kernels_default_interpret_to_env_switch():
+    """Regression: public jitted kernel entry points hard-coded
+    interpret=True, silently pinning compiled deployments to interpret
+    mode unless every caller overrode it. They must default to None and
+    resolve through the REPRO_PALLAS_INTERPRET env switch."""
+    import inspect
+
+    from repro.kernels import (_env, dirc_mac, paged_attend, score_matmul,
+                               topk_select)
+
+    fns = [score_matmul.score_matmul_int, score_matmul.score_matmul_cosine,
+           dirc_mac.dirc_mac_packed, topk_select.blockwise_topk,
+           paged_attend.paged_attend_fused]
+    for fn in fns:
+        default = inspect.signature(fn).parameters["interpret"].default
+        assert default is None, f"{fn.__name__} hard-codes interpret"
+    assert _env.resolve_interpret(None) is _env.INTERPRET
+    assert _env.resolve_interpret(True) is True
+    assert _env.resolve_interpret(False) is False
+
+
+@pytest.mark.parametrize("val,expect", [("0", False), ("1", True)])
+def test_interpret_env_switch_subprocess(val, expect):
+    """REPRO_PALLAS_INTERPRET is the single source of truth, read once at
+    import: exercised in a fresh interpreter per value."""
+    import os
+    import subprocess
+    import sys
+
+    code = (
+        "from repro.kernels import _env, ops\n"
+        f"assert _env.INTERPRET is {expect}, _env.INTERPRET\n"
+        f"assert ops.INTERPRET is {expect}\n"
+        f"assert _env.resolve_interpret(None) is {expect}\n"
+    )
+    env = os.environ.copy()
+    env["REPRO_PALLAS_INTERPRET"] = val
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", code], env=env, cwd=".",
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
