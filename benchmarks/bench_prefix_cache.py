@@ -1,0 +1,300 @@
+"""Tiered prefix-KV retention at EQUAL device-pool HBM: Zipf sweep.
+
+The claim under test (PR 7 / ROADMAP "Tiered prefix cache"): RAG traffic
+is Zipf-shaped — a few hot retrieved-document contexts open most
+prompts, but arrivals are spread out in time, so by the time a context
+repeats its publisher has usually retired. The PR 5 non-owning registry
+forfeits those cross-lifetime repeats (an entry dies with its last
+reference); a bounded LRU of *retained* prefixes keeps the hot contexts'
+KV resident after their publishers retire, and a host-RAM tier catches
+what the device budget evicts, swapping it back into fresh blocks on a
+later hit instead of recomputing.
+
+Every cell gets exactly the same engine geometry — same `n_blocks x
+block_size` device pool, same decode slots, same chunked prefill —
+differing ONLY in the retention knobs:
+
+  none              retain_blocks=0              (the PR 5 baseline)
+  retain-small      a budget fitting ~half the hot contexts
+  retain-large      a budget fitting every context
+  retain-small+host the small device budget plus a host-RAM tier
+
+Requests replay the same Zipf-sampled greedy burst in small waves
+(drained between waves, so publishers retire and only retention can
+carry KV across arrivals), assert token parity against per-query
+`GenerationEngine.generate`, and report per-tier hit rates, TTFT
+percentiles, decode throughput, and eviction/host counters. Gates:
+retention must lift the prefix hit rate and cut mean TTFT vs the `none`
+cell, the host tier must lift it further vs `retain-small` with at
+least one real swap-in, and greedy parity must hold in every cell.
+
+Compute runs in fp32 (`compute_dtype` override) for the same reason as
+bench_prefix_sharing: parity across differently-batched reduction orders
+needs fp32 headroom over the untrained smoke model's logit near-ties.
+
+Emits BENCH_prefix_cache.json (rows + config) for the CI perf artifact.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_prefix_cache [--tiny]
+         [--out BENCH_prefix_cache.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (
+    ContinuousBatchingEngine,
+    EngineConfig,
+    GenerationEngine,
+)
+
+FULL = {
+    "arch": "phi4-mini-3.8b",
+    "cache_len": 96,
+    "n_slots": 4,
+    "block_size": 8,
+    "prefill_chunk": 16,
+    "n_pool_blocks": 64,  # usable device blocks, identical in every cell
+    "n_contexts": 4,
+    "zipf_s": 1.2,
+    "n_requests": 20,
+    "wave": 4,  # requests in flight together; drained between waves
+    "context_tokens": 64,  # the shared head: 8 full blocks per context
+    "suffix_tokens": 8,
+    "new_tokens": 8,
+    "retain_small": 16,  # fits 2 of the 4 contexts
+    "retain_large": 32,  # fits all 4
+    "host_blocks": 32,
+    "repeats": 2,
+    "min_hit_lift": 0.05,  # retain-small hit rate - none hit rate
+    "min_host_lift": 0.05,  # small+host hit rate - retain-small hit rate
+    "max_ttft_ratio": 0.9,  # ttft(retain-large) / ttft(none)
+}
+
+TINY = {
+    "arch": "phi4-mini-3.8b",
+    "cache_len": 48,
+    "n_slots": 4,
+    "block_size": 8,
+    "prefill_chunk": 8,
+    "n_pool_blocks": 24,
+    "n_contexts": 2,
+    "zipf_s": 0.0,  # uniform: both contexts churn through the 1-ctx budget
+    "n_requests": 10,
+    "wave": 2,
+    "context_tokens": 16,  # 2 full blocks per context
+    "suffix_tokens": 4,
+    "new_tokens": 4,
+    "retain_small": 2,  # fits 1 of the 2 contexts
+    "retain_large": 4,  # fits both
+    "host_blocks": 4,
+    "repeats": 1,
+    "min_hit_lift": 0.0,
+    "min_host_lift": 0.0,
+    "max_ttft_ratio": 10.0,  # smoke shapes are too noisy for a TTFT gate
+}
+
+CELLS = (
+    ("none", "retain_none", "host_none"),
+    ("retain-small", "retain_small", "host_none"),
+    ("retain-large", "retain_large", "host_none"),
+    ("retain-small+host", "retain_small", "host_blocks"),
+)
+
+
+def _workload(bench_cfg: dict):
+    """Zipf-sampled (prompt, max_new, prefix_len) burst: `n_contexts`
+    fixed full-block contexts, rank-r context drawn with p ~ 1/r^s,
+    every suffix unique. Wave boundaries are the caller's job."""
+    cfg = get_config(bench_cfg["arch"], smoke=True)
+    rng = np.random.default_rng(0)
+    ctx_len = bench_cfg["context_tokens"]
+    contexts = [
+        rng.integers(0, cfg.vocab_size, size=ctx_len).astype(np.int32)
+        for _ in range(bench_cfg["n_contexts"])
+    ]
+    w = 1.0 / np.arange(1, bench_cfg["n_contexts"] + 1) ** bench_cfg["zipf_s"]
+    picks = rng.choice(bench_cfg["n_contexts"], size=bench_cfg["n_requests"],
+                       p=w / w.sum())
+    reqs = []
+    for i in picks:
+        sfx = rng.integers(
+            0, cfg.vocab_size, size=bench_cfg["suffix_tokens"]
+        ).astype(np.int32)
+        reqs.append((
+            np.concatenate([contexts[i], sfx]),
+            bench_cfg["new_tokens"],
+            ctx_len,
+        ))
+    return reqs
+
+
+def _make_engine(model, params, bench_cfg: dict, retain: int, host: int):
+    return ContinuousBatchingEngine(
+        model, params,
+        EngineConfig(
+            n_slots=bench_cfg["n_slots"],
+            cache_len=bench_cfg["cache_len"],
+            paged=True,
+            block_size=bench_cfg["block_size"],
+            n_blocks=bench_cfg["n_pool_blocks"] + 1,  # + the null block
+            prefill_chunk=bench_cfg["prefill_chunk"],
+            prefix_sharing=True,
+            retain_blocks=retain or None,
+            host_blocks=host or None,
+        ))
+
+
+def _replay(engine, reqs, wave: int):
+    """Submit the burst in waves, draining between waves so publishers
+    retire — only retention can carry context KV across waves."""
+    tickets = []
+    for lo in range(0, len(reqs), wave):
+        tickets += [engine.submit(p, max_new_tokens=new, prefix_len=h)
+                    for p, new, h in reqs[lo:lo + wave]]
+        engine.run_until_drained()
+    return tickets
+
+
+def _bench_cell(engine, reqs, refs, wave: int, repeats: int) -> dict:
+    """Warm-up pass (compile every shape, including suffix-only prefill
+    and host swap-in), then `clear_prefix_cache()` + replay; keep the
+    best-throughput measured pass by counter deltas."""
+    _replay(engine, reqs, wave)
+    best_tps, best = 0.0, None
+    for _ in range(repeats):
+        engine.clear_prefix_cache()
+        pre = engine.stats()
+        t0 = time.perf_counter()
+        tickets = _replay(engine, reqs, wave)
+        dt = time.perf_counter() - t0
+        outs = [np.asarray(t.result()) for t in tickets]
+        tps = sum(len(o) for o in outs) / dt
+        if tps > best_tps or best is None:
+            best_tps, best = tps, (tickets, outs, pre, engine.stats())
+    tickets, outs, pre, post = best
+    parity = all(np.array_equal(a, b) for a, b in zip(refs, outs))
+    ttft_ms = np.asarray([t.first_token_s for t in tickets], np.float64) * 1e3
+    pool_pre, pool_post = pre["pool"], post["pool"]
+
+    def d(key):
+        return pool_post[key] - pool_pre[key]
+
+    lookups = d("n_prefix_hits") + d("n_prefix_misses")
+    return {
+        "n_requests": len(reqs),
+        "n_tokens": int(sum(len(o) for o in outs)),
+        "tok_per_s": best_tps,
+        "ttft_mean_ms": float(ttft_ms.mean()),
+        "ttft_p95_ms": float(np.percentile(ttft_ms, 95)),
+        "parity": parity,
+        "n_device_hits": d("n_device_hits"),
+        "n_host_hits": d("n_host_hits"),
+        "n_misses": d("n_prefix_misses"),
+        "hit_rate": (d("n_prefix_hits") / lookups) if lookups else 0.0,
+        "device_hit_rate": (d("n_device_hits") / lookups) if lookups else 0.0,
+        "host_hit_rate": (d("n_host_hits") / lookups) if lookups else 0.0,
+        "n_evictions": d("n_evictions"),
+        "n_cow_copies": d("n_cow_copies"),
+        "n_retained_end": pool_post["n_retained"],
+        "host_bytes_end": pool_post["host_bytes"],
+    }
+
+
+def run(bench_cfg: dict) -> list[dict]:
+    cfg = dataclasses.replace(
+        get_config(bench_cfg["arch"], smoke=True),
+        compute_dtype="float32",
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    baseline = GenerationEngine(model, params)
+    reqs = _workload(bench_cfg)
+    refs = []
+    for p, new, _ in reqs:
+        out = baseline.generate(
+            np.asarray(p)[None], max_new_tokens=new, cache_len=len(p) + new)
+        refs.append(np.asarray(out)[0])
+
+    budgets = dict(bench_cfg, retain_none=0, host_none=0)
+    rows = []
+    for label, retain_key, host_key in CELLS:
+        retain, host = budgets[retain_key], budgets[host_key]
+        engine = _make_engine(model, params, bench_cfg, retain, host)
+        row = _bench_cell(engine, reqs, refs, bench_cfg["wave"],
+                          bench_cfg.get("repeats", 2))
+        row["engine"] = label
+        row["retain_blocks"] = retain
+        row["host_blocks"] = host
+        row["pool_blocks"] = bench_cfg["n_pool_blocks"]
+        row["block_size"] = bench_cfg["block_size"]
+        rows.append(row)
+        engine.close()
+    return rows
+
+
+def _cell(rows, engine: str) -> dict:
+    for r in rows:
+        if r["engine"] == engine:
+            return r
+    raise KeyError(engine)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true", help="CI smoke shapes")
+    ap.add_argument("--out", default="BENCH_prefix_cache.json")
+    args = ap.parse_args(argv)
+    cfg = TINY if args.tiny else FULL
+    rows = run(cfg)
+
+    print("engine,retain,host,hit_rate,dev_hits,host_hits,ttft_ms,tok_per_s,"
+          "evictions,parity")
+    for r in rows:
+        print(f"{r['engine']},{r['retain_blocks']},{r['host_blocks']},"
+              f"{r['hit_rate']:.2f},{r['n_device_hits']},{r['n_host_hits']},"
+              f"{r['ttft_mean_ms']:.1f},{r['tok_per_s']:.0f},"
+              f"{r['n_evictions']},{r['parity']}")
+
+    bad = [r for r in rows if not r["parity"]]
+    if bad:
+        raise SystemExit(f"greedy parity violated in {len(bad)} cells")
+    none, small = _cell(rows, "none"), _cell(rows, "retain-small")
+    large, tiered = _cell(rows, "retain-large"), _cell(rows, "retain-small+host")
+    lift = small["hit_rate"] - none["hit_rate"]
+    host_lift = tiered["hit_rate"] - small["hit_rate"]
+    ttft_ratio = (large["ttft_mean_ms"] / none["ttft_mean_ms"]
+                  if none["ttft_mean_ms"] else 1.0)
+    print(f"retention hit-rate lift over the non-owning registry: "
+          f"{none['hit_rate']:.2f} -> {small['hit_rate']:.2f} (small) -> "
+          f"{large['hit_rate']:.2f} (large)")
+    print(f"host tier lift over device-only at the same device budget: "
+          f"+{host_lift:.2f} ({tiered['n_host_hits']} swap-ins)")
+    print(f"TTFT: retain-large/none = {ttft_ratio:.2f}x")
+    if lift < cfg["min_hit_lift"]:
+        raise SystemExit(
+            f"retention hit-rate lift {lift:.2f} < {cfg['min_hit_lift']}"
+            f" at equal device HBM")
+    if host_lift < cfg["min_host_lift"] or tiered["n_host_hits"] < 1:
+        raise SystemExit(
+            f"host tier lift {host_lift:.2f} "
+            f"({tiered['n_host_hits']} swap-ins) below gate")
+    if ttft_ratio > cfg["max_ttft_ratio"]:
+        raise SystemExit(
+            f"retention TTFT ratio {ttft_ratio:.2f} > {cfg['max_ttft_ratio']}")
+
+    with open(args.out, "w") as f:
+        json.dump({"config": dict(cfg), "rows": rows}, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

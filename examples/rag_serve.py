@@ -39,7 +39,7 @@ import jax
 from repro.configs import get_config
 from repro.core.retrieval import RetrievalConfig
 from repro.models import build_model
-from repro.serving import HashEmbedder, RagPipeline
+from repro.serving import EngineConfig, HashEmbedder, RagPipeline
 
 CORPUS = [
     "DIRC couples a multi-level ReRAM subarray with an SRAM cell.",
@@ -134,13 +134,14 @@ def main() -> None:
     # n_slots-wide decode batch at the next token boundary; answers stream
     # back in completion order with TTFT/e2e stamps per ticket
     for t in pipe.query_stream(queries, k=2, max_wait_ms=5.0, generate=True,
-                               max_new_tokens=8, n_slots=2):
+                               max_new_tokens=8, config=EngineConfig(n_slots=2)):
         print(f"   slot {t.slot}: {len(t.tokens)} tokens in "
               f"{t.wait_s * 1e3:.0f} ms (TTFT {t.first_token_s * 1e3:.0f} ms)"
               f" <- {t.text[:40]}")
 
     print("\n== token_stream: live per-token consumption ==")
-    engine = pipe.decode_engine(n_slots=2, max_new_tokens=8, start=True)
+    engine = pipe.decode_engine(EngineConfig(n_slots=2), max_new_tokens=8,
+                                start=True)
     try:
         prompt = pipe.encode_prompt(queries[0], [CORPUS[0]])
         ticket = engine.submit(prompt, max_new_tokens=8)

@@ -47,11 +47,13 @@ from repro.core.retrieval import RetrievalConfig
 from repro.models import build_model
 from repro.serving import (
     AsyncBatchScheduler,
+    EngineConfig,
     GenerationEngine,
     HashEmbedder,
     RagPipeline,
     SchedulerError,
 )
+from repro.serving.config import resolve_config
 
 
 def serve(arch: str, smoke: bool = True, batch: int = 4,
@@ -250,11 +252,15 @@ def serve_rag_open_loop_generate(
         max_batch: int = 16, max_wait_ms: float = 5.0,
         n_tenants: int = 4, skew: float = 1.0,
         offered_qps: float = 50.0, n_queries: int = 32,
-        k: int = 3, max_new_tokens: int = 16, n_slots: int = 4,
-        paged: bool = False, block_size: Optional[int] = None,
+        k: int = 3, max_new_tokens: int = 16,
+        config: Optional[EngineConfig] = None,
+        n_slots: Optional[int] = None,
+        paged: Optional[bool] = None, block_size: Optional[int] = None,
         n_blocks: Optional[int] = None, prefill_chunk: Optional[int] = None,
         prefix_sharing: Optional[bool] = None,
         paged_kernel: Optional[bool] = None,
+        retain_blocks: Optional[int] = None,
+        host_blocks: Optional[int] = None,
         arch: str = "phi4-mini-3.8b", path: str = "int_exact",
         seed: int = 0, pipe: Optional[RagPipeline] = None) -> dict:
     """Open-loop retrieval+generation through the shared streaming front door.
@@ -268,14 +274,19 @@ def serve_rag_open_loop_generate(
     p50/p95/p99, time-to-first-token, per-token decode latency, decode
     throughput, and slot occupancy.
 
-    `paged=True` serves decode from the shared KV block pool
-    (`serving.paged_cache`) with chunked prefill; the report then also
-    carries pool utilization and admission-backpressure counters.
-    `prefix_sharing` (None: on iff paged attention) maps identical
-    retrieved-context prefixes onto shared blocks with copy-on-write,
-    adding shared-block / CoW / hit-rate counters to the report.
-    `paged_kernel=True` routes paged attention through the fused Pallas
-    flash-decoding kernel (None defers to the model config).
+    Engine shape is best passed as `config=EngineConfig(...)`; the
+    per-knob parameters are the usual deprecated shim. `paged=True`
+    serves decode from the shared KV block pool (`serving.paged_cache`)
+    with chunked prefill; the report then also carries pool utilization
+    and admission-backpressure counters. `prefix_sharing` (None: on iff
+    paged attention) maps identical retrieved-context prefixes onto
+    shared blocks with copy-on-write, adding shared-block / CoW /
+    hit-rate counters to the report. `paged_kernel=True` routes paged
+    attention through the fused Pallas flash-decoding kernel (None
+    defers to the model config). `retain_blocks`/`host_blocks` turn on
+    the tiered prefix cache — published context prefixes outlive their
+    publisher (device LRU pins, host-RAM spill) — adding retention and
+    per-tier hit-rate counters to the report.
     """
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
@@ -283,19 +294,19 @@ def serve_rag_open_loop_generate(
     if pipe.engine is None:
         raise ValueError("generate mode needs a pipeline with a model "
                          "(build_rag_pipeline(arch=...))")
+    config = resolve_config(config, dict(
+        n_slots=n_slots, paged=paged, block_size=block_size,
+        n_blocks=n_blocks, prefill_chunk=prefill_chunk,
+        prefix_sharing=prefix_sharing, paged_kernel=paged_kernel,
+        retain_blocks=retain_blocks, host_blocks=host_blocks))
     queries, arrival_tenant, gaps = _poisson_arrivals(
         pipe, n_tenants, skew, offered_qps, n_queries, seed)
 
     padded_search = _padded_search(pipe, max_batch)
     sched = AsyncBatchScheduler(padded_search, max_batch=max_batch,
                                 max_wait_ms=max_wait_ms, start=True)
-    engine = pipe.decode_engine(n_slots=n_slots,
-                                max_new_tokens=max_new_tokens,
-                                paged=paged, block_size=block_size,
-                                n_blocks=n_blocks,
-                                prefill_chunk=prefill_chunk,
-                                prefix_sharing=prefix_sharing,
-                                paged_kernel=paged_kernel, start=True)
+    engine = pipe.decode_engine(config, max_new_tokens=max_new_tokens,
+                                start=True)
 
     # compile every serving shape off-clock: the (max_batch, dim) search,
     # the (len<=max_prompt_len,) prefill, and the (n_slots, 1) decode step
@@ -369,7 +380,7 @@ def serve_rag_open_loop_generate(
         "max_batch": max_batch,
         "max_wait_ms": max_wait_ms,
         "max_new_tokens": max_new_tokens,
-        "n_slots": n_slots,
+        "n_slots": engine.n_slots,
         "n_tokens": n_tokens,
         "decode_tok_per_s": n_tokens / wall,
         "mean_retrieval_batch": sched.stats()["mean_batch"],
@@ -381,14 +392,16 @@ def serve_rag_open_loop_generate(
         "per_token_ms_mean": float(np.mean(per_tok_ms)) if per_tok_ms else 0.0,
         "per_token_ms_p95": float(np.percentile(per_tok_ms, 95))
         if per_tok_ms else 0.0,
-        "paged": paged,
+        "paged": engine.paged,
     }
-    if paged:
+    if engine.paged:
         out["n_backpressure"] = est["n_backpressure"]
         out["n_skip_ahead"] = est.get("n_skip_ahead", 0)
         out["n_prefill_chunks"] = est.get("n_prefill_chunks", 0)
         out["prefix_sharing"] = est.get("prefix_sharing", False)
         out["paged_kernel"] = est.get("paged_kernel")
+        out["retain_blocks"] = engine.retain_blocks
+        out["host_blocks"] = engine.host_blocks
         if "pool" in est:
             out["pool"] = est["pool"]
     out.update(_percentiles_ms(e2e_s))
@@ -446,19 +459,32 @@ def main() -> None:
                          "Pallas flash-decoding kernel instead of the "
                          "dense-window gather path (default: defer to the "
                          "model config)")
+    ap.add_argument("--retain-blocks", type=int, default=None,
+                    help="--paged: device retention budget (pool blocks) "
+                         "for published prefixes that outlive their "
+                         "publisher (default: off — PR 5 non-owning "
+                         "registry)")
+    ap.add_argument("--host-blocks", type=int, default=None,
+                    help="--paged: host-RAM tier budget (pool blocks) for "
+                         "prefixes evicted from the device retention LRU "
+                         "(requires --retain-blocks)")
     args = ap.parse_args()
     if args.rag and args.open_loop and args.generate:
+        config = EngineConfig(
+            n_slots=args.n_slots, paged=args.paged,
+            block_size=args.block_size, n_blocks=args.n_blocks,
+            prefill_chunk=args.prefill_chunk,
+            prefix_sharing=args.prefix_sharing,
+            paged_kernel=args.paged_kernel,
+            retain_blocks=args.retain_blocks,
+            host_blocks=args.host_blocks)
         out = serve_rag_open_loop_generate(
             n_docs=args.rag_docs, n_shards=args.n_shards,
             max_batch=args.batch, max_wait_ms=args.max_wait_ms,
             n_tenants=args.n_tenants, skew=args.skew,
             offered_qps=args.offered_qps, n_queries=args.rag_queries,
             k=args.k, max_new_tokens=args.new_tokens,
-            n_slots=args.n_slots, paged=args.paged,
-            block_size=args.block_size, n_blocks=args.n_blocks,
-            prefill_chunk=args.prefill_chunk,
-            prefix_sharing=args.prefix_sharing,
-            paged_kernel=args.paged_kernel,
+            config=config,
             arch=args.arch or "phi4-mini-3.8b")
         print(f"open-loop generate: offered {out['offered_qps']:.0f} q/s, "
               f"finished {out['n_finished']}/{out['n_queries']} requests "
@@ -487,6 +513,17 @@ def main() -> None:
                       f"{pool.get('n_cow_copies', 0)} CoW copies, "
                       f"{pool.get('n_shared_blocks', 0)} blocks still "
                       f"shared at end")
+            if out.get("retain_blocks"):
+                print(f"retention: {pool.get('n_retained', 0)} prefixes "
+                      f"({pool.get('n_retained_blocks', 0)} blocks) pinned "
+                      f"at end, {pool.get('n_evictions', 0)} evictions, "
+                      f"device hit rate "
+                      f"{pool.get('device_hit_rate', 0.0):.2f}")
+            if out.get("host_blocks"):
+                print(f"host tier: {pool.get('n_host_entries', 0)} prefixes "
+                      f"({pool.get('host_bytes', 0)} bytes) resident, "
+                      f"{pool.get('n_host_hits', 0)} swap-ins, host hit "
+                      f"rate {pool.get('host_hit_rate', 0.0):.2f}")
         return
     if args.rag and args.open_loop:
         out = serve_rag_open_loop(

@@ -5,6 +5,7 @@ from .async_scheduler import (  # noqa: F401
     AsyncTicket,
     SchedulerError,
 )
+from .config import EngineConfig  # noqa: F401
 from .continuous_batching import (  # noqa: F401
     ContinuousBatchingEngine,
     GenerationTicket,

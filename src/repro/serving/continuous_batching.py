@@ -101,6 +101,7 @@ import numpy as np
 from repro.models.model_api import supports_paged_kv
 
 from .async_scheduler import DEFAULT_TENANT, SchedulerError
+from .config import EngineConfig, resolve_config
 from .paged_cache import PagedCacheManager, blocks_for, pow2_at_least
 
 _DONE = object()  # token_stream sentinel
@@ -238,12 +239,20 @@ class ContinuousBatchingEngine:
 
     model/params: any Model-protocol object (prefill optional; SSM models
         are prefilled by streaming the prompt through decode_step at b=1).
+    config: an `EngineConfig` holding every shape/policy knob — batch
+        width, cache geometry, paged-pool layout, sharing, retention.
+        The per-knob keyword parameters below mirror its fields as a
+        DEPRECATED shim: passing any of them emits DeprecationWarning
+        and builds the equivalent config (config= plus knobs is an
+        error). See serving/config.py for the field reference and the
+        migration path; only the config-resolved semantics are described
+        here.
     n_slots: decode batch width — the number of sequences in flight.
-    cache_len: per-sequence token capacity. Fixed-slot mode allocates
-        `n_slots` private regions of this size up front and `submit()`
-        rejects `len(prompt) + max_new_tokens > cache_len`. Paged mode
-        uses it only as the block-table width cap (`max_seq_len` of one
-        sequence); memory is the shared pool.
+    cache_len: per-sequence token capacity (None: 256). Fixed-slot mode
+        allocates `n_slots` private regions of this size up front and
+        `submit()` rejects `len(prompt) + max_new_tokens > cache_len`.
+        Paged mode uses it only as the block-table width cap
+        (`max_seq_len` of one sequence); memory is the shared pool.
     eos_id: retire a slot when it emits this id (None: length-only).
     temperature: 0 == greedy (argmax, reproducible); > 0 samples with one
         key per decode step shared across slots.
@@ -271,10 +280,20 @@ class ContinuousBatchingEngine:
         dense-window gather path. None (default) defers to the model
         (`cfg.paged_kernel`) and keeps duck-typed models whose
         `paged_step` lacks the knob working; True/False force it.
+    retain_blocks: device retention budget (pool blocks) for published
+        prefixes that outlive their publisher — the tiered prefix cache
+        (see paged_cache.py; 0/None keeps PR 5 non-owning semantics).
+    host_blocks: host-RAM tier budget (pool blocks): prefixes evicted
+        from the device tier park their KV in host numpy buffers and
+        swap back in on a later hit. Requires retain_blocks.
     clock: monotonic-seconds callable, injectable for deterministic tests.
     start: spawn the background decode loop. With start=False the engine
         is in *manual mode*: call `step()` yourself (or let
         `ticket.result()` / `token_stream()` drive it).
+
+    `clock`, `start`, `eos_id`, `temperature` and `key` are runtime
+    parameters, not engine shape — they stay keywords and are NOT
+    deprecated.
 
     Fixed-slot prefill compiles once per distinct prompt length (b=1
     shapes); paged mode compiles a BOUNDED set of step shapes regardless
@@ -289,34 +308,46 @@ class ContinuousBatchingEngine:
         self,
         model,
         params,
-        n_slots: int = 4,
-        cache_len: int = 256,
+        config: Optional[EngineConfig] = None,
+        *,
+        n_slots: Optional[int] = None,
+        cache_len: Optional[int] = None,
         eos_id: Optional[int] = None,
         temperature: float = 0.0,
         key: Optional[jax.Array] = None,
-        paged: bool = False,
+        paged: Optional[bool] = None,
         block_size: Optional[int] = None,
         n_blocks: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
-        prefix_sharing: bool = False,
+        prefix_sharing: Optional[bool] = None,
         admit_lookahead: Optional[int] = None,
         max_head_skips: Optional[int] = None,
         paged_kernel: Optional[bool] = None,
+        retain_blocks: Optional[int] = None,
+        host_blocks: Optional[int] = None,
         clock: Callable[[], float] = time.monotonic,
         start: bool = False,
     ):
-        if n_slots < 1:
-            raise ValueError("n_slots must be >= 1")
-        if cache_len < 2:
-            raise ValueError("cache_len must be >= 2")
-        paged_knobs = (block_size, n_blocks, prefill_chunk,
-                       admit_lookahead, max_head_skips, paged_kernel)
-        if not paged and (any(k is not None for k in paged_knobs)
-                          or prefix_sharing):
-            raise ValueError(
-                "block/chunk/sharing knobs (block_size, n_blocks, "
-                "prefill_chunk, prefix_sharing, admit_lookahead, "
-                "max_head_skips, paged_kernel) require paged=True")
+        config = resolve_config(config, dict(
+            n_slots=n_slots, cache_len=cache_len, paged=paged,
+            block_size=block_size, n_blocks=n_blocks,
+            prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+            admit_lookahead=admit_lookahead, max_head_skips=max_head_skips,
+            paged_kernel=paged_kernel, retain_blocks=retain_blocks,
+            host_blocks=host_blocks))
+        self.config = config
+        n_slots = config.n_slots
+        cache_len = 256 if config.cache_len is None else config.cache_len
+        paged = config.paged
+        block_size = config.block_size
+        n_blocks = config.n_blocks
+        prefill_chunk = config.prefill_chunk
+        prefix_sharing = bool(config.prefix_sharing)
+        admit_lookahead = config.admit_lookahead
+        max_head_skips = config.max_head_skips
+        paged_kernel = config.paged_kernel
+        retain_blocks = config.retain_blocks or 0
+        host_blocks = config.host_blocks or 0
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -343,40 +374,42 @@ class ContinuousBatchingEngine:
             if not self._kv_paged and (block_size is not None
                                        or n_blocks is not None
                                        or paged_kernel is not None
-                                       or prefix_sharing):
+                                       or prefix_sharing
+                                       or retain_blocks or host_blocks):
                 # slot-resident state has no pool: explicit pool geometry,
-                # sharing, or the fused kernel would silently vanish —
-                # say so instead
+                # sharing, retention, or the fused kernel would silently
+                # vanish — say so instead
                 import warnings
 
                 warnings.warn(
                     f"{type(model).__name__} has no pageable KV cache; "
-                    "block_size/n_blocks/prefix_sharing/paged_kernel are "
-                    "ignored (state stays slot-resident, only chunked "
-                    "admission applies)",
+                    "block_size/n_blocks/prefix_sharing/paged_kernel/"
+                    "retain_blocks/host_blocks are ignored (state stays "
+                    "slot-resident, only chunked admission applies)",
                     RuntimeWarning, stacklevel=2)
             block_size = block_size or 16
-            if block_size < 1:
-                raise ValueError("block_size must be >= 1")
             self.block_size = block_size
             self.prefill_chunk = prefill_chunk or 32
-            if self.prefill_chunk < 1:
-                raise ValueError("prefill_chunk must be >= 1")
             self.admit_lookahead = 4 if admit_lookahead is None \
                 else admit_lookahead
-            if self.admit_lookahead < 0:
-                raise ValueError("admit_lookahead must be >= 0")
             self.max_head_skips = 16 if max_head_skips is None \
                 else max_head_skips
-            if self.max_head_skips < 1:
-                raise ValueError("max_head_skips must be >= 1")
         self.prefix_sharing = bool(prefix_sharing) and self._kv_paged
+        self.retain_blocks = retain_blocks if self._kv_paged else 0
+        self.host_blocks = host_blocks if self._kv_paged else 0
+        self._host_kv: dict = {}  # prefix key -> host-tier KV leaf list
         if self._kv_paged:
             if n_blocks is None:
                 n_blocks = blocks_for(n_slots * cache_len, block_size) + 1
             self._pcm = PagedCacheManager(
                 n_blocks, block_size,
-                max_blocks_per_seq=blocks_for(cache_len, block_size))
+                max_blocks_per_seq=blocks_for(cache_len, block_size),
+                retain_blocks=self.retain_blocks,
+                host_blocks=self.host_blocks,
+                on_evict=self._offload_prefix if self.host_blocks else None,
+                on_swapin=self._swapin_prefix if self.host_blocks else None,
+                on_host_drop=(
+                    self._drop_host_prefix if self.host_blocks else None))
             self._pools = model.init_paged_caches(n_blocks, block_size)
             self.paged_kernel = paged_kernel
             if paged_kernel is None:
@@ -392,6 +425,7 @@ class ContinuousBatchingEngine:
                         paged_kernel=paged_kernel))
             self._pool_block_axes = self._detect_block_axes(block_size)
             self._copy_block = jax.jit(self._copy_block_impl)
+            self._write_block = jax.jit(self._write_block_impl)
             self._lengths = np.zeros((n_slots,), np.int64)
             self._caches = None
         else:
@@ -493,6 +527,62 @@ class ContinuousBatchingEngine:
         for src, dst in self._pcm.prepare_write(seq, start, end):
             self._pools = self._copy_block(
                 self._pools, jnp.int32(src), jnp.int32(dst))
+
+    def _write_block_impl(self, pools, pieces, dst):
+        """Write one block's worth of per-leaf KV (`pieces`, each shaped
+        like a single-block slice) into physical block `dst` — the
+        device half of a host-tier swap-in."""
+        leaves, treedef = jax.tree_util.tree_flatten(pools)
+        out = [
+            jax.lax.dynamic_update_slice_in_dim(
+                leaf, piece.astype(leaf.dtype), dst, axis=ax)
+            for leaf, piece, ax in zip(leaves, pieces, self._pool_block_axes)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _offload_prefix(self, key, blocks, n_tokens: int) -> int:
+        """Host-tier `on_evict` callback: gather the victim prefix's KV
+        blocks out of the device pools into host numpy buffers (one
+        `(k, ...)`-shaped array per pool leaf, k = len(blocks)); returns
+        the bytes parked. Runs synchronously under the step lock while
+        the blocks are still resident."""
+        idx = jnp.asarray(list(blocks), jnp.int32)
+        saved = []
+        nbytes = 0
+        for leaf, ax in zip(jax.tree_util.tree_leaves(self._pools),
+                            self._pool_block_axes):
+            piece = np.asarray(jnp.take(leaf, idx, axis=ax))
+            saved.append(piece)
+            nbytes += piece.nbytes
+        self._host_kv[key] = saved
+        return nbytes
+
+    def _swapin_prefix(self, key, blocks, n_tokens: int) -> None:
+        """Host-tier `on_swapin` callback: scatter the saved KV back into
+        freshly reserved device blocks, one jitted single-block write per
+        block (one compiled shape total — every piece is a one-block
+        slice)."""
+        saved = self._host_kv.pop(key)
+        for k, dst in enumerate(blocks):
+            pieces = [np.take(piece, [k], axis=ax)
+                      for piece, ax in zip(saved, self._pool_block_axes)]
+            self._pools = self._write_block(
+                self._pools, pieces, jnp.int32(dst))
+
+    def _drop_host_prefix(self, key) -> None:
+        """Host-tier `on_host_drop` callback: discard parked KV bytes."""
+        self._host_kv.pop(key, None)
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every retained prefix pin and host-tier entry; returns
+        entries dropped. Restores non-owning registry semantics until
+        the next publication (bench warm-up / test isolation)."""
+        with self._step_lock:
+            if self._pcm is None:
+                return 0
+            n = self._pcm.clear_retained()
+            self._host_kv.clear()
+            return n
 
     def _write_slot_impl(self, full, one, slot):
         """Write a b=1 cache tree into slot `slot` of the batched tree."""
@@ -601,10 +691,23 @@ class ContinuousBatchingEngine:
             return sum(t is not None for t in self._slots)
 
     def stats(self) -> dict:
-        """Decode/occupancy counters; occupancy_hist maps the number of
-        occupied slots at a decode step -> how many steps ran like that.
-        Paged mode adds pool accounting (`pool`), deferred-admission
-        events (`n_backpressure`), and chunk counters."""
+        """Engine counters. Full schema:
+
+        Always present (int/float): `n_slots`, `n_decode_steps`,
+        `n_prefills` (completed prompt prefills), `n_tokens`,
+        `n_finished`, `n_failed`, `peak_active`, `mean_occupancy`.
+        Always present (non-scalar): `occupancy_hist` — occupied slots
+        at a decode step -> how many steps ran like that.
+
+        Paged mode only (int): `n_prefill_chunks`, `n_backpressure`
+        (admissions deferred by pool exhaustion), `n_skip_ahead`
+        (admissions that jumped a deferred head), `prefill_chunk`.
+
+        Pageable-KV mode only: `prefix_sharing` (bool), `paged_kernel`
+        (bool or None — None defers to the model config), and `pool`,
+        the nested `PagedCacheManager.stats()` dict (see its docstring
+        for the pool-side schema, including the retention/host-tier
+        counters)."""
         with self._cv:
             occ = dict(sorted(self._occupancy_counts.items()))
             steps = self.n_decode_steps

@@ -53,6 +53,7 @@ from repro.models import supports_paged_kv
 from repro.core.simulator import simulate_query
 from repro.data.tokenizer import ByteTokenizer
 from .async_scheduler import DEFAULT_TENANT, AsyncBatchScheduler, SchedulerError
+from .config import EngineConfig, resolve_config
 from .continuous_batching import ContinuousBatchingEngine, GenerationTicket
 from .engine import GenerationEngine
 
@@ -191,55 +192,65 @@ class RagPipeline:
             start=start,
         )
 
-    def decode_engine(self, n_slots: int = 4,
+    def decode_engine(self, config: Optional[EngineConfig] = None, *,
+                      n_slots: Optional[int] = None,
                       cache_len: Optional[int] = None,
                       max_new_tokens: int = 32,
                       temperature: float = 0.0,
-                      paged: bool = False,
+                      paged: Optional[bool] = None,
                       block_size: Optional[int] = None,
                       n_blocks: Optional[int] = None,
                       prefill_chunk: Optional[int] = None,
                       prefix_sharing: Optional[bool] = None,
                       paged_kernel: Optional[bool] = None,
+                      retain_blocks: Optional[int] = None,
+                      host_blocks: Optional[int] = None,
                       start: bool = True) -> ContinuousBatchingEngine:
         """A ContinuousBatchingEngine over this pipeline's model.
 
         The generation twin of `scheduler()`: requests join and leave the
         `n_slots`-wide decode batch at token boundaries, so streaming
         generation keeps the batch full the way the async scheduler keeps
-        retrieval batches full. `cache_len` defaults to
-        `max_prompt_len + max_new_tokens` (every augmented prompt fits).
+        retrieval batches full. Pass the engine shape as
+        `config=EngineConfig(...)`; the per-knob keywords are a
+        deprecated shim that builds the same config (DeprecationWarning;
+        see serving/config.py for the migration path). `max_new_tokens`,
+        `temperature`, and `start` are pipeline-runtime parameters, not
+        engine shape, and stay ordinary keywords.
 
-        `paged=True` swaps the fixed per-slot cache regions for the
-        shared block pool (`serving.paged_cache`) with chunked prefill:
-        short queries stop paying long-prompt HBM, long augmented
-        prompts stop stalling admission, and `n_slots` can exceed what
-        fixed regions would allow at the same memory. `block_size` /
-        `n_blocks` / `prefill_chunk` pass straight through (n_blocks
-        defaults to the fixed-slot footprint). `prefix_sharing=None`
-        turns copy-on-write prefix sharing on exactly when the model's
-        KV is paged (attention families under `paged=True`); pass
-        True/False to force it. `paged_kernel` likewise passes through:
-        True routes paged attention through the fused Pallas
-        flash-decoding kernel, None defers to the model config.
+        Two `EngineConfig` fields resolve pipeline-side: `cache_len=None`
+        becomes `max_prompt_len + max_new_tokens` (every augmented
+        prompt fits) and `prefix_sharing=None` turns copy-on-write
+        prefix sharing on exactly when the model's KV is paged
+        (attention families under `paged=True`). Everything else —
+        pool geometry, the fused kernel, the retention/host tiers
+        (`retain_blocks`/`host_blocks`) — passes through to the engine
+        unchanged.
         """
         if self.engine is None:
             raise TypeError("decode_engine requires a model "
                             "(RagPipeline(..., model=, params=))")
-        if cache_len is None:
-            cache_len = self.max_prompt_len + max_new_tokens
-        if prefix_sharing is None:
-            prefix_sharing = paged and supports_paged_kv(self.engine.model)
+        config = resolve_config(config, dict(
+            n_slots=n_slots, cache_len=cache_len, paged=paged,
+            block_size=block_size, n_blocks=n_blocks,
+            prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+            paged_kernel=paged_kernel, retain_blocks=retain_blocks,
+            host_blocks=host_blocks))
+        resolved = {}
+        if config.cache_len is None:
+            resolved["cache_len"] = self.max_prompt_len + max_new_tokens
+        if config.prefix_sharing is None:
+            resolved["prefix_sharing"] = config.paged and supports_paged_kv(
+                self.engine.model)
+        if resolved:
+            config = config.replace(**resolved)
         eos = self.tokenizer.eos_id
         vocab = self.engine.model.cfg.vocab_size
         return ContinuousBatchingEngine(
-            self.engine.model, self.engine.params,
-            n_slots=n_slots, cache_len=cache_len,
+            self.engine.model, self.engine.params, config,
             eos_id=eos if eos < vocab else None,
             temperature=temperature,
-            paged=paged, block_size=block_size, n_blocks=n_blocks,
-            prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
-            paged_kernel=paged_kernel, clock=self._clock,
+            clock=self._clock,
             start=start,
         )
 
@@ -272,12 +283,16 @@ class RagPipeline:
                      max_wait_ms: float = 5.0,
                      key: Optional[jax.Array] = None,
                      generate: bool = False, max_new_tokens: int = 32,
-                     n_slots: int = 4, temperature: float = 0.0,
-                     paged: bool = False,
+                     temperature: float = 0.0,
+                     config: Optional[EngineConfig] = None,
+                     n_slots: Optional[int] = None,
+                     paged: Optional[bool] = None,
                      block_size: Optional[int] = None,
                      n_blocks: Optional[int] = None,
                      prefill_chunk: Optional[int] = None,
-                     prefix_sharing: Optional[bool] = None):
+                     prefix_sharing: Optional[bool] = None,
+                     retain_blocks: Optional[int] = None,
+                     host_blocks: Optional[int] = None):
         """Stream results as they are served (completion order).
 
         `requests` is an iterable of query strings or (tenant, text)
@@ -305,23 +320,27 @@ class RagPipeline:
         `encode_prompt_with_prefix`), so concurrent queries hitting the
         same documents share their context KV automatically;
         `prefix_sharing` forces the engine knob (None: on iff the
-        model's KV is paged).
+        model's KV is paged). Engine shape knobs are best passed as
+        `config=EngineConfig(...)`; the per-knob keywords are the usual
+        deprecated shim.
         """
         import queue as _queue
 
         if generate and self.engine is None:
             raise TypeError("query_stream(generate=True) requires a model")
+        config = resolve_config(config, dict(
+            n_slots=n_slots, paged=paged, block_size=block_size,
+            n_blocks=n_blocks, prefill_chunk=prefill_chunk,
+            prefix_sharing=prefix_sharing, retain_blocks=retain_blocks,
+            host_blocks=host_blocks))
         done_q: "_queue.Queue" = _queue.Queue()
         sched = engine = None
         try:
             # engine first: if its cache-layout probe raises, no thread
             # has started yet; the finally closes whatever did start
             engine = self.decode_engine(
-                n_slots=n_slots, max_new_tokens=max_new_tokens,
-                temperature=temperature, paged=paged,
-                block_size=block_size, n_blocks=n_blocks,
-                prefill_chunk=prefill_chunk,
-                prefix_sharing=prefix_sharing,
+                config, max_new_tokens=max_new_tokens,
+                temperature=temperature,
                 start=True) if generate else None
             sched = self.scheduler(max_batch=max_batch, key=key,
                                    max_wait_ms=max_wait_ms, start=True)
@@ -393,13 +412,17 @@ class RagPipeline:
         return ticket
 
     def generate_stream(self, requests, max_new_tokens: int = 32,
-                        n_slots: int = 4, temperature: float = 0.0,
+                        temperature: float = 0.0,
+                        config: Optional[EngineConfig] = None,
+                        n_slots: Optional[int] = None,
                         cache_len: Optional[int] = None,
-                        paged: bool = False,
+                        paged: Optional[bool] = None,
                         block_size: Optional[int] = None,
                         n_blocks: Optional[int] = None,
                         prefill_chunk: Optional[int] = None,
-                        prefix_sharing: Optional[bool] = None):
+                        prefix_sharing: Optional[bool] = None,
+                        retain_blocks: Optional[int] = None,
+                        host_blocks: Optional[int] = None):
         """Stream plain (retrieval-free) generations in completion order.
 
         `requests` is an iterable of prompt strings or (tenant, text)
@@ -407,24 +430,30 @@ class RagPipeline:
         decode slot. Yields GenerationTicket objects as sequences retire:
         `.text`, `.tokens`, `.answer_text`, `.first_token_s`, `.wait_s`.
         Use `ticket.token_stream()` from another thread for live
-        per-token consumption."""
+        per-token consumption. Engine shape knobs are best passed as
+        `config=EngineConfig(...)`; the per-knob keywords are the usual
+        deprecated shim."""
         import queue as _queue
 
         if self.engine is None:
             raise TypeError("generate_stream requires a model")
+        config = resolve_config(config, dict(
+            n_slots=n_slots, cache_len=cache_len, paged=paged,
+            block_size=block_size, n_blocks=n_blocks,
+            prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+            retain_blocks=retain_blocks, host_blocks=host_blocks))
         done_q: "_queue.Queue" = _queue.Queue()
-        if cache_len is not None and cache_len <= max_new_tokens:
+        if config.cache_len is not None \
+                and config.cache_len <= max_new_tokens:
             # the truncation below keeps the LAST (cache_len - max_new)
             # prompt tokens; with no room for even one, every submit
             # would be rejected — fail fast with the real constraint
             raise ValueError(
-                f"cache_len ({cache_len}) must exceed max_new_tokens "
-                f"({max_new_tokens}) to leave room for the prompt")
+                f"cache_len ({config.cache_len}) must exceed "
+                f"max_new_tokens ({max_new_tokens}) to leave room for "
+                "the prompt")
         engine = self.decode_engine(
-            n_slots=n_slots, cache_len=cache_len,
-            max_new_tokens=max_new_tokens, temperature=temperature,
-            paged=paged, block_size=block_size, n_blocks=n_blocks,
-            prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing,
+            config, max_new_tokens=max_new_tokens, temperature=temperature,
             start=True)
         vocab = self.engine.model.cfg.vocab_size
 

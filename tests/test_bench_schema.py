@@ -24,6 +24,7 @@ EXPECTED = {
     "BENCH_async_serving.json",
     "BENCH_continuous_batching.json",
     "BENCH_paged_cache.json",
+    "BENCH_prefix_cache.json",
     "BENCH_prefix_sharing.json",
 }
 

@@ -1,0 +1,208 @@
+"""The unified EngineConfig serving API (PR 7): the frozen config
+object, the legacy per-kwarg deprecation shim (config-vs-shim engines
+must be indistinguishable and the shim must warn exactly once per
+entry point), validation moved out of the engine constructor, and the
+stats()-schema drift test — every key documented in the engine and pool
+stats docstrings must actually be emitted with the documented kind.
+"""
+
+import re
+import warnings
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (
+    ContinuousBatchingEngine,
+    EngineConfig,
+    PagedCacheManager,
+)
+from repro.serving.config import resolve_config
+
+
+# ------------------------------------------------------- script model (paged)
+class PagedScriptModel:
+    """+1-chain over a real block pool (redeclared to keep this module
+    import-independent, same as the other serving test files)."""
+
+    def __init__(self, vocab: int = 32):
+        self.cfg = SimpleNamespace(vocab_size=vocab)
+        self.vocab = vocab
+
+    def init_caches(self, batch, cache_len, prefix_len):
+        return {
+            "last": jnp.zeros((batch, 1), jnp.int32),
+            "length": jnp.full((batch,), prefix_len, jnp.int32),
+        }
+
+    def decode_step(self, params, caches, token):
+        nxt = (token[:, 0] + 1) % self.vocab
+        logits = jax.nn.one_hot(nxt, self.vocab, dtype=jnp.float32)
+        return logits, {"last": token, "length": caches["length"] + 1}
+
+    def init_paged_caches(self, n_blocks, block_size):
+        return jnp.zeros((n_blocks, block_size), jnp.int32)
+
+    def paged_step(self, params, pools, tables, lengths, tokens, n_valid):
+        b, t = tokens.shape
+        bs = pools.shape[1]
+        mb = tables.shape[1]
+        pos = lengths[:, None] + jnp.arange(t)[None, :]
+        valid = jnp.arange(t)[None, :] < n_valid[:, None]
+        blk = jnp.take_along_axis(tables, jnp.clip(pos // bs, 0, mb - 1), axis=1)
+        blk = jnp.where(valid, blk, 0)
+        off = jnp.where(valid, pos % bs, 0)
+        pools = pools.at[blk, off].set(tokens)
+        last = lengths + jnp.maximum(n_valid, 1) - 1
+        lb = jnp.take_along_axis(tables, (last // bs)[:, None], axis=1)[:, 0]
+        last_tok = pools[lb, last % bs]
+        logits = jax.nn.one_hot(
+            (last_tok + 1) % self.vocab, self.vocab, dtype=jnp.float32)
+        return logits, pools
+
+
+_KNOBS = dict(n_slots=2, cache_len=32, paged=True, block_size=4,
+              n_blocks=9, prefill_chunk=4, prefix_sharing=True,
+              retain_blocks=4, host_blocks=4)
+
+
+# -------------------------------------------------------------- resolve shim
+def test_config_and_legacy_kwargs_build_identical_engines():
+    cfg_eng = ContinuousBatchingEngine(
+        PagedScriptModel(), {}, EngineConfig(**_KNOBS))
+    with pytest.deprecated_call():
+        kw_eng = ContinuousBatchingEngine(PagedScriptModel(), {}, **_KNOBS)
+    assert cfg_eng.config == kw_eng.config == EngineConfig(**_KNOBS)
+    for attr in ("n_slots", "cache_len", "paged", "block_size",
+                 "prefix_sharing", "retain_blocks", "host_blocks"):
+        assert getattr(cfg_eng, attr) == getattr(kw_eng, attr), attr
+    outs = []
+    for eng in (cfg_eng, kw_eng):
+        tickets = [eng.submit([1, 2, 3], max_new_tokens=4),
+                   eng.submit([5, 6], max_new_tokens=3)]
+        eng.run_until_drained()
+        outs.append([t.result() for t in tickets])
+        eng.close()
+    for a, b in zip(*outs):
+        assert np.array_equal(a, b)
+
+
+def test_legacy_path_warns_once_naming_the_knobs():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng = ContinuousBatchingEngine(
+            PagedScriptModel(), {}, n_slots=2, paged=True, block_size=4)
+    eng.close()
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    msg = str(dep[0].message)
+    assert "block_size" in msg and "n_slots" in msg and "paged" in msg
+    assert "EngineConfig" in msg
+
+
+def test_config_path_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = ContinuousBatchingEngine(
+            PagedScriptModel(), {}, EngineConfig(n_slots=2))
+        eng.close()
+
+
+def test_config_plus_knobs_is_rejected():
+    with pytest.raises(ValueError, match="not both"):
+        ContinuousBatchingEngine(
+            PagedScriptModel(), {}, EngineConfig(n_slots=2), cache_len=64)
+    with pytest.raises(TypeError, match="EngineConfig"):
+        ContinuousBatchingEngine(PagedScriptModel(), {}, {"n_slots": 2})
+
+
+def test_runtime_params_are_not_deprecated():
+    """clock/start/eos_id/temperature/key stay per-call keywords — they
+    are runtime wiring, not engine shape, and must not warn."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = ContinuousBatchingEngine(
+            PagedScriptModel(), {}, EngineConfig(n_slots=2),
+            eos_id=7, temperature=0.0, clock=lambda: 0.0, start=False)
+        eng.close()
+
+
+def test_resolve_config_stacklevel_points_at_caller():
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        resolve_config(None, dict(n_slots=8), stacklevel=2)
+    assert rec and rec[0].filename == __file__
+
+
+# -------------------------------------------------------------- validation
+def test_validation_lives_in_engine_config():
+    with pytest.raises(ValueError, match="n_slots"):
+        EngineConfig(n_slots=0)
+    with pytest.raises(ValueError, match="cache_len"):
+        EngineConfig(cache_len=1)
+    with pytest.raises(ValueError, match="paged=True"):
+        EngineConfig(retain_blocks=4)
+    with pytest.raises(ValueError, match="paged=True"):
+        EngineConfig(prefill_chunk=8)
+    with pytest.raises(ValueError, match="retain_blocks"):
+        EngineConfig(paged=True, host_blocks=4)
+    with pytest.raises(ValueError, match="host_blocks must be"):
+        EngineConfig(paged=True, retain_blocks=4, host_blocks=-1)
+    # prefix_sharing=False is an inert default, allowed without paged
+    assert EngineConfig(prefix_sharing=False).paged is False
+    with pytest.raises(ValueError, match="paged=True"):
+        EngineConfig(prefix_sharing=True)
+
+
+def test_replace_revalidates():
+    cfg = EngineConfig(paged=True, block_size=8)
+    assert cfg.replace(retain_blocks=4).retain_blocks == 4
+    with pytest.raises(ValueError, match="paged=True"):
+        cfg.replace(paged=False)
+
+
+# ------------------------------------------------------- stats schema drift
+def _documented_keys(doc: str) -> set:
+    """Keys a stats() docstring promises, written as `backticked_names`
+    (call-outs like `clear_retained()` carry parens and don't match)."""
+    return set(re.findall(r"`(\w+)`", doc))
+
+
+def test_engine_stats_schema_matches_docstring():
+    eng = ContinuousBatchingEngine(
+        PagedScriptModel(), {}, EngineConfig(**_KNOBS))
+    t = eng.submit([1, 2, 3, 4, 5], max_new_tokens=4)
+    eng.run_until_drained()
+    assert t.done()
+    stats = eng.stats()
+    eng.close()
+    keys = _documented_keys(ContinuousBatchingEngine.stats.__doc__)
+    assert keys  # the docstring really documents a schema
+    for key in keys:
+        assert key in stats, f"documented key {key!r} missing from stats()"
+    for key in keys - {"occupancy_hist", "pool", "paged_kernel"}:
+        assert isinstance(stats[key], (int, float)), key
+    assert isinstance(stats["occupancy_hist"], dict)
+    assert isinstance(stats["pool"], dict)
+    assert stats["paged_kernel"] is None or isinstance(
+        stats["paged_kernel"], bool)
+
+
+def test_pool_stats_schema_matches_docstring():
+    pcm = PagedCacheManager(9, 4, 6, retain_blocks=2)
+    pcm.reserve("a", 8)
+    pcm.ensure("a", 8)
+    pcm.register_prefix("ctx", "a", 8)
+    stats = pcm.stats()
+    keys = _documented_keys(PagedCacheManager.stats.__doc__)
+    assert keys
+    for key in keys:
+        assert key in stats, f"documented key {key!r} missing from stats()"
+        assert isinstance(stats[key], (int, float)), key
+    # and the docstring promises cover everything stats() emits
+    assert set(stats) == keys
+    assert stats["prefix_hit_rate"] == (
+        stats["device_hit_rate"] + stats["host_hit_rate"])

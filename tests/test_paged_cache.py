@@ -193,35 +193,69 @@ def test_cow_shrunk_regression():
 
 
 # ------------------------------------------------------------- allocator fuzz
-def _assert_allocator_invariants(pcm: PagedCacheManager) -> None:
-    """The invariants every op sequence must preserve (ISSUE 5)."""
+def _assert_allocator_invariants(pcm: PagedCacheManager, host_store=None) -> None:
+    """The invariants every op sequence must preserve (ISSUE 5, extended
+    with the PR 7 retention pins and host-tier accounting)."""
     live: dict[int, int] = {}  # block -> appearances across tables
     for blocks in pcm._blocks.values():
         assert len(set(blocks)) == len(blocks)  # no dup inside one table
         for b in blocks:
             assert b != NULL_BLOCK  # null block never allocated
             live[b] = live.get(b, 0) + 1
+    # retained entries pin each of their blocks once (on top of whatever
+    # tables still reference them); a fully-retired retained prefix is
+    # live through its pins alone
+    pins: dict[int, int] = {}
+    for entry in pcm._retained.values():
+        for b in entry.blocks:
+            assert b != NULL_BLOCK
+            pins[b] = pins.get(b, 0) + 1
     # every live block has refcount >= 1, and a block appears in two
-    # tables only when its refcount says so
-    assert set(pcm._ref) == set(live)
-    for b, n in live.items():
-        assert pcm._ref[b] == n >= 1
-    # free + allocated sum to the usable pool, with no overlap
+    # tables (or a table and the retained LRU) only when its refcount
+    # says so: ref == table multiplicity + retained pins
+    assert set(pcm._ref) == set(live) | set(pins)
+    for b in pcm._ref:
+        assert pcm._ref[b] == live.get(b, 0) + pins.get(b, 0) >= 1
+    # free + allocated (+ retained-only) sum to the usable pool
     assert NULL_BLOCK not in pcm._free
     assert len(set(pcm._free)) == len(pcm._free)
-    assert not set(pcm._free) & set(live)
-    assert len(pcm._free) + len(live) == pcm.n_usable_blocks
+    assert not set(pcm._free) & set(pcm._ref)
+    assert len(pcm._free) + len(pcm._ref) == pcm.n_usable_blocks
     # budget accounting never oversubscribes the pool
     st = pcm.stats()
     assert st["free_blocks"] >= 0
-    assert st["allocated_blocks"] == len(live)
-    assert st["n_shared_blocks"] == sum(1 for n in live.values() if n >= 2)
+    assert st["allocated_blocks"] == len(pcm._ref)
+    assert st["n_shared_blocks"] == sum(
+        1 for b in pcm._ref if pcm._ref[b] >= 2
+    )
     # the registry only references live blocks (entries are evicted with
-    # their blocks) and every CoW credit sits on a live shared block
+    # their blocks) and every CoW credit sits on a live block
     for entry in pcm._prefix_index.values():
-        assert all(b in live for b in entry.blocks)
+        assert all(b in pcm._ref for b in entry.blocks)
     for b, credits in pcm._cow_pot.items():
-        assert credits >= 1 and b in live
+        assert credits >= 1 and b in pcm._ref
+    # retention tier: budget respected, every retained entry is also in
+    # the registry, credits only on retained keys, and a key never sits
+    # in both tiers at once
+    assert st["n_retained"] == len(pcm._retained)
+    assert st["n_retained_blocks"] == pcm.retained_blocks()
+    assert pcm.retained_blocks() <= pcm.retain_blocks
+    for key, entry in pcm._retained.items():
+        assert pcm._prefix_index.get(key) is entry
+    assert set(pcm._retained_credit) <= set(pcm._retained)
+    if not pcm.retain_blocks:
+        assert not pcm._retained and not pcm._retained_credit
+    # host tier: budget respected, byte ledger matches the engine-side
+    # store exactly, no overlap with the device tier
+    assert pcm._host_blocks() <= pcm.host_blocks
+    assert not set(pcm._retained) & set(pcm._host_index)
+    if not pcm.host_blocks:
+        assert not pcm._host_index and pcm.host_bytes == 0
+    if host_store is not None:
+        assert set(host_store) == set(pcm._host_index)
+        assert pcm.host_bytes == sum(host_store.values())
+    # hit counters split cleanly by tier
+    assert st["n_prefix_hits"] == st["n_device_hits"] + st["n_host_hits"]
     # rendered tables agree with the allocator's view
     for seq in pcm.seqs():
         row, blocks = pcm.table(seq), pcm._blocks[seq]
@@ -232,19 +266,47 @@ def _assert_allocator_invariants(pcm: PagedCacheManager) -> None:
 def _fuzz_round(seed: int, n_ops: int = 40) -> None:
     """One randomized op sequence mirroring the engine's allocator
     contract: reserve (with/without prefix_key) -> ensure+prepare_write
-    in monotone spans -> register once covered -> free; invariants are
-    asserted after EVERY op and the drained pool must be pristine."""
+    in monotone spans -> register once covered -> free; roughly half the
+    rounds run with a retention budget (sometimes plus a host tier), so
+    retain/evict/host-swap interleave with every other op; invariants
+    are asserted after EVERY op and the drained pool must be pristine
+    after clear_retained() + full release."""
     rng = random.Random(seed)
     block_size = rng.choice([1, 2, 4])
     width = rng.randint(2, 6)
     n_blocks = rng.randint(4, 24)
-    pcm = PagedCacheManager(n_blocks, block_size, width)
+    retain = rng.choice([0, rng.randint(1, max(1, n_blocks // 2))])
+    host = rng.choice([0, rng.randint(1, n_blocks)]) if retain else 0
+    host_store: dict = {}  # engine-side stand-in: key -> nbytes
+
+    def on_evict(key, blocks, n_tokens):
+        assert key not in host_store  # _host_insert never double-offloads
+        host_store[key] = 4 * n_tokens
+        return host_store[key]
+
+    def on_swapin(key, blocks, n_tokens):
+        host_store.pop(key)  # engine pops its saved bytes on swap-in
+
+    def on_host_drop(key):
+        host_store.pop(key)
+
+    pcm = PagedCacheManager(
+        n_blocks, block_size, width,
+        retain_blocks=retain, host_blocks=host,
+        on_evict=on_evict if host else None,
+        on_swapin=on_swapin if host else None,
+        on_host_drop=on_host_drop if host else None,
+    )
     keys = [f"k{i}" for i in range(3)]
     seqs: dict[int, dict] = {}  # sid -> {n, cur, key, published}
     next_sid = 0
     for _ in range(n_ops):
         op = rng.random()
-        if op < 0.35:  # reserve, sometimes too wide / over-subscribed
+        if op < 0.05 and retain:  # drop both tiers (bench/test isolation)
+            pcm.clear_retained()
+            assert not pcm._retained and not pcm._host_index
+            assert not host_store and pcm.host_bytes == 0
+        elif op < 0.35:  # reserve, sometimes too wide / over-subscribed
             sid, next_sid = next_sid, next_sid + 1
             n_tok = rng.randint(1, pcm.max_seq_tokens + block_size)
             key = rng.choice(keys + [None, None])
@@ -291,16 +353,20 @@ def _fuzz_round(seed: int, n_ops: int = 40) -> None:
             sid = rng.choice(list(seqs))
             pcm.free(sid)
             del seqs[sid]
-        _assert_allocator_invariants(pcm)
+        _assert_allocator_invariants(pcm, host_store)
     for sid in list(seqs):
         pcm.free(sid)
-        _assert_allocator_invariants(pcm)
-    # full release returns the pool to pristine state
+        _assert_allocator_invariants(pcm, host_store)
+    # clear_retained() + full release returns the pool to pristine state
+    pcm.clear_retained()
+    _assert_allocator_invariants(pcm, host_store)
     st = pcm.stats()
     assert st["free_blocks"] == pcm.n_usable_blocks
     assert len(pcm._free) == pcm.n_usable_blocks
     assert not pcm._ref and not pcm._cow_pot and not pcm._prefix_index
     assert not pcm._blocks and not pcm._reserved and not pcm._funded
+    assert not pcm._retained and not pcm._retained_credit
+    assert not pcm._host_index and not host_store and pcm.host_bytes == 0
 
 
 def test_allocator_fuzz_seeded():
