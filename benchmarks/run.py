@@ -11,6 +11,7 @@
   bench_paged_cache -> paged vs fixed-slot KV cache at equal HBM
   bench_prefix_sharing -> CoW prefix sharing vs private blocks at equal HBM
   bench_prefix_cache -> tiered prefix retention + host offload, Zipf sweep
+  bench_router     -> replicated-engine fleet scaling + prefix affinity
   roofline_report  -> dry-run roofline tables (EXPERIMENTS.md source)
 
 Run: PYTHONPATH=src python -m benchmarks.run
@@ -22,8 +23,8 @@ import time
 from . import (bench_async_serving, bench_continuous_batching,
                bench_error_opt, bench_kernels, bench_latency,
                bench_paged_cache, bench_precision, bench_prefix_cache,
-               bench_prefix_sharing, bench_sharded, bench_simulator,
-               roofline_report)
+               bench_prefix_sharing, bench_router, bench_sharded,
+               bench_simulator, roofline_report)
 
 SECTIONS = [
     ("Table I — DIRC-RAG spec (calibrated model)", bench_simulator),
@@ -37,6 +38,7 @@ SECTIONS = [
     ("Paged vs fixed-slot KV cache", bench_paged_cache),
     ("CoW prefix sharing on the paged pool", bench_prefix_sharing),
     ("Tiered prefix retention + host offload", bench_prefix_cache),
+    ("Replicated-engine fleet + prefix affinity", bench_router),
     ("Roofline (from multi-pod dry-run)", roofline_report),
 ]
 

@@ -8,8 +8,10 @@ The paper's contribution as a composable JAX library:
   error_detection Sigma-D checksum + re-sense (Fig. 5b)
   topk            hierarchical local/global top-k (Fig. 3a)
   retrieval       DircRagIndex build/search
-  sharded_index   ShardedDircIndex: multi-macro shards + incremental updates
-  distributed     pod-scale shard_map retrieval (local top-k + global merge)
+  sharded_index   ShardedDircIndex: multi-macro shards on a real device
+                  mesh + incremental updates + the pod-scale flat-index
+                  searcher (local top-k + global merge)
+  distributed     DEPRECATED shim -> sharded_index
   dataflow        query-stationary cycle schedule (Fig. 4)
   simulator       calibrated cycle/energy/area model (Tables I & III)
 """

@@ -2,12 +2,41 @@
 
 `shard_map` graduated from `jax.experimental.shard_map` to `jax.shard_map`,
 and its replication-checker kwarg was renamed `check_rep` -> `check_vma`
-along the way. Every in-repo caller goes through this wrapper so the repo
-runs on both sides of the migration.
+along the way; `jax.make_mesh` is newer than the oldest JAX this repo
+supports. Every in-repo caller goes through these wrappers so the repo
+runs on both sides of each migration.
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax
+import numpy as np
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str],
+              devices: Optional[Sequence] = None):
+    """`jax.make_mesh(shape, axis_names)` across JAX versions.
+
+    `devices` restricts the mesh to an explicit device subset (in that
+    order) — `jax.make_mesh` has no such parameter, so subsetting always
+    takes the manual-Mesh construction. This is THE blessed multi-device
+    mesh entry point for retrieval (`core.sharded_index`) and serving
+    (`launch.mesh`): one place that knows how to build a Mesh everywhere.
+    """
+    from jax.sharding import Mesh
+
+    shape = tuple(int(s) for s in shape)
+    if devices is None:
+        try:
+            return jax.make_mesh(shape, tuple(axis_names))
+        except AttributeError:  # older jax: build the Mesh by hand
+            devices = jax.devices()
+    n = int(np.prod(shape))
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh shape {shape} needs {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), tuple(axis_names))
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_replication: bool = False):

@@ -1,111 +1,41 @@
-"""Pod-scale sharded retrieval — the paper's 16-core hierarchy on a mesh.
+"""DEPRECATED shim — the pod-scale searcher moved to `core.sharded_index`.
 
-DIRC-RAG's architecture is sixteen independent cores, each scoring its own
-database shard and emitting a local top-k; a global comparator merges the
-tiny candidate lists (paper Fig. 3a). At TPU-pod scale the isomorphic
-dataflow is:
+There used to be two multi-device retrieval entry points: the stacked
+macro images in `sharded_index` and this module's flat sharded matrix.
+Both built their own mesh plumbing; they are now ONE path —
+`core.sharded_index` owns both layouts (over `core._compat.make_mesh` /
+`launch.mesh.make_macro_mesh`), and this module just forwards to it.
 
-    doc shard per device (query-stationary: docs never move)
-      -> per-device INT8 scores               (local, zero collectives)
-      -> per-device local top-k               (the "local comparator")
-      -> all_gather of (k, score, id) triples (the "SRAM buffer": tiny)
-      -> global top-k                         (the "global comparator")
-
-The all-gather payload is k * 8 bytes * devices — e.g. 512 devices, k=16:
-64 KB total, mirroring the paper's "<1 KB SRAM buffer" argument: local
-selection eliminates nearly all candidates before any communication.
-
-`shard_map` is required (not bare GSPMD) because *local* top-k semantics —
-top-k per shard, not global top-k — cannot be expressed as a sharding
-constraint on a global op.
+Every public name (`make_distributed_searcher`, `shard_index_arrays`)
+still imports and behaves identically, but touching it emits a
+DeprecationWarning naming the new home. Delete-after: one release.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Sequence
+import warnings
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from ._compat import axis_size, shard_map
-from .topk import TopK
-
-
-def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
-    """Linear device index over (possibly multiple) mesh axes."""
-    idx = jnp.int32(0)
-    for name in axis_names:
-        idx = idx * axis_size(name) + jax.lax.axis_index(name)
-    return idx
+_FORWARDED = (
+    "make_distributed_searcher",
+    "shard_index_arrays",
+    "_local_search",
+    "_flat_axis_index",
+)
 
 
-def _local_search(q, docs, norms, *, k: int, metric: str, axis_names):
-    """Per-shard body: score + local top-k + gather + global merge."""
-    # q: (b, dim) int8 replicated; docs: (n_local, dim) int8; norms: (n_local,)
-    ip = jax.lax.dot_general(
-        q.astype(jnp.int32),
-        docs.astype(jnp.int32),
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    ).astype(jnp.float32)
-    if metric == "cosine":
-        qn = jnp.sqrt(jnp.sum(q.astype(jnp.float32) ** 2, -1, keepdims=True))
-        scores = ip / jnp.maximum(qn * norms[None, :], 1e-12)
-    else:
-        scores = ip
-    n_local = docs.shape[0]
-    kk = min(k, n_local)
-    lv, li = jax.lax.top_k(scores, kk)                     # (b, k) local
-    shard = _flat_axis_index(axis_names)
-    gid = li.astype(jnp.int32) + shard * n_local           # global doc ids
-    # All-gather the candidate lists (tiny) and merge.
-    av = jax.lax.all_gather(lv, axis_names, axis=1, tiled=True)  # (b, P*k)
-    ai = jax.lax.all_gather(gid, axis_names, axis=1, tiled=True)
-    gv, gpos = jax.lax.top_k(av, k)
-    gi = jnp.take_along_axis(ai, gpos, axis=1)
-    return gv, gi
+def __getattr__(name):
+    if name in _FORWARDED:
+        warnings.warn(
+            f"repro.core.distributed.{name} is deprecated; use "
+            f"repro.core.sharded_index.{name}",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from . import sharded_index
+
+        return getattr(sharded_index, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
 
 
-def make_distributed_searcher(
-    mesh: Mesh,
-    k: int,
-    metric: str = "cosine",
-    doc_axes: Sequence[str] | None = None,
-):
-    """Build a jit'd searcher over `mesh`.
-
-    Docs are sharded along their first axis over `doc_axes` (default: all
-    mesh axes — every device holds a distinct database shard, the maximal
-    'core count'). Queries are replicated (query-stationary broadcast).
-
-    Returns fn(q_int8 (b, dim), docs_int8 (n, dim), norms (n,)) -> TopK,
-    with outputs replicated.
-    """
-    doc_axes = tuple(doc_axes if doc_axes is not None else mesh.axis_names)
-    doc_spec = P(doc_axes)
-    body = partial(_local_search, k=k, metric=metric, axis_names=doc_axes)
-    shmapped = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(), doc_spec, doc_spec),
-        out_specs=(P(), P()),
-        check_replication=False,  # outputs ARE replicated (all_gather over
-                                  # all doc axes + identical top_k); the
-                                  # checker cannot prove it through top_k
-    )
-
-    @jax.jit
-    def search(q, docs, norms) -> TopK:
-        v, i = shmapped(q, docs, norms)
-        return TopK(scores=v, indices=i)
-
-    return search
-
-
-def shard_index_arrays(mesh: Mesh, docs_values, doc_norms, doc_axes=None):
-    """Place index arrays with the sharding the searcher expects."""
-    doc_axes = tuple(doc_axes if doc_axes is not None else mesh.axis_names)
-    ds = NamedSharding(mesh, P(doc_axes))
-    ns = NamedSharding(mesh, P(doc_axes))
-    return jax.device_put(docs_values, ds), jax.device_put(doc_norms, ns)
+def __dir__():
+    return sorted(list(globals()) + list(_FORWARDED))

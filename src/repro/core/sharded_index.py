@@ -29,10 +29,20 @@ Incremental updates (the corpus is no longer build-once):
     slots are masked to -inf before the local comparator, so their ids can
     never be returned, and the slot is reused by a later `add_docs`. Global
     doc ids are never reused: `ids[s, slot]` maps slots to stable ids.
+
+Device parallelism: `parallelism="shard_map"` scores the stacked macro
+images over a REAL `jax.sharding.Mesh` — pass one explicitly via
+`build(..., mesh=launch.mesh.make_macro_mesh())` or let it default to a
+1-D mesh over every device — with per-device local scoring and a tiny
+all-gather, exact monolithic parity included. This module is also the
+one blessed home of the pod-scale FLAT-index searcher
+(`make_distributed_searcher` / `shard_index_arrays`, folded from the
+retired `core.distributed`, which lives on as a deprecation shim).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Optional, Sequence
 
@@ -48,12 +58,14 @@ PARALLELISM = ("vmap", "map", "shard_map")
 _NEG_INF = jnp.float32(-jnp.inf)
 
 
-@partial(jax.jit, static_argnames=("cfg", "parallelism"))
+@partial(jax.jit, static_argnames=("cfg", "parallelism", "mesh"))
 def _scores_impl(queries, values, scales, planes, norms, alive,
-                 *, cfg: RetrievalConfig, parallelism: str) -> jax.Array:
+                 *, cfg: RetrievalConfig, parallelism: str,
+                 mesh=None) -> jax.Array:
     """All-shard scores (S, b, cap), dead slots -inf. One XLA program per
     (config, parallelism, shape) combination — RetrievalConfig is frozen
-    and hashable, so it rides along as a static argument."""
+    and hashable, so it rides along as a static argument (and so is
+    `jax.sharding.Mesh`, so the explicit device mesh does too)."""
     q = quantization.quantize_query(queries, bits=cfg.bits)
 
     def shard_fn(values_s, scales_s, planes_s, norms_s):
@@ -66,36 +78,41 @@ def _scores_impl(queries, values, scales, planes, norms, alive,
     elif parallelism == "shard_map" and cfg.path not in (
         "kernel_bitserial", "kernel_mxu",
     ):
-        s = _shard_map_scores(shard_fn, args)
+        s = _shard_map_scores(shard_fn, args, mesh=mesh)
     else:  # "vmap", and shard_map's fallback for the Pallas paths
         s = jax.vmap(shard_fn)(*args)
     return jnp.where(alive[:, None, :], s, _NEG_INF)
 
 
-def _shard_map_scores(shard_fn, args) -> jax.Array:
-    """Distribute macros over the available devices along a 1-D mesh.
+def _shard_map_scores(shard_fn, args, mesh=None) -> jax.Array:
+    """Distribute macros over a real device mesh along its leading axis.
 
     Each device scores its local block of shards (vmap inside the body)
     and the (S, b, cap) result is all-gathered back — candidate-list
-    merging stays tiny exactly as in `core.distributed`. Falls back to
-    plain vmap when the device count does not divide n_shards.
+    merging stays tiny exactly as in `make_distributed_searcher` below.
+    `mesh=None` builds a 1-D ("macro",) mesh over every available device
+    (`launch.mesh.make_macro_mesh` builds the same one explicitly);
+    falls back to plain vmap when the device count does not divide
+    n_shards, so a single-device host still runs the shard_map path's
+    semantics without error.
     """
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
-    from ._compat import shard_map
+    from ._compat import make_mesh, shard_map
 
-    devs = jax.devices()
-    if args[0].shape[0] % len(devs):
+    if mesh is None:
+        mesh = make_mesh((len(jax.devices()),), ("macro",))
+    axes = mesh.axis_names
+    if args[0].shape[0] % math.prod(mesh.devices.shape):
         return jax.vmap(shard_fn)(*args)
-    mesh = Mesh(np.asarray(devs), ("macro",))
 
     def body(values, scales, planes_s, norms):
         local = jax.vmap(shard_fn)(values, scales, planes_s, norms)
-        return jax.lax.all_gather(local, "macro", axis=0, tiled=True)
+        return jax.lax.all_gather(local, axes, axis=0, tiled=True)
 
     mapped = shard_map(
         body, mesh=mesh,
-        in_specs=(P("macro"), P("macro"), P("macro"), P("macro")),
+        in_specs=(P(axes), P(axes), P(axes), P(axes)),
         out_specs=P(),
         check_replication=False,
     )
@@ -150,6 +167,7 @@ class ShardedDircIndex:
     dim: int
     next_id: int
     parallelism: str = "vmap"
+    mesh: Optional[object] = None  # jax.sharding.Mesh (shard_map only)
 
     # ---------------------------------------------------------------- build
     @classmethod
@@ -159,9 +177,17 @@ class ShardedDircIndex:
         config: RetrievalConfig,
         n_shards: int = 4,
         parallelism: str = "vmap",
+        mesh=None,
     ) -> "ShardedDircIndex":
+        """`mesh` pins `parallelism="shard_map"` scoring to an explicit
+        `jax.sharding.Mesh` (e.g. `launch.mesh.make_macro_mesh()`) —
+        shards are split over its leading axis, one device group per
+        macro block. None scores over a 1-D mesh of all devices."""
         if parallelism not in PARALLELISM:
             raise ValueError(f"parallelism must be one of {PARALLELISM}")
+        if mesh is not None and parallelism != "shard_map":
+            raise ValueError(
+                "mesh= only applies to parallelism='shard_map'")
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         emb = np.asarray(embeddings, np.float32)
@@ -202,6 +228,7 @@ class ShardedDircIndex:
             dim=dim,
             next_id=n,
             parallelism=parallelism,
+            mesh=mesh,
         )
 
     # ------------------------------------------------------------- counters
@@ -252,7 +279,7 @@ class ShardedDircIndex:
         planes = self._sensed_planes(key) if uses_planes else self.planes
         return _scores_impl(queries, self.values, self.scales, planes,
                             self.norms, self.alive, cfg=self.config,
-                            parallelism=self.parallelism)
+                            parallelism=self.parallelism, mesh=self.mesh)
 
     # --------------------------------------------------------------- search
     def search(
@@ -368,3 +395,112 @@ class ShardedDircIndex:
         buffer = slots * (4 + 4 + self.config.bits * 4 // 8)
         return {"embeddings": emb, "reram_buffer": buffer,
                 "live_docs": self.n_docs}
+
+
+# --------------------------------------------------------------------------
+# Pod-scale flat-index searcher (folded from core.distributed).
+#
+# `ShardedDircIndex` stacks per-macro IMAGES and scores them over the
+# macro mesh above; this is the complementary flat layout — one big
+# (n, dim) int8 code matrix sharded along its doc axis, scored with the
+# paper's comparator dataflow expressed directly in collectives:
+#
+#     doc shard per device (query-stationary: docs never move)
+#       -> per-device INT8 scores               (local, zero collectives)
+#       -> per-device local top-k               (the "local comparator")
+#       -> all_gather of (k, score, id) triples (the "SRAM buffer": tiny)
+#       -> global top-k                         (the "global comparator")
+#
+# The all-gather payload is k * 8 bytes * devices — e.g. 512 devices,
+# k=16: 64 KB total, mirroring the paper's "<1 KB SRAM buffer" argument.
+# `shard_map` is required (not bare GSPMD) because *local* top-k
+# semantics — top-k per shard, not global top-k — cannot be expressed as
+# a sharding constraint on a global op. `core.distributed` re-exports
+# these under a DeprecationWarning.
+# --------------------------------------------------------------------------
+
+def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
+    """Linear device index over (possibly multiple) mesh axes."""
+    from ._compat import axis_size
+
+    idx = jnp.int32(0)
+    for name in axis_names:
+        idx = idx * axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def _local_search(q, docs, norms, *, k: int, metric: str, axis_names):
+    """Per-shard body: score + local top-k + gather + global merge."""
+    # q: (b, dim) int8 replicated; docs: (n_local, dim) int8; norms: (n_local,)
+    ip = jax.lax.dot_general(
+        q.astype(jnp.int32),
+        docs.astype(jnp.int32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    if metric == "cosine":
+        qn = jnp.sqrt(jnp.sum(q.astype(jnp.float32) ** 2, -1, keepdims=True))
+        scores = ip / jnp.maximum(qn * norms[None, :], 1e-12)
+    else:
+        scores = ip
+    n_local = docs.shape[0]
+    kk = min(k, n_local)
+    lv, li = jax.lax.top_k(scores, kk)                     # (b, k) local
+    shard = _flat_axis_index(axis_names)
+    gid = li.astype(jnp.int32) + shard * n_local           # global doc ids
+    # All-gather the candidate lists (tiny) and merge.
+    av = jax.lax.all_gather(lv, axis_names, axis=1, tiled=True)  # (b, P*k)
+    ai = jax.lax.all_gather(gid, axis_names, axis=1, tiled=True)
+    gv, gpos = jax.lax.top_k(av, k)
+    gi = jnp.take_along_axis(ai, gpos, axis=1)
+    return gv, gi
+
+
+def make_distributed_searcher(
+    mesh,
+    k: int,
+    metric: str = "cosine",
+    doc_axes: Sequence[str] | None = None,
+):
+    """Build a jit'd flat-index searcher over `mesh`.
+
+    Docs are sharded along their first axis over `doc_axes` (default: all
+    mesh axes — every device holds a distinct database shard, the maximal
+    'core count'). Queries are replicated (query-stationary broadcast).
+
+    Returns fn(q_int8 (b, dim), docs_int8 (n, dim), norms (n,)) -> TopK,
+    with outputs replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from ._compat import shard_map
+
+    doc_axes = tuple(doc_axes if doc_axes is not None else mesh.axis_names)
+    doc_spec = P(doc_axes)
+    body = partial(_local_search, k=k, metric=metric, axis_names=doc_axes)
+    shmapped = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), doc_spec, doc_spec),
+        out_specs=(P(), P()),
+        check_replication=False,  # outputs ARE replicated (all_gather over
+                                  # all doc axes + identical top_k); the
+                                  # checker cannot prove it through top_k
+    )
+
+    @jax.jit
+    def search(q, docs, norms) -> topk.TopK:
+        v, i = shmapped(q, docs, norms)
+        return topk.TopK(scores=v, indices=i)
+
+    return search
+
+
+def shard_index_arrays(mesh, docs_values, doc_norms, doc_axes=None):
+    """Place flat-index arrays with the sharding the searcher expects."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    doc_axes = tuple(doc_axes if doc_axes is not None else mesh.axis_names)
+    ds = NamedSharding(mesh, P(doc_axes))
+    ns = NamedSharding(mesh, P(doc_axes))
+    return jax.device_put(docs_values, ds), jax.device_put(doc_norms, ns)

@@ -4,7 +4,7 @@ Sixteen DIRC-RAG cores each hold a shard of the database and run a local
 top-k comparator; the tiny (score, index) candidate lists land in an SRAM
 buffer and a global comparator merges them. The same structure scales to a
 TPU pod: per-device local top-k + all-gather of candidates + global merge
-(see `core/distributed.py`).
+(see the flat-index searcher in `core/sharded_index.py`).
 
 `jax.lax.top_k` breaks ties toward the LOWER index; the hierarchical merge
 preserves that order because core-local indices are offset monotonically.

@@ -30,6 +30,19 @@ def make_local_mesh(model_par: int = 1):
     return jax.make_mesh((n // model_par, model_par), ("data", "model"))
 
 
+def make_macro_mesh(n_devices: int | None = None):
+    """1-D retrieval mesh over ("macro",): one device per group of DIRC
+    macros. This is the mesh `ShardedDircIndex(parallelism="shard_map")`
+    scores over — pass it as `build(..., mesh=...)` (or let the index
+    default to all devices). `n_devices=None` uses every device.
+    """
+    from repro.core._compat import make_mesh
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    return make_mesh((n,), ("macro",), devices=devs)
+
+
 def batch_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -21,6 +21,12 @@ and admission-backpressure counters to the report; --paged-kernel routes
 paged attention through the fused Pallas flash-decoding kernel
 (kernels/paged_attend.py) instead of the dense-window gather path.
 
+--n-replicas N serves decode from an EngineRouter fleet of N replicated
+engines with prefix-affinity placement (--no-affinity falls back to
+least-loaded routing), adding per-replica submit and affinity
+hit/miss/spill counters to the report. --json FILE ('-' = stdout)
+additionally emits any --rag report as machine-readable JSON.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
       --batch 4 --prompt-len 16 --new-tokens 32
@@ -32,10 +38,14 @@ Usage:
       --offered-qps 20 --rag-queries 32 --new-tokens 16 --n-slots 4
   PYTHONPATH=src python -m repro.launch.serve --rag --open-loop --generate \
       --paged --n-slots 16 --block-size 16 --prefill-chunk 32 --paged-kernel
+  PYTHONPATH=src python -m repro.launch.serve --rag --open-loop --generate \
+      --paged --n-slots 4 --n-replicas 2 --affinity --json report.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 from typing import Optional
 
@@ -48,9 +58,11 @@ from repro.models import build_model
 from repro.serving import (
     AsyncBatchScheduler,
     EngineConfig,
+    EngineRouter,
     GenerationEngine,
     HashEmbedder,
     RagPipeline,
+    RouterConfig,
     SchedulerError,
 )
 from repro.serving.config import resolve_config
@@ -96,6 +108,44 @@ def serve_rag(n_docs: int = 1024, n_shards: int = 4, dim: int = 256,
     return {"wall_s": dt, "qps": n_queries / dt,
             "flushes": sched.n_flushes - warmup_flushes,
             "self_retrieval": exact / n_queries}
+
+
+def _jsonable(obj):
+    """Report dict -> something json.dump accepts: histogram keys become
+    strings, numpy scalars/arrays become Python numbers/lists."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return obj
+
+
+def _emit_json(out: dict, dest: str) -> None:
+    """Write the open-loop report as JSON to `dest` ('-' = stdout)."""
+    payload = json.dumps(_jsonable(out), indent=2, sort_keys=True)
+    if dest == "-":
+        sys.stdout.write(payload + "\n")
+    else:
+        with open(dest, "w") as f:
+            f.write(payload + "\n")
+
+
+def _sum_pools(pools: list) -> dict:
+    """Key-wise sum of per-replica pool stats dicts, with the hit-rate
+    fields recomputed over the pooled attempt counts (a mean of per-pool
+    rates would weight an idle replica the same as a busy one)."""
+    out = {k: sum(p[k] for p in pools) for k in pools[0]}
+    out["block_size"] = pools[0]["block_size"]
+    attempts = out["n_prefix_hits"] + out["n_prefix_misses"]
+    for rate, hits in (("prefix_hit_rate", "n_prefix_hits"),
+                       ("device_hit_rate", "n_device_hits"),
+                       ("host_hit_rate", "n_host_hits")):
+        out[rate] = out[hits] / attempts if attempts else 0.0
+    return out
 
 
 def _percentiles_ms(wait_s) -> dict:
@@ -261,6 +311,10 @@ def serve_rag_open_loop_generate(
         paged_kernel: Optional[bool] = None,
         retain_blocks: Optional[int] = None,
         host_blocks: Optional[int] = None,
+        router: Optional[RouterConfig] = None,
+        n_replicas: Optional[int] = None,
+        affinity: Optional[bool] = None,
+        max_imbalance: Optional[int] = None,
         arch: str = "phi4-mini-3.8b", path: str = "int_exact",
         seed: int = 0, pipe: Optional[RagPipeline] = None) -> dict:
     """Open-loop retrieval+generation through the shared streaming front door.
@@ -287,6 +341,13 @@ def serve_rag_open_loop_generate(
     the tiered prefix cache — published context prefixes outlive their
     publisher (device LRU pins, host-RAM spill) — adding retention and
     per-tier hit-rate counters to the report.
+
+    `router=RouterConfig(...)` (or the `n_replicas`/`affinity`/
+    `max_imbalance` sugar) serves decode from an `EngineRouter` fleet of
+    replicated engines with prefix-affinity placement instead of a
+    single engine; the report then adds `n_replicas`,
+    `per_replica_submits`, and the affinity hit/miss/spill counters,
+    with occupancy and pool counters aggregated over all replicas.
     """
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
@@ -305,16 +366,23 @@ def serve_rag_open_loop_generate(
     padded_search = _padded_search(pipe, max_batch)
     sched = AsyncBatchScheduler(padded_search, max_batch=max_batch,
                                 max_wait_ms=max_wait_ms, start=True)
-    engine = pipe.decode_engine(config, max_new_tokens=max_new_tokens,
-                                start=True)
+    engine = pipe.decode_engine(config, router=router, n_replicas=n_replicas,
+                                affinity=affinity,
+                                max_imbalance=max_imbalance,
+                                max_new_tokens=max_new_tokens, start=True)
+    fleet = isinstance(engine, EngineRouter)
+    replicas = engine.engines if fleet else [engine]
 
     # compile every serving shape off-clock: the (max_batch, dim) search,
     # the (len<=max_prompt_len,) prefill, and the (n_slots, 1) decode step
+    # — per replica, since each engine holds its own jitted step. Warm-up
+    # submits go straight to the engines so router counters stay clean.
     ids_w, _ = padded_search([queries[0]], k)
     warm_prompt = pipe.encode_prompt(
         queries[0], [pipe.doc_texts[i] for i in ids_w[0] if i >= 0])
-    engine.submit(warm_prompt, max_new_tokens=max_new_tokens).result(
-        timeout=120.0)
+    for rep in replicas:
+        rep.submit(warm_prompt, max_new_tokens=max_new_tokens).result(
+            timeout=120.0)
     warm_stats = engine.stats()  # exclude warm-up from occupancy reporting
 
     gens: list = []
@@ -357,14 +425,20 @@ def serve_rag_open_loop_generate(
               for g in done]
     per_tok_ms = [1e3 * (g.wait_s - g.first_token_s) / (len(g.tokens) - 1)
                   for g in done if len(g.tokens) > 1]
-    # occupancy/step counters as deltas past the warm-up request
+    # occupancy/step counters as deltas past the warm-up requests,
+    # summed over replicas in fleet mode (the router nests per-replica
+    # engine stats under "replicas")
     est = engine.stats()
-    occ_hist = {
-        occ: n for occ in est["occupancy_hist"]
-        if (n := est["occupancy_hist"][occ]
-            - warm_stats["occupancy_hist"].get(occ, 0)) > 0
-    }
-    n_steps = est["n_decode_steps"] - warm_stats["n_decode_steps"]
+    pairs = (list(zip(est["replicas"], warm_stats["replicas"]))
+             if fleet else [(est, warm_stats)])
+    occ_hist: dict = {}
+    n_steps = 0
+    for e, w in pairs:
+        for occ, n_occ in e["occupancy_hist"].items():
+            d = n_occ - w["occupancy_hist"].get(occ, 0)
+            if d > 0:
+                occ_hist[occ] = occ_hist.get(occ, 0) + d
+        n_steps += e["n_decode_steps"] - w["n_decode_steps"]
     mean_occ = (sum(occ * n for occ, n in occ_hist.items()) / n_steps
                 if n_steps else 0.0)
     n_tokens = sum(len(g.tokens) for g in done)
@@ -380,7 +454,7 @@ def serve_rag_open_loop_generate(
         "max_batch": max_batch,
         "max_wait_ms": max_wait_ms,
         "max_new_tokens": max_new_tokens,
-        "n_slots": engine.n_slots,
+        "n_slots": replicas[0].n_slots,
         "n_tokens": n_tokens,
         "decode_tok_per_s": n_tokens / wall,
         "mean_retrieval_batch": sched.stats()["mean_batch"],
@@ -392,18 +466,29 @@ def serve_rag_open_loop_generate(
         "per_token_ms_mean": float(np.mean(per_tok_ms)) if per_tok_ms else 0.0,
         "per_token_ms_p95": float(np.percentile(per_tok_ms, 95))
         if per_tok_ms else 0.0,
-        "paged": engine.paged,
+        "paged": replicas[0].paged,
     }
-    if engine.paged:
-        out["n_backpressure"] = est["n_backpressure"]
-        out["n_skip_ahead"] = est.get("n_skip_ahead", 0)
-        out["n_prefill_chunks"] = est.get("n_prefill_chunks", 0)
-        out["prefix_sharing"] = est.get("prefix_sharing", False)
-        out["paged_kernel"] = est.get("paged_kernel")
-        out["retain_blocks"] = engine.retain_blocks
-        out["host_blocks"] = engine.host_blocks
-        if "pool" in est:
-            out["pool"] = est["pool"]
+    if fleet:
+        out["n_replicas"] = engine.n_replicas
+        out["affinity"] = est["affinity"]
+        out["per_replica_submits"] = est["per_replica_submits"]
+        for key_ in ("n_affinity_hits", "n_affinity_misses",
+                     "n_affinity_spills", "affinity_hit_rate"):
+            out[key_] = est[key_]
+    if replicas[0].paged:
+        eng_stats = [e for e, _ in pairs]
+        out["n_backpressure"] = sum(e["n_backpressure"] for e in eng_stats)
+        out["n_skip_ahead"] = sum(e.get("n_skip_ahead", 0)
+                                  for e in eng_stats)
+        out["n_prefill_chunks"] = sum(e.get("n_prefill_chunks", 0)
+                                      for e in eng_stats)
+        out["prefix_sharing"] = eng_stats[0].get("prefix_sharing", False)
+        out["paged_kernel"] = eng_stats[0].get("paged_kernel")
+        out["retain_blocks"] = replicas[0].retain_blocks
+        out["host_blocks"] = replicas[0].host_blocks
+        pools = [e["pool"] for e in eng_stats if "pool" in e]
+        if pools:
+            out["pool"] = _sum_pools(pools)
     out.update(_percentiles_ms(e2e_s))
     return out
 
@@ -468,6 +553,24 @@ def main() -> None:
                     help="--paged: host-RAM tier budget (pool blocks) for "
                          "prefixes evicted from the device retention LRU "
                          "(requires --retain-blocks)")
+    ap.add_argument("--n-replicas", type=int, default=None,
+                    help="--generate: serve decode from an EngineRouter "
+                         "fleet of this many replicated engines (default: "
+                         "one engine, no router)")
+    ap.add_argument("--affinity", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="--n-replicas: prefix-affinity placement — route "
+                         "requests sharing a retrieved-context prefix to "
+                         "the replica already holding it (default: on; "
+                         "--no-affinity load-balances by least load only)")
+    ap.add_argument("--max-imbalance", type=int, default=None,
+                    help="--n-replicas: spill an affinity-routed request "
+                         "to the least-loaded replica once its holder is "
+                         "this many requests deeper (default: n_slots)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="--rag: also emit the report dict as JSON to FILE "
+                         "('-' = stdout), alongside the human-readable "
+                         "report")
     args = ap.parse_args()
     if args.rag and args.open_loop and args.generate:
         config = EngineConfig(
@@ -485,6 +588,8 @@ def main() -> None:
             offered_qps=args.offered_qps, n_queries=args.rag_queries,
             k=args.k, max_new_tokens=args.new_tokens,
             config=config,
+            n_replicas=args.n_replicas, affinity=args.affinity,
+            max_imbalance=args.max_imbalance,
             arch=args.arch or "phi4-mini-3.8b")
         print(f"open-loop generate: offered {out['offered_qps']:.0f} q/s, "
               f"finished {out['n_finished']}/{out['n_queries']} requests "
@@ -498,6 +603,15 @@ def main() -> None:
         print(f"slots: mean occupancy {out['mean_slot_occupancy']:.2f}"
               f"/{out['n_slots']}, hist {out['occupancy_hist']}, "
               f"retrieval mean batch {out['mean_retrieval_batch']:.1f}")
+        if "n_replicas" in out:
+            print(f"fleet: {out['n_replicas']} replicas, affinity "
+                  f"{'on' if out['affinity'] else 'off'}, per-replica "
+                  f"submits {out['per_replica_submits']}")
+            if out["affinity"]:
+                print(f"affinity: hit rate {out['affinity_hit_rate']:.2f} "
+                      f"({out['n_affinity_hits']} hits / "
+                      f"{out['n_affinity_misses']} misses / "
+                      f"{out['n_affinity_spills']} spills)")
         if out["paged"]:
             pool = out.get("pool", {})
             print(f"paged: {out['n_prefill_chunks']} prefill chunks, "
@@ -524,6 +638,8 @@ def main() -> None:
                       f"({pool.get('host_bytes', 0)} bytes) resident, "
                       f"{pool.get('n_host_hits', 0)} swap-ins, host hit "
                       f"rate {pool.get('host_hit_rate', 0.0):.2f}")
+        if args.json:
+            _emit_json(out, args.json)
         return
     if args.rag and args.open_loop:
         out = serve_rag_open_loop(
@@ -539,6 +655,8 @@ def main() -> None:
         print(f"batches: {out['n_flushes']} flushes, mean size "
               f"{out['mean_batch']:.1f}, hist {out['batch_hist']}")
         print(f"per-tenant p95 ms: {out['per_tenant_p95_ms']}")
+        if args.json:
+            _emit_json(out, args.json)
         return
     if args.rag:
         out = serve_rag(n_docs=args.rag_docs, n_shards=args.n_shards,
@@ -546,6 +664,8 @@ def main() -> None:
         print(f"served {args.rag_queries} queries in {out['wall_s']:.3f}s "
               f"({out['qps']:.0f} q/s, {out['flushes']} flushes, "
               f"self-retrieval {out['self_retrieval']:.2f})")
+        if args.json:
+            _emit_json(out, args.json)
         return
     if not args.arch:
         ap.error("--arch is required unless --rag is set")

@@ -1,11 +1,46 @@
-"""repro.serving — generation engines (static + continuous batching),
-paged KV-cache memory subsystem, async batch scheduler, end-to-end RAG."""
+"""repro.serving — the serving stack, from front door to device pools.
+
+Architecture overview (request path, top to bottom):
+
+* **Scheduler** — `async_scheduler.AsyncBatchScheduler`: the streaming
+  retrieval front door. Batches queries on a dual trigger (max_batch OR
+  max_wait_ms) with weighted deficit-round-robin tenant fairness and
+  futures-style `AsyncTicket`s.
+* **Router** — `router.EngineRouter`: the fleet layer. N replicated
+  decode engines behind one `submit()`, least-loaded placement with
+  prefix-affinity (same-context-hash requests land on the replica that
+  already holds the prefix KV, bounded by an imbalance guard), fleet
+  `stats()` rollup and `clear_prefix_cache()` fan-out. Fleet shape
+  lives in `config.RouterConfig`.
+* **Engine** — `continuous_batching.ContinuousBatchingEngine`: one
+  replica. An `n_slots`-wide decode batch over a single jitted step
+  with iteration-level admission/retirement, chunked prefill
+  interleaved with decode, and token-streaming `GenerationTicket`s.
+  Replica shape lives in `config.EngineConfig` (the per-knob spelling
+  is a deprecation shim through `config.resolve_config`). The simpler
+  per-query `engine.GenerationEngine` remains as the parity oracle.
+* **Paged pool** — `paged_cache.PagedCacheManager`: the KV memory
+  subsystem under the slots. Refcounted content-addressed block
+  allocator with worst-case reservation + `OutOfBlocks` backpressure,
+  copy-on-write prefix sharing, and the tiered prefix cache (device
+  LRU retention + host-RAM offload).
+* **Kernels** — `repro.kernels.paged_attend` (dispatched via
+  `models/attention.paged_attend`): the fused Pallas paged-attention
+  decode step that walks the block table in-kernel; the dense-window
+  gather path is kept as its parity oracle.
+
+`rag_pipeline.RagPipeline` ties retrieval to generation end-to-end
+(scheduler-batched search chaining into engine/router decode slots via
+`query_stream(generate=True)`), and `launch/serve.py` drives the whole
+stack under open-loop Poisson traffic. Retrieval itself scales out
+separately in `repro.core.sharded_index` (device-mesh sharded scoring).
+"""
 from .async_scheduler import (  # noqa: F401
     AsyncBatchScheduler,
     AsyncTicket,
     SchedulerError,
 )
-from .config import EngineConfig  # noqa: F401
+from .config import EngineConfig, RouterConfig  # noqa: F401
 from .continuous_batching import (  # noqa: F401
     ContinuousBatchingEngine,
     GenerationTicket,
@@ -13,3 +48,4 @@ from .continuous_batching import (  # noqa: F401
 from .paged_cache import OutOfBlocks, PagedCacheManager  # noqa: F401
 from .engine import BatchScheduler, BatchTicket, GenerationEngine  # noqa: F401
 from .rag_pipeline import HashEmbedder, RagPipeline, RagResult  # noqa: F401
+from .router import EngineRouter  # noqa: F401

@@ -133,6 +133,85 @@ class EngineConfig:
         return dataclasses.replace(self, **changes)
 
 
+@dataclass(frozen=True)
+class RouterConfig:
+    """Fleet shape-and-policy knobs of an `EngineRouter`.
+
+    One `RouterConfig` describes the layer ABOVE the engines: how many
+    replicated `ContinuousBatchingEngine` instances to build (each from
+    the same shared `EngineConfig`) and how requests are placed across
+    them. It deliberately carries no engine knobs — replica shape lives
+    in `EngineConfig`, fleet shape lives here.
+
+    n_replicas: engine replicas in the fleet (>= 1).
+    affinity: prefix-affinity placement — route a request whose prefix
+        content hash is already held by some replica's prefix cache
+        (live pool, retained tier, host tier, or mid-publication) to
+        that replica, so the CoW-sharing/retention hit-rate survives
+        horizontal scale-out. Off: pure least-loaded placement.
+    max_imbalance: bounded imbalance guard for affinity placement — an
+        affinity hit is honoured only while the holding replica's load
+        (queued + active requests) exceeds the least-loaded replica's by
+        at most this many requests; past that the request SPILLS to the
+        least-loaded replica (which re-publishes the prefix, updating
+        the fleet's affinity map), so one hot prefix can never starve
+        the rest of the fleet. None resolves to the engine's `n_slots`
+        (one full decode-batch width of headroom); 0 spills on any
+        imbalance.
+    """
+
+    n_replicas: int = 1
+    affinity: bool = True
+    max_imbalance: Optional[int] = None
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        """Raise ValueError on incoherent knob combinations."""
+        if self.n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if self.max_imbalance is not None and self.max_imbalance < 0:
+            raise ValueError("max_imbalance must be >= 0")
+        if not self.affinity and self.max_imbalance is not None:
+            raise ValueError(
+                "max_imbalance is an affinity knob; it requires "
+                "affinity=True"
+            )
+
+    def replace(self, **changes) -> "RouterConfig":
+        """A copy with `changes` applied (re-validated on construction)."""
+        return dataclasses.replace(self, **changes)
+
+
+def resolve_router_config(
+    router, legacy: dict, *, stacklevel: int = 3
+) -> RouterConfig:
+    """`resolve_config`'s twin for the fleet layer.
+
+    `legacy` maps RouterConfig field name -> value-or-None as received
+    by a per-knob caller (`n_replicas=`, `affinity=`, ...). Passing both
+    a RouterConfig and any non-None knob is an error; knobs alone build
+    the equivalent config (no DeprecationWarning — the per-knob fleet
+    spelling is supported sugar, e.g. `decode_engine(n_replicas=4)`);
+    neither yields the single-replica default.
+    """
+    set_knobs = {k: v for k, v in legacy.items() if v is not None}
+    if router is not None:
+        if set_knobs:
+            raise ValueError(
+                "pass router=RouterConfig(...) or per-knob fleet "
+                "arguments, not both; got router plus "
+                + ", ".join(sorted(set_knobs))
+            )
+        if not isinstance(router, RouterConfig):
+            raise TypeError(
+                f"router must be a RouterConfig, got {type(router).__name__}"
+            )
+        return router
+    return RouterConfig(**set_knobs)
+
+
 def resolve_config(config, legacy: dict, *, stacklevel: int = 3) -> EngineConfig:
     """The one shim every deprecated per-knob signature funnels through.
 

@@ -286,14 +286,17 @@ class ContinuousBatchingEngine:
     host_blocks: host-RAM tier budget (pool blocks): prefixes evicted
         from the device tier park their KV in host numpy buffers and
         swap back in on a later hit. Requires retain_blocks.
+    replica_id: this engine's position in an `EngineRouter` fleet (see
+        serving/router.py); None outside a fleet. Identity only — it
+        never changes engine behaviour or the stats() schema.
     clock: monotonic-seconds callable, injectable for deterministic tests.
     start: spawn the background decode loop. With start=False the engine
         is in *manual mode*: call `step()` yourself (or let
         `ticket.result()` / `token_stream()` drive it).
 
-    `clock`, `start`, `eos_id`, `temperature` and `key` are runtime
-    parameters, not engine shape — they stay keywords and are NOT
-    deprecated.
+    `clock`, `start`, `eos_id`, `temperature`, `key` and `replica_id`
+    are runtime parameters, not engine shape — they stay keywords and
+    are NOT deprecated.
 
     Fixed-slot prefill compiles once per distinct prompt length (b=1
     shapes); paged mode compiles a BOUNDED set of step shapes regardless
@@ -325,6 +328,7 @@ class ContinuousBatchingEngine:
         paged_kernel: Optional[bool] = None,
         retain_blocks: Optional[int] = None,
         host_blocks: Optional[int] = None,
+        replica_id: Optional[int] = None,
         clock: Callable[[], float] = time.monotonic,
         start: bool = False,
     ):
@@ -350,6 +354,7 @@ class ContinuousBatchingEngine:
         host_blocks = config.host_blocks or 0
         self.model = model
         self.params = params
+        self.replica_id = replica_id
         self.n_slots = n_slots
         self.cache_len = cache_len
         self.eos_id = eos_id
@@ -664,21 +669,54 @@ class ContinuousBatchingEngine:
                 f"request needs {prompt.size} prompt + {max_new_tokens} new "
                 f"tokens but cache_len is {self.cache_len}")
         t = GenerationTicket(self, prompt, max_new_tokens, tenant)
-        if self.prefix_sharing:
-            span = int(prompt.size) - 1
-            if prefix_len is not None:
-                span = min(int(prefix_len), span)
-            if span >= self.block_size:
-                # content-addressed: the key IS the prefix tokens, so two
-                # prompts share iff their shareable spans are bit-identical
-                t.prefix_key = hashlib.sha1(prompt[:span].tobytes()).hexdigest()
-                t.prefix_span = span
+        t.prefix_key, t.prefix_span = self.compute_prefix_key(
+            prompt, prefix_len)
         with self._cv:
             if self._closed:
                 raise SchedulerError("engine is closed")
             self._waiting.append(t)
             self._cv.notify_all()
         return t
+
+    def compute_prefix_key(
+        self, prompt: np.ndarray, prefix_len: Optional[int] = None
+    ) -> tuple[Optional[str], int]:
+        """(content key, span) a `submit(prompt, prefix_len=...)` would
+        carry, or (None, 0) when the span is sub-block or sharing is off.
+
+        The single source of the key derivation, shared with
+        `EngineRouter` so placement hashes exactly what admission will:
+        the shareable span is the whole prompt minus the final token
+        (always recomputed for logits), clipped to `prefix_len`, and the
+        key is the SHA-1 of those token bytes — content-addressed, so
+        two prompts share iff their shareable spans are bit-identical.
+        """
+        if not self.prefix_sharing:
+            return None, 0
+        prompt = np.asarray(prompt, np.int32)
+        span = int(prompt.size) - 1
+        if prefix_len is not None:
+            span = min(int(prefix_len), span)
+        if span < self.block_size:
+            return None, 0
+        return hashlib.sha1(prompt[:span].tobytes()).hexdigest(), span
+
+    def holds_prefix(self, key: str) -> bool:
+        """True when this engine already holds (or is about to hold)
+        prefix `key`: published in the pool registry, pinned in the
+        retained tier, parked in the host tier, mid-publication in an
+        admitted slot, or carried by a queued/active ticket. The
+        external-placement hook `EngineRouter` routes on — a request
+        sent here attaches (or waits to attach) instead of re-prefilling.
+        """
+        if not self.prefix_sharing:
+            return False
+        if self._pcm.has_prefix_any(key) or key in self._publishing:
+            return True
+        with self._cv:
+            return any(
+                t is not None and t.prefix_key == key
+                for t in itertools.chain(self._slots, self._waiting))
 
     def pending(self) -> int:
         """Requests waiting for a slot (admitted ones count as active)."""
@@ -689,6 +727,13 @@ class ContinuousBatchingEngine:
         """Occupied decode slots (decoding or mid-prefill)."""
         with self._cv:
             return sum(t is not None for t in self._slots)
+
+    def load(self) -> int:
+        """Queued + active requests, read atomically — the placement
+        signal `EngineRouter` balances on."""
+        with self._cv:
+            return len(self._waiting) + sum(
+                t is not None for t in self._slots)
 
     def stats(self) -> dict:
         """Engine counters. Full schema:

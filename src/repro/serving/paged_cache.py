@@ -275,6 +275,17 @@ class PagedCacheManager:
     def has_prefix(self, key) -> bool:
         return key in self._prefix_index
 
+    def has_prefix_any(self, key) -> bool:
+        """True when `key` is resident in ANY tier: the live registry
+        (attachable right now), the device-retained LRU (a registry
+        subset, checked for symmetry), or the host-RAM tier (swaps back
+        in on reservation). Membership only — does not touch LRU order.
+        Three plain `in` checks, so fleet placement (`EngineRouter`)
+        can call this from another thread without the step lock."""
+        return (key in self._prefix_index
+                or key in self._retained
+                or key in self._host_index)
+
     def register_prefix(self, key, seq, n_tokens: int) -> bool:
         """Publish the first `n_tokens` positions of `seq` under `key`.
 

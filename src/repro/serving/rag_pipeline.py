@@ -35,6 +35,12 @@ queries that retrieved the same documents onto the SAME physical KV
 blocks, copy-on-write protecting their divergent answers
 (`prefix_sharing=None` resolves to "on whenever the model's KV is
 paged"; pass False to opt out).
+
+Fleet serving (PR 8): `decode_engine(n_replicas=N)` (or
+`router=RouterConfig(...)`) returns an `EngineRouter` over N replicated
+engines instead of one — `query_stream`/`generate_stream` accept the
+same knobs, and prefix-affinity placement keeps the sharing hit-rate
+intact across the fleet (see serving/router.py).
 """
 from __future__ import annotations
 
@@ -53,9 +59,11 @@ from repro.models import supports_paged_kv
 from repro.core.simulator import simulate_query
 from repro.data.tokenizer import ByteTokenizer
 from .async_scheduler import DEFAULT_TENANT, AsyncBatchScheduler, SchedulerError
-from .config import EngineConfig, resolve_config
+from .config import (EngineConfig, RouterConfig, resolve_config,
+                     resolve_router_config)
 from .continuous_batching import ContinuousBatchingEngine, GenerationTicket
 from .engine import GenerationEngine
+from .router import EngineRouter
 
 
 _FNV_PRIME = np.uint32(16777619)
@@ -193,6 +201,10 @@ class RagPipeline:
         )
 
     def decode_engine(self, config: Optional[EngineConfig] = None, *,
+                      router: Optional[RouterConfig] = None,
+                      n_replicas: Optional[int] = None,
+                      affinity: Optional[bool] = None,
+                      max_imbalance: Optional[int] = None,
                       n_slots: Optional[int] = None,
                       cache_len: Optional[int] = None,
                       max_new_tokens: int = 32,
@@ -205,8 +217,9 @@ class RagPipeline:
                       paged_kernel: Optional[bool] = None,
                       retain_blocks: Optional[int] = None,
                       host_blocks: Optional[int] = None,
-                      start: bool = True) -> ContinuousBatchingEngine:
-        """A ContinuousBatchingEngine over this pipeline's model.
+                      start: bool = True):
+        """A ContinuousBatchingEngine — or a routed fleet — over this
+        pipeline's model.
 
         The generation twin of `scheduler()`: requests join and leave the
         `n_slots`-wide decode batch at token boundaries, so streaming
@@ -217,6 +230,14 @@ class RagPipeline:
         see serving/config.py for the migration path). `max_new_tokens`,
         `temperature`, and `start` are pipeline-runtime parameters, not
         engine shape, and stay ordinary keywords.
+
+        Fleet mode: passing `router=RouterConfig(...)` or any fleet knob
+        (`n_replicas`, `affinity`, `max_imbalance` — supported sugar,
+        no deprecation) returns an `EngineRouter` over that many
+        replicas of the SAME resolved config, with prefix-affinity
+        placement; its submit/stats/close surface matches the engine's,
+        so `query_stream`/`generate_stream` work over either. With no
+        fleet knob the single engine comes back exactly as before.
 
         Two `EngineConfig` fields resolve pipeline-side: `cache_len=None`
         becomes `max_prompt_len + max_new_tokens` (every augmented
@@ -230,6 +251,12 @@ class RagPipeline:
         if self.engine is None:
             raise TypeError("decode_engine requires a model "
                             "(RagPipeline(..., model=, params=))")
+        fleet = None
+        if (router is not None or n_replicas is not None
+                or affinity is not None or max_imbalance is not None):
+            fleet = resolve_router_config(router, dict(
+                n_replicas=n_replicas, affinity=affinity,
+                max_imbalance=max_imbalance))
         config = resolve_config(config, dict(
             n_slots=n_slots, cache_len=cache_len, paged=paged,
             block_size=block_size, n_blocks=n_blocks,
@@ -246,9 +273,15 @@ class RagPipeline:
             config = config.replace(**resolved)
         eos = self.tokenizer.eos_id
         vocab = self.engine.model.cfg.vocab_size
+        eos_id = eos if eos < vocab else None
+        if fleet is not None:
+            return EngineRouter(
+                self.engine.model, self.engine.params, config, fleet,
+                eos_id=eos_id, temperature=temperature,
+                clock=self._clock, start=start)
         return ContinuousBatchingEngine(
             self.engine.model, self.engine.params, config,
-            eos_id=eos if eos < vocab else None,
+            eos_id=eos_id,
             temperature=temperature,
             clock=self._clock,
             start=start,
@@ -285,6 +318,9 @@ class RagPipeline:
                      generate: bool = False, max_new_tokens: int = 32,
                      temperature: float = 0.0,
                      config: Optional[EngineConfig] = None,
+                     router: Optional[RouterConfig] = None,
+                     n_replicas: Optional[int] = None,
+                     affinity: Optional[bool] = None,
                      n_slots: Optional[int] = None,
                      paged: Optional[bool] = None,
                      block_size: Optional[int] = None,
@@ -322,7 +358,10 @@ class RagPipeline:
         `prefix_sharing` forces the engine knob (None: on iff the
         model's KV is paged). Engine shape knobs are best passed as
         `config=EngineConfig(...)`; the per-knob keywords are the usual
-        deprecated shim.
+        deprecated shim. `router=`/`n_replicas=`/`affinity=` put an
+        `EngineRouter` fleet behind the stream instead of one engine —
+        same-context queries then land on the replica already holding
+        their prefix KV (see serving/router.py).
         """
         import queue as _queue
 
@@ -339,7 +378,8 @@ class RagPipeline:
             # engine first: if its cache-layout probe raises, no thread
             # has started yet; the finally closes whatever did start
             engine = self.decode_engine(
-                config, max_new_tokens=max_new_tokens,
+                config, router=router, n_replicas=n_replicas,
+                affinity=affinity, max_new_tokens=max_new_tokens,
                 temperature=temperature,
                 start=True) if generate else None
             sched = self.scheduler(max_batch=max_batch, key=key,
@@ -414,6 +454,9 @@ class RagPipeline:
     def generate_stream(self, requests, max_new_tokens: int = 32,
                         temperature: float = 0.0,
                         config: Optional[EngineConfig] = None,
+                        router: Optional[RouterConfig] = None,
+                        n_replicas: Optional[int] = None,
+                        affinity: Optional[bool] = None,
                         n_slots: Optional[int] = None,
                         cache_len: Optional[int] = None,
                         paged: Optional[bool] = None,
@@ -432,7 +475,8 @@ class RagPipeline:
         Use `ticket.token_stream()` from another thread for live
         per-token consumption. Engine shape knobs are best passed as
         `config=EngineConfig(...)`; the per-knob keywords are the usual
-        deprecated shim."""
+        deprecated shim. `router=`/`n_replicas=`/`affinity=` run the
+        stream over an `EngineRouter` fleet instead of one engine."""
         import queue as _queue
 
         if self.engine is None:
@@ -453,8 +497,9 @@ class RagPipeline:
                 f"max_new_tokens ({max_new_tokens}) to leave room for "
                 "the prompt")
         engine = self.decode_engine(
-            config, max_new_tokens=max_new_tokens, temperature=temperature,
-            start=True)
+            config, router=router, n_replicas=n_replicas,
+            affinity=affinity, max_new_tokens=max_new_tokens,
+            temperature=temperature, start=True)
         vocab = self.engine.model.cfg.vocab_size
 
         def submit(tenant, text):

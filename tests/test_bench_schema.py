@@ -26,6 +26,7 @@ EXPECTED = {
     "BENCH_paged_cache.json",
     "BENCH_prefix_cache.json",
     "BENCH_prefix_sharing.json",
+    "BENCH_router.json",
 }
 
 
@@ -84,6 +85,25 @@ def test_paged_cache_bench_has_kernel_vs_gather_column():
         assert len(cell) == 1, f"{workload}: missing paged_kernel row"
         assert cell[0]["parity"] is True
         assert cell[0]["tok_per_s"] > 0
+
+
+def test_router_bench_has_affinity_vs_random_cells():
+    """The router artifact must carry all three equal-total-HBM cells,
+    every cell must have passed the greedy token-parity gate, and the
+    committed numbers must show the headline claims: the affinity fleet
+    out-runs the single engine and out-hits random routing."""
+    data = json.loads((REPO_ROOT / "BENCH_router.json").read_text())
+    rows = {r["cell"]: r for r in data["rows"]}
+    assert {"single", "random", "affinity"} <= set(rows)
+    for r in rows.values():
+        assert r["parity"] is True
+        assert r["tok_per_s"] > 0
+    assert rows["affinity"]["n_replicas"] == rows["random"]["n_replicas"] > 1
+    assert rows["single"]["n_replicas"] == 1
+    totals = {r["total_pool_blocks"] for r in rows.values()}
+    assert len(totals) == 1, f"cells differ in total HBM: {totals}"
+    assert rows["affinity"]["tok_per_s"] > rows["single"]["tok_per_s"]
+    assert rows["affinity"]["hit_rate"] > rows["random"]["hit_rate"]
 
 
 @pytest.mark.parametrize("path", _bench_jsons(), ids=lambda p: p.name)

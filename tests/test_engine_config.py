@@ -19,6 +19,7 @@ from repro.serving import (
     ContinuousBatchingEngine,
     EngineConfig,
     PagedCacheManager,
+    RouterConfig,
 )
 from repro.serving.config import resolve_config
 
@@ -162,6 +163,55 @@ def test_replace_revalidates():
     assert cfg.replace(retain_blocks=4).retain_blocks == 4
     with pytest.raises(ValueError, match="paged=True"):
         cfg.replace(paged=False)
+
+
+def test_replace_revalidates_edge_cases():
+    """replace() must re-run the same coherence checks as construction,
+    and never mutate the original frozen instance."""
+    cfg = EngineConfig(paged=True, block_size=8, retain_blocks=4,
+                       host_blocks=4)
+    # dropping the device tier while the host tier stays set is incoherent
+    with pytest.raises(ValueError, match="retain_blocks"):
+        cfg.replace(retain_blocks=None)
+    # un-paging while paged-only knobs remain set is incoherent
+    with pytest.raises(ValueError, match="paged=True"):
+        cfg.replace(paged=False)
+    # plain-field validation re-runs too
+    with pytest.raises(ValueError, match="n_slots"):
+        cfg.replace(n_slots=0)
+    with pytest.raises(ValueError, match="cache_len"):
+        cfg.replace(cache_len=1)
+    # a valid replace returns a NEW instance; the original is untouched
+    out = cfg.replace(host_blocks=None)
+    assert out.host_blocks is None and out is not cfg
+    assert cfg.host_blocks == 4
+    # chained replaces compose (each hop is itself valid)
+    back = out.replace(host_blocks=2).replace(host_blocks=4)
+    assert back == cfg
+
+
+def test_router_config_validation_matrix():
+    assert RouterConfig() == RouterConfig(n_replicas=1, affinity=True,
+                                          max_imbalance=None)
+    with pytest.raises(ValueError, match="n_replicas"):
+        RouterConfig(n_replicas=0)
+    with pytest.raises(ValueError, match="n_replicas"):
+        RouterConfig(n_replicas=-2)
+    with pytest.raises(ValueError, match="max_imbalance"):
+        RouterConfig(n_replicas=2, max_imbalance=-1)
+    # max_imbalance is an affinity knob: setting it with affinity=False
+    # is incoherent, while affinity=False alone is fine
+    with pytest.raises(ValueError, match="affinity"):
+        RouterConfig(affinity=False, max_imbalance=2)
+    assert RouterConfig(n_replicas=2, affinity=False).affinity is False
+    assert RouterConfig(n_replicas=3, max_imbalance=0).max_imbalance == 0
+    # replace() re-validates, same contract as EngineConfig.replace()
+    rc = RouterConfig(n_replicas=2)
+    assert rc.replace(n_replicas=4).n_replicas == 4
+    with pytest.raises(ValueError, match="n_replicas"):
+        rc.replace(n_replicas=0)
+    with pytest.raises(ValueError, match="affinity"):
+        rc.replace(affinity=False, max_imbalance=1)
 
 
 # ------------------------------------------------------- stats schema drift

@@ -1,0 +1,339 @@
+"""EngineRouter (PR 8): prefix-affinity placement over replicated
+engines — least-loaded rotation, affinity grouping, the bounded
+imbalance spill (and the affinity map healing around it), keyless
+fallback, fan-out lifecycle, greedy routed-vs-single parity, config
+resolution at the router layer, and the stats() schema drift test
+(router scalars + all-numeric fleet rollup + per-replica dicts that
+match the engine schema exactly)."""
+
+import warnings
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (
+    ContinuousBatchingEngine,
+    EngineConfig,
+    EngineRouter,
+    RouterConfig,
+)
+from repro.serving.config import resolve_router_config
+
+
+# ------------------------------------------------------- script model (paged)
+class PagedScriptModel:
+    """+1-chain over a real block pool (redeclared to keep this module
+    import-independent, same as the other serving test files)."""
+
+    def __init__(self, vocab: int = 32):
+        self.cfg = SimpleNamespace(vocab_size=vocab)
+        self.vocab = vocab
+
+    def init_caches(self, batch, cache_len, prefix_len):
+        return {
+            "last": jnp.zeros((batch, 1), jnp.int32),
+            "length": jnp.full((batch,), prefix_len, jnp.int32),
+        }
+
+    def decode_step(self, params, caches, token):
+        nxt = (token[:, 0] + 1) % self.vocab
+        logits = jax.nn.one_hot(nxt, self.vocab, dtype=jnp.float32)
+        return logits, {"last": token, "length": caches["length"] + 1}
+
+    def init_paged_caches(self, n_blocks, block_size):
+        return jnp.zeros((n_blocks, block_size), jnp.int32)
+
+    def paged_step(self, params, pools, tables, lengths, tokens, n_valid):
+        b, t = tokens.shape
+        bs = pools.shape[1]
+        mb = tables.shape[1]
+        pos = lengths[:, None] + jnp.arange(t)[None, :]
+        valid = jnp.arange(t)[None, :] < n_valid[:, None]
+        blk = jnp.take_along_axis(
+            tables, jnp.clip(pos // bs, 0, mb - 1), axis=1)
+        blk = jnp.where(valid, blk, 0)
+        off = jnp.where(valid, pos % bs, 0)
+        pools = pools.at[blk, off].set(tokens)
+        last = lengths + jnp.maximum(n_valid, 1) - 1
+        lb = jnp.take_along_axis(tables, (last // bs)[:, None], axis=1)[:, 0]
+        last_tok = pools[lb, last % bs]
+        logits = jax.nn.one_hot(
+            (last_tok + 1) % self.vocab, self.vocab, dtype=jnp.float32)
+        return logits, pools
+
+    def init(self, key):
+        return {}
+
+
+CFG = EngineConfig(n_slots=2, cache_len=32, paged=True, block_size=4,
+                   n_blocks=17, prefill_chunk=4, prefix_sharing=True,
+                   retain_blocks=8)
+
+CTX_A = [1, 2, 3, 4]  # one full block: enough span for a prefix key
+CTX_B = [9, 8, 7, 6]
+
+
+def _router(**kw):
+    return EngineRouter(PagedScriptModel(), {}, CFG, **kw)
+
+
+def _reqs(contexts, suffixes):
+    """(prompt, prefix_len) pairs: shared 1-block context + unique tail."""
+    return [(np.asarray(ctx + [s, s + 1], np.int32), len(ctx))
+            for ctx, s in zip(contexts, suffixes)]
+
+
+# -------------------------------------------------------------- placement
+def test_no_affinity_round_robins_idle_fleet():
+    r = _router(n_replicas=2, affinity=False)
+    reqs = _reqs([CTX_A] * 4, [10, 11, 12, 13])
+    tickets = [r.submit(p, max_new_tokens=2, prefix_len=h) for p, h in reqs]
+    assert [t.replica for t in tickets] == [0, 1, 0, 1]
+    r.run_until_drained()
+    st = r.stats()
+    r.close()
+    assert st["n_submitted"] == 4
+    assert st["per_replica_submits"] == [2, 2]
+    # affinity off: the placement counters never move
+    assert (st["n_affinity_hits"] == st["n_affinity_misses"]
+            == st["n_affinity_spills"] == 0)
+    assert st["affinity_hit_rate"] == 0.0
+
+
+def test_affinity_groups_contexts_on_their_holders():
+    r = _router(n_replicas=2)
+    reqs = _reqs([CTX_A, CTX_B, CTX_A, CTX_B, CTX_A, CTX_B],
+                 [10, 11, 12, 13, 14, 15])
+    tickets = [r.submit(p, max_new_tokens=2, prefix_len=h) for p, h in reqs]
+    a_homes = {tickets[i].replica for i in (0, 2, 4)}
+    b_homes = {tickets[i].replica for i in (1, 3, 5)}
+    assert len(a_homes) == 1 and len(b_homes) == 1
+    assert a_homes != b_homes  # least-loaded spread the two contexts
+    r.run_until_drained()
+    st = r.stats()
+    r.close()
+    assert st["n_affinity_misses"] == 2  # one cold publish per context
+    assert st["n_affinity_hits"] == 4
+    assert st["affinity_hit_rate"] == pytest.approx(4 / 6)
+    # the pool economics follow the placement: one miss per context
+    assert st["fleet"]["n_prefix_misses"] == 2
+    assert st["fleet"]["n_prefix_hits"] == 4
+
+
+def test_affinity_survives_drain_via_retention():
+    """After the fleet drains, publishers are gone — only the retained
+    tier can keep the affinity map alive across waves."""
+    r = _router(n_replicas=2)
+    (p, h), = _reqs([CTX_A], [10])
+    first = r.submit(p, max_new_tokens=2, prefix_len=h)
+    r.run_until_drained()
+    (p2, h2), = _reqs([CTX_A], [20])
+    second = r.submit(p2, max_new_tokens=2, prefix_len=h2)
+    assert second.replica == first.replica
+    r.run_until_drained()
+    st = r.stats()
+    r.close()
+    assert st["n_affinity_hits"] == 1 and st["n_affinity_misses"] == 1
+
+
+def test_spill_on_imbalance_heals_the_affinity_map():
+    r = _router(n_replicas=2, max_imbalance=0)
+    reqs = _reqs([CTX_A] * 3, [10, 20, 30])
+    tickets = [r.submit(p, max_new_tokens=2, prefix_len=h) for p, h in reqs]
+    # 1st: cold miss -> r0. 2nd: r0 holds but is 1 request deeper than
+    # idle r1 with zero headroom -> SPILL to r1. 3rd: both now hold at
+    # equal load -> honoured on the min-load holder.
+    assert tickets[0].replica == 0
+    assert tickets[1].replica == 1
+    r.run_until_drained()
+    st = r.stats()
+    key, _ = r.engines[0].compute_prefix_key(reqs[0][0], reqs[0][1])
+    healed = [e.holds_prefix(key) for e in r.engines]
+    r.close()
+    assert st["n_affinity_spills"] == 1
+    assert st["n_affinity_misses"] == 1
+    assert st["n_affinity_hits"] == 1
+    assert healed == [True, True]  # the spill re-published on r1
+
+
+def test_keyless_requests_go_least_loaded():
+    r = _router(n_replicas=2)
+    # span < block_size: no prefix key, affinity counters must not move
+    tickets = [r.submit([5, 6], max_new_tokens=2) for _ in range(4)]
+    assert [t.replica for t in tickets] == [0, 1, 0, 1]
+    r.run_until_drained()
+    st = r.stats()
+    r.close()
+    assert (st["n_affinity_hits"] == st["n_affinity_misses"]
+            == st["n_affinity_spills"] == 0)
+    assert st["n_submitted"] == 4
+
+
+# ----------------------------------------------------------------- parity
+def test_routed_greedy_parity_vs_single_engine():
+    reqs = _reqs([CTX_A, CTX_B, CTX_A, CTX_B, CTX_A, CTX_A],
+                 [10, 11, 12, 13, 14, 15])
+    single = ContinuousBatchingEngine(PagedScriptModel(), {}, CFG)
+    refs = [single.submit(p, max_new_tokens=3, prefix_len=h)
+            for p, h in reqs]
+    single.run_until_drained()
+    refs = [np.asarray(t.result()) for t in refs]
+    single.close()
+    for fleet_kw in (dict(n_replicas=2),
+                     dict(n_replicas=3, affinity=False)):
+        r = _router(**fleet_kw)
+        tickets = [r.submit(p, max_new_tokens=3, prefix_len=h)
+                   for p, h in reqs]
+        r.run_until_drained()
+        outs = [np.asarray(t.result()) for t in tickets]
+        r.close()
+        for a, b in zip(refs, outs):
+            assert np.array_equal(a, b), fleet_kw
+
+
+def test_threaded_fleet_serves_and_closes():
+    r = _router(n_replicas=2, start=True)
+    with r:
+        tickets = [r.submit(p, max_new_tokens=2, prefix_len=h)
+                   for p, h in _reqs([CTX_A, CTX_B], [10, 11])]
+        outs = [np.asarray(t.result(timeout=30.0)) for t in tickets]
+    assert all(len(o) == 2 for o in outs)
+    r.close()  # idempotent
+
+
+# ---------------------------------------------------------- config surface
+def test_router_config_vs_sugar_build_identical_fleets():
+    rc = RouterConfig(n_replicas=2, max_imbalance=1)
+    via_config = _router(router=rc)
+    with warnings.catch_warnings():
+        # fleet sugar is supported, not deprecated (unlike engine knobs)
+        warnings.simplefilter("error", DeprecationWarning)
+        via_sugar = _router(n_replicas=2, max_imbalance=1)
+    for r in (via_config, via_sugar):
+        assert (r.n_replicas, r.affinity, r.max_imbalance) == (2, True, 1)
+        assert len(r.engines) == 2
+        assert all(e.config == CFG for e in r.engines)
+        r.close()
+
+
+def test_router_plus_knobs_rejected_and_imbalance_default():
+    with pytest.raises(ValueError, match="not both"):
+        _router(router=RouterConfig(n_replicas=2), n_replicas=2)
+    with pytest.raises(TypeError, match="RouterConfig"):
+        _router(router={"n_replicas": 2})
+    r = _router(n_replicas=2)
+    assert r.max_imbalance == CFG.n_slots  # None -> one batch of headroom
+    r.close()
+
+
+def test_replica_ids_and_shared_shape():
+    r = _router(n_replicas=3)
+    assert [e.replica_id for e in r.engines] == [0, 1, 2]
+    assert r.cache_len == r.engines[0].cache_len
+    r.close()
+
+
+def test_clear_prefix_cache_fans_out():
+    r = _router(n_replicas=2, affinity=False)
+    reqs = _reqs([CTX_A, CTX_B], [10, 11])
+    for p, h in reqs:
+        r.submit(p, max_new_tokens=2, prefix_len=h)
+    r.run_until_drained()
+    key, _ = r.engines[0].compute_prefix_key(reqs[0][0], reqs[0][1])
+    assert any(e.holds_prefix(key) for e in r.engines)
+    assert r.clear_prefix_cache() > 0
+    assert not any(e.holds_prefix(key) for e in r.engines)
+    r.close()
+
+
+# ------------------------------------------------------- stats schema drift
+def _documented_keys(doc: str) -> set:
+    import re
+
+    return set(re.findall(r"`(\w+)`", doc))
+
+
+def test_router_stats_schema_matches_docstring():
+    r = _router(n_replicas=2)
+    for p, h in _reqs([CTX_A, CTX_A, CTX_B], [10, 11, 12]):
+        r.submit(p, max_new_tokens=2, prefix_len=h)
+    r.run_until_drained()
+    st = r.stats()
+    r.close()
+    documented = _documented_keys(EngineRouter.stats.__doc__)
+    assert documented
+    emitted = set(st) | set(st["fleet"])
+    missing = {k for k in documented if k not in emitted}
+    assert not missing, f"documented keys missing from stats(): {missing}"
+    # router scalars are numbers; affinity/per_replica_submits/fleet/
+    # replicas are the documented non-scalar shapes
+    for key in ("n_replicas", "max_imbalance", "n_submitted",
+                "n_affinity_hits", "n_affinity_misses",
+                "n_affinity_spills", "affinity_hit_rate"):
+        assert isinstance(st[key], (int, float)), key
+    assert isinstance(st["affinity"], bool)
+    assert isinstance(st["per_replica_submits"], list)
+    assert st["affinity_hit_rate"] == pytest.approx(
+        st["n_affinity_hits"]
+        / (st["n_affinity_hits"] + st["n_affinity_misses"]
+           + st["n_affinity_spills"]))
+
+
+def test_fleet_rollup_is_all_numeric_and_consistent():
+    r = _router(n_replicas=2)
+    for p, h in _reqs([CTX_A, CTX_B, CTX_A], [10, 11, 12]):
+        r.submit(p, max_new_tokens=2, prefix_len=h)
+    r.run_until_drained()
+    st = r.stats()
+    r.close()
+    fleet = st["fleet"]
+    assert fleet  # the rollup is never empty
+    for key, v in fleet.items():
+        assert isinstance(v, (int, float)) and not isinstance(v, bool), key
+    # sums really sum, maxes really max
+    for key in ("n_tokens", "n_finished", "n_decode_steps", "n_prefills"):
+        assert fleet[key] == sum(rep[key] for rep in st["replicas"]), key
+    assert fleet["peak_active"] == max(
+        rep["peak_active"] for rep in st["replicas"])
+    assert fleet["n_prefix_hits"] == sum(
+        rep["pool"]["n_prefix_hits"] for rep in st["replicas"])
+
+
+def test_per_replica_stats_schema_matches_engine_schema_exactly():
+    """replica_id is identity only: a fleet replica's stats dict must be
+    key-for-key identical to a standalone engine's, pool included — the
+    drift tests on the engine schema then cover the fleet for free."""
+    single = ContinuousBatchingEngine(PagedScriptModel(), {}, CFG)
+    single.submit([1, 2, 3, 4, 5], max_new_tokens=2, prefix_len=4)
+    single.run_until_drained()
+    ref = single.stats()
+    single.close()
+    r = _router(n_replicas=2)
+    for p, h in _reqs([CTX_A, CTX_B], [10, 11]):
+        r.submit(p, max_new_tokens=2, prefix_len=h)
+    r.run_until_drained()
+    st = r.stats()
+    r.close()
+    assert len(st["replicas"]) == 2
+    for rep in st["replicas"]:
+        assert set(rep) == set(ref)
+        assert set(rep["pool"]) == set(ref["pool"])
+
+
+# ------------------------------------------------- resolve_router_config
+def test_resolve_router_config_matrix():
+    assert resolve_router_config(None, {}) == RouterConfig()
+    assert resolve_router_config(
+        None, dict(n_replicas=None, affinity=None)) == RouterConfig()
+    rc = resolve_router_config(None, dict(n_replicas=3, affinity=False,
+                                          max_imbalance=None))
+    assert rc == RouterConfig(n_replicas=3, affinity=False)
+    given = RouterConfig(n_replicas=2)
+    assert resolve_router_config(given, dict(n_replicas=None)) is given
+    with pytest.raises(ValueError, match="not both"):
+        resolve_router_config(given, dict(n_replicas=2))
+    with pytest.raises(TypeError, match="RouterConfig"):
+        resolve_router_config({"n_replicas": 2}, {})
