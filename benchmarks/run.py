@@ -12,6 +12,7 @@
   bench_prefix_sharing -> CoW prefix sharing vs private blocks at equal HBM
   bench_prefix_cache -> tiered prefix retention + host offload, Zipf sweep
   bench_router     -> replicated-engine fleet scaling + prefix affinity
+  bench_drift      -> temporal drift vs the online recalibration loop
   roofline_report  -> dry-run roofline tables (EXPERIMENTS.md source)
 
 Run: PYTHONPATH=src python -m benchmarks.run
@@ -21,7 +22,7 @@ from __future__ import annotations
 import time
 
 from . import (bench_async_serving, bench_continuous_batching,
-               bench_error_opt, bench_kernels, bench_latency,
+               bench_drift, bench_error_opt, bench_kernels, bench_latency,
                bench_paged_cache, bench_precision, bench_prefix_cache,
                bench_prefix_sharing, bench_router, bench_sharded,
                bench_simulator, roofline_report)
@@ -39,6 +40,7 @@ SECTIONS = [
     ("CoW prefix sharing on the paged pool", bench_prefix_sharing),
     ("Tiered prefix retention + host offload", bench_prefix_cache),
     ("Replicated-engine fleet + prefix affinity", bench_router),
+    ("Drift vs the online recalibration loop", bench_drift),
     ("Roofline (from multi-pod dry-run)", roofline_report),
 ]
 

@@ -1,34 +1,60 @@
 """repro.core — DIRC-RAG: digital in-ReRAM computation for edge RAG.
 
-The paper's contribution as a composable JAX library:
-  quantization    INT8/INT4 symmetric embedding quantization
-  bitplane        two's-complement bit-plane (ReRAM) layout + bit-serial MAC
-  error_model     spatial LSB sensing-error channel (Fig. 5a)
-  remapping       error-aware bit-wise remapping (Fig. 5a -> +24.6% P@k)
-  error_detection Sigma-D checksum + re-sense (Fig. 5b)
-  topk            hierarchical local/global top-k (Fig. 3a)
-  retrieval       DircRagIndex build/search
-  sharded_index   ShardedDircIndex: multi-macro shards on a real device
-                  mesh + incremental updates + the pod-scale flat-index
-                  searcher (local top-k + global merge)
-  distributed     DEPRECATED shim -> sharded_index
-  dataflow        query-stationary cycle schedule (Fig. 4)
-  simulator       calibrated cycle/energy/area model (Tables I & III)
+The paper's contribution as a composable JAX library, organized as the
+lifecycle of a stored embedding — quantize -> remap -> sense -> detect
+-> recalibrate:
+
+  1. QUANTIZE   `quantization` (INT8/INT4 symmetric embedding
+                quantization) + `bitplane` (two's-complement bit-plane
+                ReRAM layout, D-Sum LUT, bit-serial MAC).
+  2. REMAP      `error_model` characterizes the per-cell LSB
+                sensing-error channel (Fig. 5a); `device_physics` makes
+                it physical — per-macro calibration diversity and
+                temporal drift over a simulated clock; `remapping`
+                assigns bits to cells so high-weight bits land on
+                reliable positions (Fig. 5a -> +24.6% P@k), against
+                either a config profile (`build_mapping`) or an
+                arbitrary measured map (`build_mapping_for_map`).
+  3. SENSE      `retrieval` (DircRagIndex build/search) and
+                `sharded_index` (ShardedDircIndex: one error channel
+                per macro on a real device mesh, incremental updates,
+                the pod-scale flat-index searcher) sample the transient
+                flip channel per query.
+  4. DETECT     `error_detection` runs the Sigma-D popcount checksum +
+                re-sense loop (Fig. 5b) and reports per-(slot, bit)
+                first-round mismatch counters.
+  5. RECALIBRATE `recalibration` watches those counters, re-extracts
+                the believed error map online when a shard's weighted
+                exposure drifts past baseline, and re-encodes that
+                shard in place via `ShardedDircIndex.recalibrate_shard`
+                — without taking the index offline.
+
+Supporting: `topk` (hierarchical local/global comparator tree, Fig. 3a),
+`dataflow` (query-stationary cycle schedule, Fig. 4), `simulator`
+(calibrated cycle/energy/area model, Tables I & III), `distributed`
+(DEPRECATED shim -> sharded_index).
 """
 from . import (  # noqa: F401
     bitplane,
     dataflow,
+    device_physics,
     distributed,
     error_detection,
     error_model,
     quantization,
+    recalibration,
     remapping,
     retrieval,
     sharded_index,
     simulator,
     topk,
 )
+from .device_physics import DevicePhysics, DriftConfig  # noqa: F401
 from .quantization import QuantizedTensor, quantize  # noqa: F401
+from .recalibration import (  # noqa: F401
+    RecalibrationConfig,
+    RecalibrationController,
+)
 from .retrieval import DircRagIndex, RetrievalConfig  # noqa: F401
 from .sharded_index import ShardedDircIndex  # noqa: F401
 from .topk import TopK, hierarchical_topk, local_topk  # noqa: F401

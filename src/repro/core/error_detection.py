@@ -27,6 +27,11 @@ class SenseResult(NamedTuple):
     detected: jax.Array        # int32 () — total mismatches detected (all rounds)
     residual_planes: jax.Array  # int32 () — planes still mismatched after retries
     rounds: jax.Array          # int32 () — sensing rounds executed (1 = no retry)
+    detected_map: jax.Array    # int32 (n_slots, bits) — FIRST-round mismatches
+    #   per physical (slot, bit) position. First round only: later rounds
+    #   re-sense conditioned on earlier mismatches, so only round 1 is an
+    #   unbiased sample of the channel. This is the raw material the
+    #   recalibration loop inverts back into a spatial error map.
 
 
 def plane_popcount(planes: jax.Array) -> jax.Array:
@@ -50,6 +55,7 @@ def sense_with_detection(
     lut: D-Sum LUT (n, bits) int32 computed offline from clean planes.
     probs: (n_slots, bits) per-position flip probabilities.
     """
+    n_slots = probs.shape[0]
     k0, kloop = jax.random.split(key)
     sensed = apply_sense_errors(clean_planes, probs, k0)
     if not detect:
@@ -58,7 +64,15 @@ def sense_with_detection(
             detected=jnp.int32(0),
             residual_planes=jnp.int32(0),
             rounds=jnp.int32(1),
+            detected_map=jnp.zeros((n_slots, clean_planes.shape[1]), jnp.int32),
         )
+
+    slot = jnp.arange(clean_planes.shape[0]) % n_slots
+    detected_map = jax.ops.segment_sum(
+        (plane_popcount(sensed) != lut).astype(jnp.int32),
+        slot,
+        num_segments=n_slots,
+    )
 
     def body(i, state):
         planes, total_detected, k = state
@@ -78,6 +92,7 @@ def sense_with_detection(
         detected=detected,
         residual_planes=residual,
         rounds=jnp.int32(1 + max_retries),
+        detected_map=detected_map,
     )
 
 

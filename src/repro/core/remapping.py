@@ -56,7 +56,31 @@ def build_mapping(
     bits: int = 8,
     error_cfg: ErrorModelConfig | None = None,
 ) -> np.ndarray:
-    """Return (n_slots, bits, 3) int array of (row, col, level)."""
+    """Return (n_slots, bits, 3) int array of (row, col, level).
+
+    For error_aware, the spatial map is derived from `error_cfg` (the
+    offline Fig. 5a extraction). To remap against a map learned online —
+    arbitrary data, not a config — use `build_mapping_for_map`.
+    """
+    if strategy == "error_aware":
+        cfg = error_cfg or ErrorModelConfig()
+        return build_mapping_for_map(strategy, bits, lsb_error_map(cfg))
+    return build_mapping_for_map(strategy, bits, None)
+
+
+def build_mapping_for_map(
+    strategy: str,
+    bits: int = 8,
+    lsb_map: np.ndarray | None = None,
+) -> np.ndarray:
+    """`build_mapping` against an explicit (8, 8) LSB error map.
+
+    This is the entry point the recalibration loop uses: the map is
+    whatever the detection statistics currently say, not necessarily any
+    `ErrorModelConfig`'s profile. `lsb_map` is ignored for the
+    map-oblivious strategies (interleaved / grouped) and required for
+    error_aware.
+    """
     if strategy not in STRATEGIES:
         raise ValueError(f"strategy must be in {STRATEGIES}, got {strategy!r}")
     n_slots, cps = _slot_cells(bits)
@@ -85,8 +109,12 @@ def build_mapping(
 
     # error_aware: sort each slot's cells by LSB error rate ascending;
     # highest remaining LSB-group bit -> most reliable position.
-    cfg = error_cfg or ErrorModelConfig()
-    emap = lsb_error_map(cfg)
+    if lsb_map is None:
+        raise ValueError("error_aware remapping requires an lsb_map")
+    emap = np.asarray(lsb_map, dtype=np.float64)
+    if emap.shape != (SUBARRAY_ROWS, SUBARRAY_COLS):
+        raise ValueError(
+            f"lsb_map must be {(SUBARRAY_ROWS, SUBARRAY_COLS)}, got {emap.shape}")
     for s in range(n_slots):
         cells = all_cells[s]
         r, c = _cell_rc(cells)

@@ -50,7 +50,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import bitplane, error_detection, error_model, quantization, remapping, topk
+from . import (
+    bitplane,
+    device_physics,
+    error_detection,
+    error_model,
+    quantization,
+    remapping,
+    topk,
+)
+from .device_physics import DevicePhysics, DriftConfig
 from .retrieval import RetrievalConfig, score_image
 
 PARALLELISM = ("vmap", "map", "shard_map")
@@ -162,12 +171,33 @@ class ShardedDircIndex:
     norms: jax.Array            # (S, cap) fp32 integer norms
     ids: jax.Array              # (S, cap) int32 global doc ids, -1 = empty
     alive: jax.Array            # (S, cap) bool
-    mapping: np.ndarray         # (slots, bits, 3) bit->cell map (shared)
-    flip_probs: jax.Array       # (slots, bits) fp32 (shared across macros)
+    mapping: np.ndarray         # (S, slots, bits, 3) PER-MACRO bit->cell maps
+    flip_probs: jax.Array       # (S, slots, bits) fp32 TRUE channel probs
     dim: int
     next_id: int
     parallelism: str = "vmap"
     mesh: Optional[object] = None  # jax.sharding.Mesh (shard_map only)
+    physics: Optional[DevicePhysics] = None  # ground-truth error channels
+    believed_maps: Optional[np.ndarray] = None  # (S, 8, 8) maps each
+    #   shard's remapping was extracted against — diverges from
+    #   physics.true_map(s) under drift until recalibrate_shard closes it
+
+    def __post_init__(self) -> None:
+        # Per-shard error/recal counters (host-side; tiny).
+        #   cumulative: sense events, first-round Sigma-D detections,
+        #     all-round detections, post-retry residual planes, recal
+        #     events. window (reset by recalibrate_shard): per-(slot,
+        #     bit) first-round detection counts — the raw material
+        #     `extract_error_map` inverts back into a spatial map.
+        s = self.n_shards
+        slots, bits = self.flip_probs.shape[1], self.flip_probs.shape[2]
+        self._senses = np.zeros(s, np.int64)
+        self._first_det = np.zeros(s, np.int64)
+        self._detected = np.zeros(s, np.int64)
+        self._residual = np.zeros(s, np.int64)
+        self._recals = np.zeros(s, np.int64)
+        self._win_senses = np.zeros(s, np.int64)
+        self._win_det_map = np.zeros((s, slots, bits), np.int64)
 
     # ---------------------------------------------------------------- build
     @classmethod
@@ -178,11 +208,19 @@ class ShardedDircIndex:
         n_shards: int = 4,
         parallelism: str = "vmap",
         mesh=None,
+        drift: Optional[DriftConfig] = None,
+        clock=None,
     ) -> "ShardedDircIndex":
         """`mesh` pins `parallelism="shard_map"` scoring to an explicit
         `jax.sharding.Mesh` (e.g. `launch.mesh.make_macro_mesh()`) —
         shards are split over its leading axis, one device group per
-        macro block. None scores over a 1-D mesh of all devices."""
+        macro block. None scores over a 1-D mesh of all devices.
+
+        `drift` / `clock` configure the per-macro `DevicePhysics` channel
+        (only meaningful with `config.error.enabled`): each shard gets
+        its own jittered calibration and drift process over the
+        injectable clock, and — for `mapping="error_aware"` — its own
+        remapping extracted against its own t=0 calibration."""
         if parallelism not in PARALLELISM:
             raise ValueError(f"parallelism must be one of {PARALLELISM}")
         if mesh is not None and parallelism != "shard_map":
@@ -205,13 +243,33 @@ class ShardedDircIndex:
         docs = quantization.quantize(jnp.asarray(stacked), bits=config.bits,
                                      per_row=True)
         planes = bitplane.to_bitplanes(docs.values, bits=config.bits)
-        mapping = remapping.build_mapping(
-            config.mapping, bits=config.bits, error_cfg=config.error
-        )
-        probs = jnp.asarray(
-            error_model.flip_probs_for_mapping(mapping, config.error),
-            dtype=jnp.float32,
-        )
+        physics = None
+        believed = None
+        if config.error.enabled:
+            # Real dies: one error channel PER macro. Each shard's
+            # remapping is extracted against its own t=0 calibration
+            # (a perfect extraction — drift then degrades it).
+            physics = DevicePhysics(config.error, n_shards,
+                                    drift=drift, clock=clock)
+            believed = physics.true_maps()
+            mapping = np.stack([
+                remapping.build_mapping_for_map(
+                    config.mapping, config.bits,
+                    believed[s] if config.mapping == "error_aware" else None)
+                for s in range(n_shards)
+            ])
+            probs = jnp.asarray(physics.flip_probs(mapping), jnp.float32)
+        else:
+            base = remapping.build_mapping(
+                config.mapping, bits=config.bits, error_cfg=config.error
+            )
+            mapping = device_physics.stack_mappings(base, n_shards)
+            probs = jnp.asarray(
+                np.broadcast_to(
+                    error_model.flip_probs_for_mapping(base, config.error),
+                    mapping.shape[:3]),
+                dtype=jnp.float32,
+            )
         return cls(
             config=config,
             n_shards=n_shards,
@@ -229,6 +287,8 @@ class ShardedDircIndex:
             next_id=n,
             parallelism=parallelism,
             mesh=mesh,
+            physics=physics,
+            believed_maps=believed,
         )
 
     # ------------------------------------------------------------- counters
@@ -241,24 +301,113 @@ class ShardedDircIndex:
         """(S,) live docs per shard — the add_docs balancing signal."""
         return np.asarray(jnp.sum(self.alive, axis=1))
 
+    def _rows_per_slot(self) -> np.ndarray:
+        """(slots,) how many rows of a shard land on each physical slot
+        (row -> slot is `row % n_slots`, see `apply_sense_errors`)."""
+        n_slots = self.mapping.shape[1]
+        return np.bincount(np.arange(self.capacity) % n_slots,
+                           minlength=n_slots)
+
+    def stats(self) -> dict:
+        """Per-shard error/recalibration counters + fleet rollup.
+
+        `detected_rate` is first-round detections over first-round plane
+        trials — an unbiased estimate of the channel's plane-mismatch
+        probability (later rounds are conditioned on earlier mismatches).
+        `exposure` is the ground-truth weighted error mass under the
+        CURRENT mapping (what recalibration drives back down);
+        `drift_amplitude`/`drift_phase` are simulation ground truth for
+        reports, invisible to the controller.
+        """
+        plane_trials = self.capacity * self.config.bits
+        shards = []
+        for s in range(self.n_shards):
+            senses = int(self._senses[s])
+            trials = max(senses * plane_trials, 1)
+            row = {
+                "senses": senses,
+                "detected": int(self._detected[s]),
+                "residual": int(self._residual[s]),
+                "detected_rate": float(self._first_det[s] / trials),
+                "residual_rate": float(self._residual[s] / trials),
+                "recal_events": int(self._recals[s]),
+            }
+            if self.physics is not None:
+                row["drift_amplitude"] = float(
+                    self.physics.drift_amplitude()[s])
+                row["drift_phase"] = float(self.physics.drift_phase()[s])
+                row["exposure"] = device_physics.weighted_exposure(
+                    self.mapping[s], self.physics.true_map(s))
+            shards.append(row)
+        return {
+            "n_shards": self.n_shards,
+            "capacity": self.capacity,
+            "live_docs": self.n_docs,
+            "error_enabled": bool(self.config.error.enabled),
+            "drift_enabled": bool(
+                self.physics is not None and self.physics.drift.enabled),
+            "total_senses": int(self._senses.sum()),
+            "total_detected": int(self._detected.sum()),
+            "total_residual": int(self._residual.sum()),
+            "total_recals": int(self._recals.sum()),
+            "shards": shards,
+        }
+
     # ---------------------------------------------------------------- sense
+    def _refresh_channel(self) -> None:
+        """Advance the drift processes to the clock and resample the TRUE
+        per-(slot, bit) probabilities under the current mappings. The
+        believed maps / mappings are left alone — that gap is the point.
+        """
+        if self.physics is None or not self.physics.drift.enabled:
+            return
+        self.physics.advance()
+        self.flip_probs = jnp.asarray(
+            self.physics.flip_probs(self.mapping), jnp.float32)
+
+    def _record_sense(self, res: error_detection.SenseResult) -> None:
+        """Fold one sense event's per-shard counters into the stats.
+
+        Host syncs a few KB per query batch — only on the error-enabled
+        path, where the sense/detect loop already dominates.
+        """
+        dmap = np.asarray(res.detected_map, np.int64)     # (S, slots, bits)
+        self._senses += 1
+        self._first_det += dmap.sum(axis=(1, 2))
+        self._detected += np.asarray(res.detected, np.int64)
+        self._residual += np.asarray(res.residual_planes, np.int64)
+        self._win_senses += 1
+        self._win_det_map += dmap
+
     def _sensed_planes(self, key: Optional[jax.Array]) -> jax.Array:
-        """Per-query transient sensing, one independent channel per macro."""
+        """Per-query transient sensing, one independent channel per macro.
+
+        Each shard's transient key is `fold_in(key, shard)` — a stable
+        per-macro identity, so shard s draws the same flips for the same
+        query key regardless of fleet layout, and no two shards ever
+        share a stream. Probs are per-shard (each macro its own map).
+        """
         cfg = self.config
         if not cfg.error.enabled or key is None:
             return self.planes
-        keys = jax.random.split(key, self.n_shards)
+        self._refresh_channel()
+        keys = jnp.stack(
+            [jax.random.fold_in(key, s) for s in range(self.n_shards)])
         retries = cfg.max_retries if cfg.detect else 0
 
-        def sense(planes, lut, k):
+        def sense(planes, lut, probs, k):
             return error_detection.sense_with_detection(
-                planes, lut, self.flip_probs, k,
+                planes, lut, probs, k,
                 max_retries=retries, detect=cfg.detect,
-            ).planes
+            )
 
+        args = (self.planes, self.lut, self.flip_probs, keys)
         if self.parallelism == "map":
-            return jax.lax.map(lambda t: sense(*t), (self.planes, self.lut, keys))
-        return jax.vmap(sense)(self.planes, self.lut, keys)
+            res = jax.lax.map(lambda t: sense(*t), args)
+        else:
+            res = jax.vmap(sense)(*args)
+        self._record_sense(res)
+        return res.planes
 
     # ---------------------------------------------------------------- score
     def scores(
@@ -386,6 +535,74 @@ class ShardedDircIndex:
         n = int(jnp.sum(hit))
         self.alive = self.alive & ~hit
         return n
+
+    # -------------------------------------------------------- recalibration
+    def extract_error_map(self, shard: int) -> np.ndarray:
+        """(8, 8) believed LSB map of one macro from its detection window.
+
+        Inverts the since-last-recal first-round Sigma-D mismatch counts
+        (per physical slot/bit) back into per-cell flip probabilities and
+        scatters them through the shard's CURRENT mapping — the online
+        analogue of the paper's offline Monte-Carlo map extraction.
+        """
+        trials = self._rows_per_slot() * max(int(self._win_senses[shard]), 1)
+        return device_physics.extract_map_from_counts(
+            self.mapping[shard], self._win_det_map[shard], trials, self.dim)
+
+    def recalibrate_shard(
+        self,
+        shard: int,
+        believed_map: Optional[np.ndarray] = None,
+        chunk_rows: Optional[int] = None,
+        on_chunk=None,
+    ) -> np.ndarray:
+        """Re-extract one macro's map, re-run remapping, re-encode in place.
+
+        The index stays ONLINE throughout: the re-encode walks the
+        shard's rows in chunks of `chunk_rows` (default capacity/4),
+        rewriting planes + D-Sum LUT from the stored int8 codes —
+        logical bit-plane content is mapping-invariant, so searches
+        interleaved between chunks (exercise via `on_chunk(lo, hi)`)
+        keep returning correct top-k. The mapping / channel-probability
+        swap at the end is a single host-side assignment (atomic w.r.t.
+        queries, which read a consistent snapshot per call).
+
+        Returns the believed map the new remapping was extracted
+        against. Resets the shard's detection window, so the controller
+        baselines afresh against the post-recal channel.
+        """
+        cfg = self.config
+        emap = (np.asarray(believed_map, np.float64)
+                if believed_map is not None
+                else self.extract_error_map(shard))
+        new_mapping = remapping.build_mapping_for_map(
+            cfg.mapping, cfg.bits,
+            emap if cfg.mapping == "error_aware" else None)
+
+        step = chunk_rows or max(1, self.capacity // 4)
+        for lo in range(0, self.capacity, step):
+            hi = min(lo + step, self.capacity)
+            chunk = bitplane.to_bitplanes(
+                self.values[shard, lo:hi], bits=cfg.bits)
+            self.planes = self.planes.at[shard, lo:hi].set(chunk)
+            self.lut = self.lut.at[shard, lo:hi].set(
+                bitplane.sum_d_lut(chunk))
+            if on_chunk is not None:
+                on_chunk(lo, hi)
+
+        new_mappings = np.array(self.mapping)
+        new_mappings[shard] = new_mapping
+        self.mapping = new_mappings
+        if self.believed_maps is not None:
+            self.believed_maps = np.array(self.believed_maps)
+            self.believed_maps[shard] = emap
+        if self.physics is not None:
+            self.flip_probs = jnp.asarray(
+                self.physics.flip_probs(self.mapping), jnp.float32)
+        self._win_det_map[shard] = 0
+        self._win_senses[shard] = 0
+        self._recals[shard] += 1
+        return emap
 
     # --------------------------------------------------------------- memory
     def storage_bytes(self) -> dict:

@@ -53,6 +53,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.device_physics import DriftConfig
+from repro.core.error_model import ErrorModelConfig
 from repro.core.retrieval import RetrievalConfig
 from repro.models import build_model
 from repro.serving import (
@@ -88,14 +90,18 @@ def serve(arch: str, smoke: bool = True, batch: int = 4,
 
 def serve_rag(n_docs: int = 1024, n_shards: int = 4, dim: int = 256,
               batch: int = 16, n_queries: int = 64, k: int = 3,
-              path: str = "int_exact", seed: int = 0) -> dict:
+              path: str = "int_exact", seed: int = 0,
+              sense_errors: bool = False, drift_mag: float = 0.0,
+              recal: bool = False) -> dict:
     """Stand up a sharded RAG front end and drive micro-batched traffic."""
     rng = np.random.default_rng(seed)
     pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
-                              path=path, seed=seed)
+                              path=path, seed=seed,
+                              sense_errors=sense_errors,
+                              drift_mag=drift_mag, recal=recal)
     corpus = pipe.doc_texts
     queries = [corpus[rng.integers(0, n_docs)] for _ in range(n_queries)]
-    sched = pipe.scheduler(max_batch=batch)
+    sched = pipe.scheduler(max_batch=batch, key=_sense_key(pipe, seed))
     tickets = [sched.submit(q, k=k) for q in queries]
     sched.flush()  # warmup/compile on the first full traffic wave
     warmup_flushes = sched.n_flushes
@@ -105,9 +111,54 @@ def serve_rag(n_docs: int = 1024, n_shards: int = 4, dim: int = 256,
     dt = time.time() - t0
     exact = sum(corpus[int(t.result()[0][0])] == q
                 for t, q in zip(tickets, queries))
-    return {"wall_s": dt, "qps": n_queries / dt,
-            "flushes": sched.n_flushes - warmup_flushes,
-            "self_retrieval": exact / n_queries}
+    out = {"wall_s": dt, "qps": n_queries / dt,
+           "flushes": sched.n_flushes - warmup_flushes,
+           "self_retrieval": exact / n_queries}
+    return _attach_retrieval_stats(out, pipe)
+
+
+def _sense_key(pipe: RagPipeline, seed: int):
+    """A PRNG key for the transient error channel — None (clean planes)
+    unless the pipeline's error model is on."""
+    if getattr(pipe.index.config.error, "enabled", False):
+        return jax.random.key(seed + 2)
+    return None
+
+
+def _attach_retrieval_stats(out: dict, pipe: RagPipeline) -> dict:
+    """Fold per-shard error/recal counters into a --rag report dict."""
+    stats = pipe.retrieval_stats()
+    if stats:
+        out["retrieval"] = stats
+    return out
+
+
+def _print_retrieval_stats(out: dict) -> None:
+    """Per-shard error/recal counter lines for the --rag reports."""
+    stats = out.get("retrieval")
+    if not stats or not stats.get("error_enabled"):
+        return
+    print(f"error channel: {stats['total_senses']} senses, "
+          f"{stats['total_detected']} detected, "
+          f"{stats['total_residual']} residual, "
+          f"{stats['total_recals']} recals "
+          f"(drift {'on' if stats['drift_enabled'] else 'off'})")
+    for s, row in enumerate(stats["shards"]):
+        line = (f"  shard {s}: detected rate {row['detected_rate']:.4f}, "
+                f"residual rate {row['residual_rate']:.5f}, "
+                f"recals {row['recal_events']}")
+        if "drift_amplitude" in row:
+            line += (f", drift amp {row['drift_amplitude']:.3f}, "
+                     f"exposure {row['exposure']:.2f}")
+        print(line)
+    recal = stats.get("recalibration")
+    if recal:
+        ests = [r["drift_estimate"] for r in recal["shards"]
+                if r["drift_estimate"] is not None]
+        est = f"{max(ests):.2f}x" if ests else "n/a"
+        print(f"recalibration: {recal['total_triggers']} triggers "
+              f"(window {recal['window']}, ratio {recal['trigger_ratio']}), "
+              f"max drift estimate {est}")
 
 
 def _jsonable(obj):
@@ -161,11 +212,24 @@ def _percentiles_ms(wait_s) -> dict:
 def build_rag_pipeline(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
                        path: str = "int_exact", seed: int = 0,
                        arch: Optional[str] = None,
-                       max_prompt_len: int = 96) -> RagPipeline:
+                       max_prompt_len: int = 96,
+                       sense_errors: bool = False,
+                       drift_mag: float = 0.0,
+                       recal: bool = False,
+                       clock=time.monotonic) -> RagPipeline:
     """A ShardedDircIndex-backed pipeline over a synthetic corpus.
 
     Passing `arch` attaches a smoke-size generator model, enabling the
-    generation paths (`query_stream(generate=True)`, `decode_engine`)."""
+    generation paths (`query_stream(generate=True)`, `decode_engine`).
+
+    `sense_errors=True` turns on the per-macro device-physics channel
+    (jittered per-shard calibration, error-aware remapping, Sigma-D
+    detection); `drift_mag` scales temporal drift of each macro's true
+    map over `clock` (0 = static maps); `recal=True` attaches the online
+    `RecalibrationController` so drifted shards re-extract and re-encode
+    mid-serving. Drift and recal require `sense_errors`."""
+    if (drift_mag > 0 or recal) and not sense_errors:
+        raise ValueError("drift/recal require sense_errors=True")
     rng = np.random.default_rng(seed)
     corpus = [f"document {i}: " + " ".join(
         f"w{rng.integers(0, 997)}" for _ in range(12)) for i in range(n_docs)]
@@ -174,22 +238,47 @@ def build_rag_pipeline(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
         cfg = get_config(arch, smoke=True)
         model = build_model(cfg)
         params = model.init(jax.random.key(seed))
+    if sense_errors:
+        retrieval = RetrievalConfig(
+            bits=8, metric="cosine", path=path, mapping="error_aware",
+            error=ErrorModelConfig(enabled=True, p_min=5e-3, p_max=4e-2,
+                                   jitter_sigma=0.25, seed=seed),
+            detect=True, max_retries=2)
+    else:
+        retrieval = RetrievalConfig(bits=8, metric="cosine", path=path)
+    drift = None
+    if drift_mag > 0:
+        drift = DriftConfig(enabled=True, amp_mu=2e-3 * drift_mag,
+                            amp_sigma=0.0, rotate_rate=2e-3 * drift_mag,
+                            seed=seed)
     return RagPipeline(
         corpus,
-        RetrievalConfig(bits=8, metric="cosine", path=path),
+        retrieval,
         model=model, params=params,
         dim=dim, embedder=HashEmbedder(dim=dim),
         max_prompt_len=max_prompt_len,
         n_shards=n_shards,
+        clock=clock,
+        drift=drift,
+        recal=recal,
     )
 
 
-def _padded_search(pipe: RagPipeline, max_batch: int):
-    """Pad retrieval batches to one static (max_batch, dim) XLA program."""
+def _padded_search(pipe: RagPipeline, max_batch: int, key=None):
+    """Pad retrieval batches to one static (max_batch, dim) XLA program.
+
+    With `key` set, every flush senses through the transient error
+    channel under a fresh fold_in'd key (flips independent per batch)."""
+    n_calls = [0]
 
     def padded(texts, kk):
         pad = max_batch - len(texts)
-        ids, scores = pipe.search_batch(list(texts) + [texts[0]] * pad, kk)
+        batch_key = None
+        if key is not None:
+            batch_key = jax.random.fold_in(key, n_calls[0])
+            n_calls[0] += 1
+        ids, scores = pipe.search_batch(list(texts) + [texts[0]] * pad, kk,
+                                        key=batch_key)
         return ids[: len(texts)], scores[: len(texts)]
 
     return padded
@@ -232,6 +321,8 @@ def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
                         n_tenants: int = 4, skew: float = 1.0,
                         offered_qps: float = 500.0, n_queries: int = 200,
                         k: int = 3, path: str = "int_exact", seed: int = 0,
+                        sense_errors: bool = False, drift_mag: float = 0.0,
+                        recal: bool = False,
                         pipe: Optional[RagPipeline] = None) -> dict:
     """Open-loop streaming traffic against the async dual-trigger scheduler.
 
@@ -248,11 +339,14 @@ def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
     """
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
-                                  path=path, seed=seed)
+                                  path=path, seed=seed,
+                                  sense_errors=sense_errors,
+                                  drift_mag=drift_mag, recal=recal)
     queries, arrival_tenant, gaps = _poisson_arrivals(
         pipe, n_tenants, skew, offered_qps, n_queries, seed)
 
-    padded_search = _padded_search(pipe, max_batch)
+    padded_search = _padded_search(pipe, max_batch,
+                                   key=_sense_key(pipe, seed))
     padded_search([queries[0]], k)  # compile the serving shape off-clock
     sched = AsyncBatchScheduler(padded_search, max_batch=max_batch,
                                 max_wait_ms=max_wait_ms, start=True)
@@ -294,7 +388,7 @@ def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
         },
     }
     out.update(_percentiles_ms([t.wait_s for t in served]))
-    return out
+    return _attach_retrieval_stats(out, pipe)
 
 
 def serve_rag_open_loop_generate(
@@ -316,7 +410,9 @@ def serve_rag_open_loop_generate(
         affinity: Optional[bool] = None,
         max_imbalance: Optional[int] = None,
         arch: str = "phi4-mini-3.8b", path: str = "int_exact",
-        seed: int = 0, pipe: Optional[RagPipeline] = None) -> dict:
+        seed: int = 0, sense_errors: bool = False, drift_mag: float = 0.0,
+        recal: bool = False,
+        pipe: Optional[RagPipeline] = None) -> dict:
     """Open-loop retrieval+generation through the shared streaming front door.
 
     Poisson arrivals are submitted to the async retrieval scheduler; each
@@ -351,7 +447,9 @@ def serve_rag_open_loop_generate(
     """
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
-                                  path=path, seed=seed, arch=arch)
+                                  path=path, seed=seed, arch=arch,
+                                  sense_errors=sense_errors,
+                                  drift_mag=drift_mag, recal=recal)
     if pipe.engine is None:
         raise ValueError("generate mode needs a pipeline with a model "
                          "(build_rag_pipeline(arch=...))")
@@ -363,7 +461,8 @@ def serve_rag_open_loop_generate(
     queries, arrival_tenant, gaps = _poisson_arrivals(
         pipe, n_tenants, skew, offered_qps, n_queries, seed)
 
-    padded_search = _padded_search(pipe, max_batch)
+    padded_search = _padded_search(pipe, max_batch,
+                                   key=_sense_key(pipe, seed))
     sched = AsyncBatchScheduler(padded_search, max_batch=max_batch,
                                 max_wait_ms=max_wait_ms, start=True)
     engine = pipe.decode_engine(config, router=router, n_replicas=n_replicas,
@@ -490,7 +589,7 @@ def serve_rag_open_loop_generate(
         if pools:
             out["pool"] = _sum_pools(pools)
     out.update(_percentiles_ms(e2e_s))
-    return out
+    return _attach_retrieval_stats(out, pipe)
 
 
 def main() -> None:
@@ -507,6 +606,20 @@ def main() -> None:
     ap.add_argument("--rag-queries", type=int, default=64)
     ap.add_argument("--n-shards", type=int, default=4)
     ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--sense-errors", action="store_true",
+                    help="--rag: per-macro device-physics error channel "
+                         "(jittered per-shard calibration, error-aware "
+                         "remapping, Sigma-D detection); adds per-shard "
+                         "detected/residual counters to the report")
+    ap.add_argument("--drift-mag", type=float, default=0.0,
+                    help="--sense-errors: temporal drift magnitude of each "
+                         "macro's true error map over wall-clock time "
+                         "(0 = static maps)")
+    ap.add_argument("--recal", action="store_true",
+                    help="--sense-errors: attach the online "
+                         "RecalibrationController — drifted shards "
+                         "re-extract their error map from detection "
+                         "counters and re-encode in place mid-serving")
     ap.add_argument("--open-loop", action="store_true",
                     help="--rag: simulated Poisson open-loop streaming "
                          "traffic against the async scheduler")
@@ -590,7 +703,9 @@ def main() -> None:
             config=config,
             n_replicas=args.n_replicas, affinity=args.affinity,
             max_imbalance=args.max_imbalance,
-            arch=args.arch or "phi4-mini-3.8b")
+            arch=args.arch or "phi4-mini-3.8b",
+            sense_errors=args.sense_errors, drift_mag=args.drift_mag,
+            recal=args.recal)
         print(f"open-loop generate: offered {out['offered_qps']:.0f} q/s, "
               f"finished {out['n_finished']}/{out['n_queries']} requests "
               f"({out['achieved_qps']:.1f} q/s end-to-end)")
@@ -638,6 +753,7 @@ def main() -> None:
                       f"({pool.get('host_bytes', 0)} bytes) resident, "
                       f"{pool.get('n_host_hits', 0)} swap-ins, host hit "
                       f"rate {pool.get('host_hit_rate', 0.0):.2f}")
+        _print_retrieval_stats(out)
         if args.json:
             _emit_json(out, args.json)
         return
@@ -647,7 +763,8 @@ def main() -> None:
             max_batch=args.batch, max_wait_ms=args.max_wait_ms,
             n_tenants=args.n_tenants, skew=args.skew,
             offered_qps=args.offered_qps, n_queries=args.rag_queries,
-            k=args.k)
+            k=args.k, sense_errors=args.sense_errors,
+            drift_mag=args.drift_mag, recal=args.recal)
         print(f"open-loop: offered {out['offered_qps']:.0f} q/s, achieved "
               f"{out['achieved_qps']:.0f} q/s over {out['n_queries']} queries")
         print(f"latency ms: p50 {out['p50_ms']:.2f}  p95 {out['p95_ms']:.2f} "
@@ -655,15 +772,19 @@ def main() -> None:
         print(f"batches: {out['n_flushes']} flushes, mean size "
               f"{out['mean_batch']:.1f}, hist {out['batch_hist']}")
         print(f"per-tenant p95 ms: {out['per_tenant_p95_ms']}")
+        _print_retrieval_stats(out)
         if args.json:
             _emit_json(out, args.json)
         return
     if args.rag:
         out = serve_rag(n_docs=args.rag_docs, n_shards=args.n_shards,
-                        batch=args.batch, n_queries=args.rag_queries, k=args.k)
+                        batch=args.batch, n_queries=args.rag_queries,
+                        k=args.k, sense_errors=args.sense_errors,
+                        drift_mag=args.drift_mag, recal=args.recal)
         print(f"served {args.rag_queries} queries in {out['wall_s']:.3f}s "
               f"({out['qps']:.0f} q/s, {out['flushes']} flushes, "
               f"self-retrieval {out['self_retrieval']:.2f})")
+        _print_retrieval_stats(out)
         if args.json:
             _emit_json(out, args.json)
         return

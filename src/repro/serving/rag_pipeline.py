@@ -53,6 +53,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.device_physics import DriftConfig
+from repro.core.recalibration import (
+    RecalibrationConfig,
+    RecalibrationController,
+)
 from repro.core.retrieval import DircRagIndex, RetrievalConfig
 from repro.core.sharded_index import ShardedDircIndex
 from repro.models import supports_paged_kv
@@ -138,21 +143,39 @@ class RagPipeline:
         max_prompt_len: int = 512,
         n_shards: int = 0,
         clock: Callable[[], float] = time.monotonic,
+        drift: Optional[DriftConfig] = None,
+        recal=None,
     ):
         """n_shards=0 builds the monolithic single-macro DircRagIndex;
         n_shards>=1 builds a ShardedDircIndex, which also unlocks
         add_docs/delete_docs (incremental corpus updates). `clock` is the
         monotonic-seconds source for every pipeline deadline (and the
-        engines it builds) — injectable for deterministic tests."""
+        engines it builds) — injectable for deterministic tests.
+
+        Device physics (sharded index only): `drift` configures each
+        macro's temporal error-map drift over `clock`; `recal=True` (or a
+        `RecalibrationConfig`) attaches a `RecalibrationController` that
+        the retrieval path polls after every batch, so shards whose
+        detection counters drift past baseline get re-extracted and
+        re-encoded online, mid-serving."""
         self.tokenizer = ByteTokenizer()
         self.embedder = embedder or HashEmbedder(dim=dim)
         self.doc_texts = list(doc_texts)
         embs = self.embedder.embed(self.doc_texts)
         if n_shards > 0:
             self.index = ShardedDircIndex.build(
-                jnp.asarray(embs), retrieval_config, n_shards=n_shards)
+                jnp.asarray(embs), retrieval_config, n_shards=n_shards,
+                drift=drift, clock=clock)
         else:
+            if drift is not None or recal:
+                raise TypeError(
+                    "drift/recal require n_shards >= 1 (per-macro device "
+                    "physics lives on ShardedDircIndex)")
             self.index = DircRagIndex.build(jnp.asarray(embs), retrieval_config)
+        self.recal_controller = None
+        if recal:
+            cfg = recal if isinstance(recal, RecalibrationConfig) else None
+            self.recal_controller = RecalibrationController(self.index, cfg)
         self.engine = (
             GenerationEngine(model, params) if model is not None else None
         )
@@ -170,7 +193,23 @@ class RagPipeline:
         the BatchScheduler flushes."""
         q = jnp.asarray(self.embedder.embed(list(texts)))
         res = self.index.search(q, k=k, key=key)
+        if self.recal_controller is not None:
+            # Cheap when no detection window has filled; fires online
+            # per-shard re-extraction + re-encode when one has drifted.
+            self.recal_controller.poll()
         return np.asarray(res.indices), np.asarray(res.scores)
+
+    def retrieval_stats(self) -> dict:
+        """Per-shard error/recal counters + the controller's view.
+
+        Monolithic indexes (n_shards=0) report {} — device physics lives
+        on the sharded index."""
+        stats: dict = {}
+        if isinstance(self.index, ShardedDircIndex):
+            stats = self.index.stats()
+            if self.recal_controller is not None:
+                stats["recalibration"] = self.recal_controller.stats()
+        return stats
 
     def scheduler(self, max_batch: int = 32,
                   key: Optional[jax.Array] = None,

@@ -23,6 +23,7 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 EXPECTED = {
     "BENCH_async_serving.json",
     "BENCH_continuous_batching.json",
+    "BENCH_drift.json",
     "BENCH_paged_cache.json",
     "BENCH_prefix_cache.json",
     "BENCH_prefix_sharing.json",
@@ -104,6 +105,25 @@ def test_router_bench_has_affinity_vs_random_cells():
     assert len(totals) == 1, f"cells differ in total HBM: {totals}"
     assert rows["affinity"]["tok_per_s"] > rows["single"]["tok_per_s"]
     assert rows["affinity"]["hit_rate"] > rows["random"]["hit_rate"]
+
+
+def test_drift_bench_shows_recal_recovering_the_oracle_gap():
+    """The drift artifact must carry the full cell grid and the
+    committed numbers must show the headline claims: the static
+    (stale-map) cell degrades monotonically with drift magnitude, and
+    at every nonzero magnitude the online recalibration loop fired and
+    recovered at least half of the static-vs-oracle precision gap."""
+    data = json.loads((REPO_ROOT / "BENCH_drift.json").read_text())
+    rows = {(r["cell"], r["drift_mag"]): r for r in data["rows"]}
+    mags = sorted({m for _, m in rows})
+    assert len(mags) >= 3 and mags[0] == 0.0 and mags[-1] > 0.0
+    assert {c for c, _ in rows} == {"static", "detect", "recal"}
+    statics = [rows[("static", m)]["precision"] for m in mags]
+    assert all(b < a for a, b in zip(statics, statics[1:])), statics
+    for m in mags[1:]:
+        r = rows[("recal", m)]
+        assert r["total_recals"] >= 1, f"mag {m}: recal loop never fired"
+        assert r["recovered_frac"] >= 0.5, f"mag {m}: {r['recovered_frac']}"
 
 
 @pytest.mark.parametrize("path", _bench_jsons(), ids=lambda p: p.name)

@@ -1,0 +1,200 @@
+"""device_physics: per-macro calibration, drift, and map re-extraction."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import device_physics as DP
+from repro.core import remapping
+from repro.core.device_physics import DevicePhysics, DriftConfig
+from repro.core.error_model import ErrorModelConfig, lsb_error_map
+
+
+def _err(jitter=1.0, seed=3):
+    return ErrorModelConfig(
+        enabled=True, p_min=1e-3, p_max=5e-2, jitter_sigma=jitter, seed=seed
+    )
+
+
+# ------------------------------------------------------ calibration maps
+def test_calibration_is_deterministic_per_shard():
+    cfg = _err()
+    a = DP.shard_calibration_map(cfg, 2)
+    b = DP.shard_calibration_map(cfg, 2)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_calibration_jitter_is_independent_across_shards():
+    cfg = _err()
+    maps = [DP.shard_calibration_map(cfg, s) for s in range(4)]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(maps[i], maps[j]), (i, j)
+
+
+def test_calibration_without_jitter_matches_systematic_profile():
+    cfg = _err(jitter=0.0)
+    base = lsb_error_map(dataclasses.replace(cfg, jitter_sigma=0.0))
+    for s in range(3):
+        np.testing.assert_array_equal(DP.shard_calibration_map(cfg, s), base)
+
+
+def test_calibration_respects_probability_ceiling():
+    cfg = dataclasses.replace(_err(jitter=3.0), p_max=0.4)
+    m = DP.shard_calibration_map(cfg, 0)
+    assert float(m.max()) <= DP.P_CEIL
+    assert float(m.min()) >= 0.0
+
+
+# ---------------------------------------------------------------- drift
+def _physics(drift, n_shards=2, clock=None, jitter=1.0):
+    return DevicePhysics(_err(jitter=jitter), n_shards, drift=drift,
+                         clock=clock)
+
+
+def test_amplitude_ageing_scales_the_map_monotonically():
+    t = [0.0]
+    phys = _physics(
+        DriftConfig(enabled=True, amp_mu=0.1, seed=1), clock=lambda: t[0]
+    )
+    m0 = phys.true_map(0)
+    means = [m0.mean()]
+    for _ in range(3):
+        t[0] += 1.0
+        phys.advance()
+        means.append(phys.true_map(0).mean())
+    assert all(b > a for a, b in zip(means, means[1:])), means
+    # exact exp(mu * t) scaling wherever the ceiling does not clip
+    m3 = phys.true_map(0)
+    unclipped = m3 < DP.P_CEIL
+    np.testing.assert_allclose(
+        m3[unclipped], m0[unclipped] * np.exp(0.3), rtol=1e-12
+    )
+
+
+def test_quarter_turn_rotation_is_exact_rot90():
+    t = [0.0]
+    phys = _physics(
+        DriftConfig(enabled=True, rotate_rate=0.25, seed=1),
+        clock=lambda: t[0],
+    )
+    m0 = phys.true_map(0)
+    t[0] += 4.0  # phase = 1.0 quarter-turn
+    phys.advance()
+    np.testing.assert_allclose(phys.true_map(0), np.rot90(m0), rtol=1e-12)
+
+
+def test_rotation_preserves_total_error_mass():
+    t = [0.0]
+    phys = _physics(
+        DriftConfig(enabled=True, rotate_rate=0.1, seed=1),
+        clock=lambda: t[0],
+    )
+    total0 = phys.true_map(0).sum()
+    t[0] += 3.0  # mid-blend phase
+    phys.advance()
+    np.testing.assert_allclose(phys.true_map(0).sum(), total0, rtol=1e-12)
+
+
+def test_disabled_drift_leaves_maps_frozen():
+    t = [0.0]
+    phys = _physics(DriftConfig(enabled=False), clock=lambda: t[0])
+    m0 = phys.true_map(0)
+    t[0] += 100.0
+    phys.advance()
+    np.testing.assert_array_equal(phys.true_map(0), m0)
+    assert float(phys.drift_amplitude()[0]) == 1.0
+    assert float(phys.drift_phase()[0]) == 0.0
+
+
+def test_drift_walk_is_independent_per_shard():
+    t = [0.0]
+    phys = _physics(
+        DriftConfig(enabled=True, amp_sigma=0.2, seed=9),
+        clock=lambda: t[0],
+    )
+    t[0] += 5.0
+    phys.advance()
+    amps = phys.drift_amplitude()
+    assert amps[0] != amps[1]
+
+
+# --------------------------------------------------------- re-extraction
+def test_invert_detection_rate_round_trips_unsaturated_probs():
+    dim = 64
+    p = np.array([1e-4, 1e-3, 5e-3, 2e-2])
+    rate = 1.0 - (1.0 - p) ** dim
+    np.testing.assert_allclose(
+        DP.invert_detection_rate(rate, dim), p, rtol=1e-10
+    )
+
+
+def test_invert_detection_rate_caps_saturated_rates():
+    p_hat = DP.invert_detection_rate(np.array([1.0]), 64)
+    assert 0.0 < float(p_hat[0]) <= DP.P_CEIL
+
+
+def test_extract_map_round_trips_through_detection_counts():
+    """mapping + exact expected first-round counts -> the true LSB map
+    (up to the saturation ceiling, absent at these probabilities)."""
+    dim = 64
+    true_map = DP.shard_calibration_map(_err(jitter=0.5), 0)
+    true_map = np.clip(true_map, 0.0, 2e-2)  # keep every plane unsaturated
+    mapping = remapping.build_mapping_for_map("error_aware", 8, true_map)
+    probs = DP.flip_probs_for_map(mapping, true_map)  # (slots, bits)
+    trials = np.full(mapping.shape[0], 10_000.0)
+    counts = trials[:, None] * (1.0 - (1.0 - probs) ** dim)
+    emap = DP.extract_map_from_counts(mapping, counts, trials, dim)
+    lsb = mapping[..., 2] == 1
+    rows, cols = mapping[..., 0][lsb], mapping[..., 1][lsb]
+    np.testing.assert_allclose(emap[rows, cols], true_map[rows, cols],
+                               rtol=1e-8)
+
+
+def test_flip_probs_for_map_zeroes_msb_positions():
+    true_map = DP.shard_calibration_map(_err(), 0)
+    mapping = remapping.build_mapping_for_map("grouped", 8)
+    probs = DP.flip_probs_for_map(mapping, true_map)
+    msb = mapping[..., 2] == 0
+    assert (probs[msb] == 0.0).all()
+    assert (probs[~msb] > 0.0).any()
+
+
+# ------------------------------------------------------------- exposure
+def test_weighted_exposure_is_minimized_by_error_aware_remap():
+    rng = np.random.default_rng(11)
+    for _ in range(5):
+        emap = rng.uniform(0.0, 0.3, size=(8, 8))
+        aware = remapping.build_mapping_for_map("error_aware", 8, emap)
+        grouped = remapping.build_mapping_for_map("grouped", 8)
+        assert (
+            DP.weighted_exposure(aware, emap)
+            <= DP.weighted_exposure(grouped, emap) + 1e-12
+        )
+
+
+def test_rotation_raises_exposure_of_a_stale_mapping():
+    """The drift mode recalibration exists for: rotating the map under a
+    fixed error-aware mapping increases its weighted exposure, while a
+    fresh remap against the rotated map restores the minimum."""
+    emap = DP.shard_calibration_map(_err(jitter=2.0, seed=7), 0)
+    stale = remapping.build_mapping_for_map("error_aware", 8, emap)
+    rotated = np.rot90(emap)
+    stale_exposure = DP.weighted_exposure(stale, rotated)
+    fresh = remapping.build_mapping_for_map("error_aware", 8, rotated)
+    fresh_exposure = DP.weighted_exposure(fresh, rotated)
+    assert fresh_exposure < stale_exposure
+
+
+def test_stack_mappings_tiles_and_copies():
+    base = remapping.build_mapping_for_map("grouped", 8)
+    stacked = DP.stack_mappings(base, 3)
+    assert stacked.shape == (3,) + base.shape
+    stacked[1, 0, 0, 0] = 99  # must be writable (a copy, not a view)
+    assert base[0, 0, 0] != 99
+
+
+def test_physics_rejects_empty_macro_set():
+    with pytest.raises(ValueError):
+        DevicePhysics(_err(), 0)

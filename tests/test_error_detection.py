@@ -4,6 +4,7 @@ import numpy as np
 
 from repro.core import bitplane as B
 from repro.core import error_detection as D
+from repro.core import error_model as E
 
 
 def _setup(rng, n=8, bits=8, dim=128):
@@ -50,3 +51,83 @@ def test_compensating_flips_escape_detection(rng):
     pc = D.plane_popcount(tampered)
     assert (np.asarray(pc) == np.asarray(lut)).all()  # checksum blind
     assert int(D.undetected_error_bits(tampered, planes)) == 2
+
+
+# ------------------------------------------------------ retry accounting
+def test_retry_accounting_across_rounds(rng):
+    """detected / residual_planes / rounds / detected_map stay mutually
+    consistent as max_retries grows (same key => identical first round)."""
+    planes, lut = _setup(rng, n=32)
+    probs = jnp.full((16, 8), 0.03, jnp.float32)
+    key = jax.random.key(5)
+    r0 = D.sense_with_detection(planes, lut, probs, key, max_retries=0)
+    # no retry rounds ran: the retry counter is 0 and the residual IS the
+    # first-round mismatch count, which detected_map aggregates by slot
+    assert int(r0.rounds) == 1
+    assert int(r0.detected) == 0
+    assert int(r0.residual_planes) == int(r0.detected_map.sum()) > 0
+
+    r2 = D.sense_with_detection(planes, lut, probs, key, max_retries=2)
+    r4 = D.sense_with_detection(planes, lut, probs, key, max_retries=4)
+    assert int(r2.rounds) == 3 and int(r4.rounds) == 5
+    # first round is key-deterministic: the unbiased channel sample is
+    # identical however many retries follow
+    assert np.array_equal(np.asarray(r2.detected_map),
+                          np.asarray(r0.detected_map))
+    assert np.array_equal(np.asarray(r4.detected_map),
+                          np.asarray(r2.detected_map))
+    # the all-rounds counter includes at least the first-round mismatches
+    assert int(r2.detected) >= int(r0.detected_map.sum())
+    assert int(r4.detected) >= int(r2.detected)
+    # re-sensing only ever touches flagged planes: residual is monotone
+    # non-increasing in retries (and strictly fixed something here)
+    assert int(r4.residual_planes) <= int(r2.residual_planes)
+    assert int(r2.residual_planes) < int(r0.residual_planes)
+
+
+def test_detected_map_is_the_slotwise_first_round_sample(rng):
+    """detected_map == first-round Sigma-D mismatches aggregated by
+    physical slot (row -> row % n_slots) — the recalibration loop's
+    unbiased channel sample."""
+    planes, lut = _setup(rng, n=32)
+    probs = jnp.full((16, 8), 0.05, jnp.float32)
+    key = jax.random.key(9)
+    k0, _ = jax.random.split(key)
+    sensed = E.apply_sense_errors(planes, probs, k0)
+    mismatch = (D.plane_popcount(sensed) != lut).astype(jnp.int32)
+    slot = jnp.arange(32) % 16
+    want = jax.ops.segment_sum(mismatch, slot, num_segments=16)
+    res = D.sense_with_detection(planes, lut, probs, key, max_retries=3)
+    np.testing.assert_array_equal(np.asarray(res.detected_map),
+                                  np.asarray(want))
+    assert res.detected_map.shape == (16, 8)
+
+
+def test_detect_false_reports_empty_accounting(rng):
+    planes, lut = _setup(rng, n=8)
+    probs = jnp.full((16, 8), 0.2, jnp.float32)
+    res = D.sense_with_detection(planes, lut, probs, jax.random.key(1),
+                                 max_retries=3, detect=False)
+    assert int(res.rounds) == 1
+    assert int(res.detected) == 0
+    assert int(res.residual_planes) == 0
+    assert res.detected_map.shape == (16, 8)
+    assert int(res.detected_map.sum()) == 0
+    assert int(D.undetected_error_bits(res.planes, planes)) > 0
+
+
+def test_compensating_escapes_are_undetected_not_residual(rng):
+    """Accounting for the checksum's blind spot: after retries, planes
+    whose popcount matches the LUT can still hold (compensating) bit
+    errors — they count toward ground-truth undetected bits while
+    residual_planes only counts the still-FLAGGED planes."""
+    planes, lut = _setup(rng, n=64, dim=8)  # tiny planes: escapes common
+    probs = jnp.full((16, 8), 0.25, jnp.float32)
+    res = D.sense_with_detection(planes, lut, probs, jax.random.key(2),
+                                 max_retries=3)
+    flagged = D.plane_popcount(res.planes) != lut  # (n, bits)
+    assert int(res.residual_planes) == int(flagged.sum())
+    errs = jnp.sum((res.planes != planes).astype(jnp.int32), axis=-1)
+    escaped = int(jnp.where(~flagged, errs, 0).sum())
+    assert escaped > 0  # compensating flips slipped past Sigma-D
+    assert int(D.undetected_error_bits(res.planes, planes)) >= escaped

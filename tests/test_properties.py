@@ -77,3 +77,25 @@ def test_topk_scores_sorted_and_indices_valid(seed, k):
     i = np.asarray(r.indices)
     assert (i >= 0).all() and (i < 64).all()
     assert all(len(set(row)) == k for row in i)          # distinct
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_error_aware_remap_weakly_dominates_grouped(seed):
+    """Under ANY calibration map, the error-aware remap's weighted
+    exposure (sum over LSB bits of 2^b * p_cell — the expected weighted
+    absolute-error bound the remap minimizes) is <= grouped's: grouped
+    is one feasible per-slot assignment, and error_aware picks the
+    per-slot optimum by sorting cells into descending bit weights."""
+    from repro.core import device_physics as DP
+    from repro.core import remapping
+
+    rng = np.random.default_rng(seed)
+    emap = rng.uniform(0.0, 0.5, size=(8, 8))
+    for bits in (4, 8):
+        aware = remapping.build_mapping_for_map("error_aware", bits, emap)
+        grouped = remapping.build_mapping_for_map("grouped", bits)
+        assert (
+            DP.weighted_exposure(aware, emap)
+            <= DP.weighted_exposure(grouped, emap) + 1e-12
+        ), (seed, bits)

@@ -1,0 +1,200 @@
+"""Recalibration loop: counters -> trigger -> online shard re-encode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device_physics as DP
+from repro.core import remapping
+from repro.core.device_physics import DriftConfig
+from repro.core.error_model import ErrorModelConfig
+from repro.core.recalibration import (
+    RecalibrationConfig,
+    RecalibrationController,
+)
+from repro.core.retrieval import RetrievalConfig
+from repro.core.sharded_index import ShardedDircIndex
+from repro.data.synthetic import make_ir_dataset
+
+
+def _docs(n=96, dim=32, seed=7):
+    ds = make_ir_dataset("recal", n_docs=n, dim=dim, n_queries=8,
+                         n_clusters=8, seed=seed)
+    return jnp.asarray(ds.doc_embeddings), jnp.asarray(ds.query_embeddings)
+
+
+def _index(docs, *, p_max=1.5e-2, jitter=2.0, drift=None, clock=None,
+           n_shards=2, detect=True, max_retries=2):
+    err = ErrorModelConfig(enabled=True, p_min=1e-4, p_max=p_max,
+                           jitter_sigma=jitter, seed=5)
+    cfg = RetrievalConfig(bits=8, path="bitserial", mapping="error_aware",
+                          error=err, detect=detect,
+                          max_retries=max_retries)
+    return ShardedDircIndex.build(docs, cfg, n_shards=n_shards,
+                                  drift=drift, clock=clock)
+
+
+def _rotating_drift(rate=0.02):
+    return DriftConfig(enabled=True, amp_mu=0.0, amp_sigma=0.0,
+                       rotate_rate=rate, seed=11)
+
+
+# ----------------------------------------------------------- controller
+def test_controller_baselines_then_triggers_under_rotation():
+    docs, queries = _docs()
+    t = [0.0]
+    idx = _index(docs, drift=_rotating_drift(), clock=lambda: t[0])
+    ctrl = RecalibrationController(
+        idx, RecalibrationConfig(window=4, trigger_ratio=1.02,
+                                 min_detected=1))
+    key = jax.random.key(0)
+    fired = []
+    for wave in range(40):
+        t[0] += 1.0
+        idx.search(queries, k=5, key=jax.random.fold_in(key, wave))
+        fired += ctrl.poll()
+        if fired:
+            break
+    assert fired, "rotation drift never fired a recalibration"
+    st = ctrl.stats()
+    assert st["total_triggers"] == len(fired) >= 1
+    assert idx.stats()["total_recals"] == len(fired)
+    for s in fired:
+        # post-recal the shard re-baselines: baseline dropped, window reset
+        assert st["shards"][s]["baseline_exposure"] is None
+        assert int(idx._win_senses[s]) == 0
+
+
+def test_controller_is_inert_without_detection():
+    docs, queries = _docs()
+    idx = _index(docs, detect=False)
+    ctrl = RecalibrationController(
+        idx, RecalibrationConfig(window=1, trigger_ratio=1.0,
+                                 min_detected=0))
+    for wave in range(6):
+        idx.search(queries, k=5, key=jax.random.key(wave))
+    assert ctrl.poll() == []
+    assert idx.stats()["total_recals"] == 0
+
+
+def test_disabled_controller_observes_but_never_fires():
+    docs, queries = _docs()
+    t = [0.0]
+    idx = _index(docs, drift=_rotating_drift(), clock=lambda: t[0])
+    ctrl = RecalibrationController(
+        idx, RecalibrationConfig(enabled=False, window=4,
+                                 trigger_ratio=1.0, min_detected=0))
+    key = jax.random.key(0)
+    for wave in range(24):
+        t[0] += 1.0
+        idx.search(queries, k=5, key=jax.random.fold_in(key, wave))
+        assert ctrl.poll() == []
+    st = ctrl.stats()
+    assert idx.stats()["total_recals"] == 0
+    assert st["shards"][0]["last_exposure"] is not None  # still watching
+
+
+def test_max_recals_caps_triggering():
+    docs, queries = _docs()
+    t = [0.0]
+    idx = _index(docs, drift=_rotating_drift(0.05), clock=lambda: t[0])
+    ctrl = RecalibrationController(
+        idx, RecalibrationConfig(window=2, trigger_ratio=1.0,
+                                 min_detected=0, max_recals=1))
+    key = jax.random.key(0)
+    for wave in range(40):
+        t[0] += 1.0
+        idx.search(queries, k=5, key=jax.random.fold_in(key, wave))
+        ctrl.poll()
+    assert int(idx.stats()["total_recals"]) <= idx.n_shards  # 1 per shard
+    assert (ctrl._triggers <= 1).all()
+
+
+# --------------------------------------------- online shard re-encode
+def test_recalibrate_shard_stays_online_mid_reencode():
+    """THE acceptance property: searches interleaved between re-encode
+    chunks return the same top-k as before the recalibration started.
+
+    p=0 keeps the sense/detect path deterministic, so 'correct top-k'
+    is exact equality with the pre-recal search."""
+    docs, queries = _docs(n=64)
+    idx = _index(docs, p_max=0.0, jitter=0.0)
+    key = jax.random.key(3)
+    want = idx.search(queries, k=5, key=key)
+    seen = []
+
+    def on_chunk(lo, hi):
+        got = idx.search(queries, k=5, key=key)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(want.indices))
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(want.scores))
+        seen.append((lo, hi))
+
+    new_map = np.full((8, 8), 1e-3)
+    idx.recalibrate_shard(0, believed_map=new_map, chunk_rows=7,
+                          on_chunk=on_chunk)
+    assert len(seen) >= 4  # the re-encode really was chunked
+    assert seen[-1][1] == idx.capacity
+    after = idx.search(queries, k=5, key=key)
+    np.testing.assert_array_equal(np.asarray(after.indices),
+                                  np.asarray(want.indices))
+    assert int(idx.stats()["shards"][0]["recal_events"]) == 1
+
+
+def test_recalibration_restores_exposure_after_rotation():
+    """After the true map rotates, a recal against the current truth
+    drops the shard's ground-truth weighted exposure back to the
+    fresh-map minimum."""
+    docs, queries = _docs()
+    t = [0.0]
+    idx = _index(docs, drift=_rotating_drift(0.25), clock=lambda: t[0])
+    key = jax.random.key(1)
+    idx.search(queries, k=5, key=key)  # baseline channel state
+    t[0] += 4.0  # a full quarter-turn
+    idx.search(queries, k=5, key=jax.random.fold_in(key, 1))
+    stale = idx.stats()["shards"][0]["exposure"]
+    truth = idx.physics.true_map(0)
+    fresh_min = DP.weighted_exposure(
+        remapping.build_mapping_for_map("error_aware", 8, truth), truth)
+    idx.recalibrate_shard(0, believed_map=truth)
+    recal = idx.stats()["shards"][0]["exposure"]
+    assert recal < stale
+    np.testing.assert_allclose(recal, fresh_min, rtol=1e-6)
+
+
+def test_online_extraction_orders_cells_like_the_truth():
+    """The counter-driven map extraction must rank a shard's unreliable
+    cells above its reliable ones (exact values saturate; ORDER is what
+    the error-aware remap consumes)."""
+    docs, queries = _docs(n=128, dim=64)
+    idx = _index(docs, p_max=8e-3, jitter=1.0, n_shards=1)
+    key = jax.random.key(2)
+    for wave in range(48):
+        idx.search(queries, k=5, key=jax.random.fold_in(key, wave))
+    est = idx.extract_error_map(0)
+    truth = idx.physics.true_map(0)
+    lsb = idx.mapping[0][..., 2] == 1
+    rows = idx.mapping[0][..., 0][lsb]
+    cols = idx.mapping[0][..., 1][lsb]
+    r_est = est[rows, cols]
+    r_true = truth[rows, cols]
+    # Spearman-style check: correlation of ranks clearly positive.
+    rank = lambda x: np.argsort(np.argsort(x))  # noqa: E731
+    corr = np.corrcoef(rank(r_est), rank(r_true))[0, 1]
+    assert corr > 0.5, corr
+
+
+def test_window_counters_accumulate_and_reset():
+    docs, queries = _docs()
+    idx = _index(docs)
+    key = jax.random.key(4)
+    for wave in range(3):
+        idx.search(queries, k=5, key=jax.random.fold_in(key, wave))
+    assert (idx._win_senses == 3).all()
+    assert idx._win_det_map.sum() > 0
+    assert (idx._win_det_map >= 0).all()
+    idx.recalibrate_shard(1)
+    assert int(idx._win_senses[1]) == 0
+    assert int(idx._win_det_map[1].sum()) == 0
+    assert int(idx._win_senses[0]) == 3  # other shards untouched

@@ -150,3 +150,69 @@ def test_storage_accounting(ds):
     sb = sh.storage_bytes()
     assert sb["embeddings"] == 512 * 128  # slots * dim * 1 byte
     assert sb["live_docs"] == 512
+
+
+# ------------------------------------------------------ per-macro channels
+def test_shards_draw_independent_flips_for_the_same_query():
+    """Regression: two macros holding IDENTICAL rows must sample
+    different transient flips for the same query key (per-shard
+    `fold_in` keys), while the whole draw stays deterministic per key."""
+    rng = np.random.default_rng(0)
+    half = rng.normal(size=(64, 32)).astype(np.float32)
+    emb = jnp.asarray(np.concatenate([half, half]))  # shard 0 == shard 1
+    err = E.ErrorModelConfig(enabled=True, p_min=0.05, p_max=0.05)
+    cfg = RetrievalConfig(bits=8, path="bitserial", mapping="grouped",
+                          error=err, detect=False)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=2)
+    assert np.array_equal(np.asarray(sh.planes[0]), np.asarray(sh.planes[1]))
+    key = jax.random.key(7)
+    sensed = np.asarray(sh._sensed_planes(key))
+    assert not np.array_equal(sensed[0], sensed[1])  # independent channels
+    again = np.asarray(sh._sensed_planes(key))
+    np.testing.assert_array_equal(sensed, again)  # deterministic per key
+
+
+def test_calibration_jitter_diversifies_per_shard_mappings(ds):
+    """With cell-to-cell jitter each macro gets its own calibration map,
+    so the error-aware remapping differs per shard; without jitter every
+    macro is identical (the parity regime)."""
+    err = E.ErrorModelConfig(enabled=True, p_min=1e-3, p_max=5e-2,
+                             jitter_sigma=1.0, seed=5)
+    cfg = RetrievalConfig(bits=8, path="bitserial", mapping="error_aware",
+                          error=err)
+    emb = jnp.asarray(ds.doc_embeddings)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=4)
+    assert not np.array_equal(sh.believed_maps[0], sh.believed_maps[1])
+    assert any(
+        not np.array_equal(sh.mapping[0], sh.mapping[s]) for s in range(1, 4)
+    )
+    flat = E.ErrorModelConfig(enabled=True, p_min=1e-3, p_max=5e-2,
+                              jitter_sigma=0.0, seed=5)
+    cfg0 = RetrievalConfig(bits=8, path="bitserial", mapping="error_aware",
+                           error=flat)
+    sh0 = ShardedDircIndex.build(emb, cfg0, n_shards=4)
+    for s in range(1, 4):
+        np.testing.assert_array_equal(sh0.mapping[0], sh0.mapping[s])
+
+
+def test_stats_reports_per_shard_error_counters(ds):
+    err = E.ErrorModelConfig(enabled=True, p_min=2e-3, p_max=2e-2,
+                             jitter_sigma=0.5, seed=5)
+    cfg = RetrievalConfig(bits=8, path="bitserial", mapping="error_aware",
+                          error=err, detect=True, max_retries=2)
+    emb = jnp.asarray(ds.doc_embeddings)
+    q = jnp.asarray(ds.query_embeddings)
+    sh = ShardedDircIndex.build(emb, cfg, n_shards=4)
+    for wave in range(3):
+        sh.search(q, k=5, key=jax.random.key(wave))
+    st = sh.stats()
+    assert st["error_enabled"] and not st["drift_enabled"]
+    assert st["total_senses"] == 4 * 3
+    assert st["total_detected"] > 0
+    assert len(st["shards"]) == 4
+    for row in st["shards"]:
+        assert row["senses"] == 3
+        assert 0.0 <= row["detected_rate"] <= 1.0
+        assert row["residual_rate"] <= row["detected_rate"] + 1e-9
+        assert row["recal_events"] == 0
+        assert row["exposure"] > 0.0
