@@ -1,0 +1,317 @@
+"""SLO control plane under a two-priority diurnal+bursty mix.
+
+The claim under test (PR 10 / ROADMAP "Self-tuning serving control
+plane"): static serving knobs cannot hold a tail-latency target when
+low-priority batch jobs share the paged KV pool with latency-sensitive
+traffic — a long batch decode parks 6 of the pool's 7 usable blocks and
+every "pro" arrival that lands inside that window queues for the full
+residual service time. The SLO controller closes the loop: it polls the
+engine's completion feed on the serving clock and, under real pool
+pressure, preempts a strictly-lower-priority victim (publish resident
+KV to the retained tier -> release blocks -> re-queue; resume re-attaches
+and re-prefills only what eviction took), so pro requests admit in one
+step instead of one batch-job service time.
+
+Both cells of every load point replay the IDENTICAL arrival trace on a
+virtual clock (the engine and controller both run on the injected fake
+clock), so the comparison is pure policy — no host noise, no compile
+skew, bit-reproducible:
+
+  static   engine alone: priority-aware admission, no controller
+  slo      + SLOController(preempt=True) polled once per 10ms tick
+
+Arrivals: per-class Poisson gaps modulated by a diurnal sinusoid, with
+pro traffic additionally arriving in bursts; load cells scale the
+offered rate. Gates: pro-class SLO attainment under the controller must
+beat static by `min_attain_gap` at EVERY load cell, at least
+`min_preemptions` preemptions must actually fire, and every completed
+request in every cell must match per-query `GenerationEngine.generate`
+token-for-token (preempt/resume is only admissible if it is invisible
+in the tokens).
+
+Compute runs in fp32 (`compute_dtype` override) for the same reason as
+bench_router: greedy parity across differently-batched reduction orders
+needs fp32 headroom over the untrained smoke model's logit near-ties.
+
+Emits BENCH_slo.json (rows + config) for the CI perf artifact.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_slo [--tiny]
+         [--out BENCH_slo.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (
+    ContinuousBatchingEngine,
+    EngineConfig,
+    GenerationEngine,
+    SLOConfig,
+    SLOController,
+)
+
+FULL = {
+    "arch": "phi4-mini-3.8b",
+    "cache_len": 64,
+    "n_slots": 2,
+    "block_size": 8,
+    "pool_blocks": 7,  # usable blocks: one batch job parks 6 of them
+    "retain_blocks": 6,  # a preempted batch prefix survives on-device
+    "prefill_chunk": 16,
+    "step_ms": 10.0,  # virtual cost of one engine.step()
+    "horizon_s": 6.0,  # arrival window (virtual); drain runs past it
+    "diurnal_amp": 0.5,
+    "diurnal_period_s": 3.0,
+    "loads": [1.0, 1.5],
+    "pro": {"prompt": 8, "new": 4, "mean_gap_s": 0.18,
+            "burst_p": 0.25, "burst_n": 3, "burst_gap_s": 0.02},
+    "batch": {"prompt": 32, "new": 16, "mean_gap_s": 0.5},
+    "pro_target_ms": 120.0,
+    "batch_target_ms": 2000.0,
+    "min_attain_gap": 0.05,  # slo attainment - static attainment, per cell
+    "min_preemptions": 1,
+    "max_steps": 20000,
+}
+
+TINY = {
+    "arch": "phi4-mini-3.8b",
+    "cache_len": 64,
+    "n_slots": 2,
+    "block_size": 8,
+    "pool_blocks": 7,
+    "retain_blocks": 6,
+    "prefill_chunk": 16,
+    "step_ms": 10.0,
+    "horizon_s": 1.5,
+    "diurnal_amp": 0.5,
+    "diurnal_period_s": 1.0,
+    "loads": [1.0],
+    "pro": {"prompt": 8, "new": 4, "mean_gap_s": 0.15,
+            "burst_p": 0.25, "burst_n": 2, "burst_gap_s": 0.02},
+    "batch": {"prompt": 32, "new": 16, "mean_gap_s": 0.35},
+    "pro_target_ms": 120.0,
+    "batch_target_ms": 2000.0,
+    "min_attain_gap": 0.0,  # smoke shapes: still must not be WORSE
+    "min_preemptions": 0,
+    "max_steps": 20000,
+}
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, s):
+        self.t += s
+
+
+def _workload(bench_cfg: dict, load: float, vocab: int):
+    """One arrival trace shared by both policy cells of a load point.
+
+    Per-class Poisson gaps, thinned by the diurnal sinusoid (peak-hour
+    arrivals cluster); pro arrivals additionally fork into short bursts.
+    Returns [(t, cls, priority, prompt, max_new)] sorted by t."""
+    rng = np.random.default_rng(7 + int(load * 100))
+    arrivals = []
+
+    def emit(t, cls, priority):
+        spec = bench_cfg[cls]
+        prompt = rng.integers(0, vocab, size=spec["prompt"]).astype(np.int32)
+        arrivals.append((t, cls, priority, prompt, spec["new"]))
+
+    for cls, priority in (("batch", 0), ("pro", 1)):
+        spec = bench_cfg[cls]
+        t = rng.exponential(spec["mean_gap_s"] / load)
+        while t < bench_cfg["horizon_s"]:
+            diurnal = 1.0 + bench_cfg["diurnal_amp"] * math.sin(
+                2 * math.pi * t / bench_cfg["diurnal_period_s"])
+            if rng.uniform() < diurnal / (1.0 + bench_cfg["diurnal_amp"]):
+                emit(t, cls, priority)
+                if cls == "pro" and rng.uniform() < spec["burst_p"]:
+                    for j in range(1, spec["burst_n"]):
+                        emit(t + j * spec["burst_gap_s"], cls, priority)
+            t += rng.exponential(spec["mean_gap_s"] / load)
+    arrivals.sort(key=lambda a: a[0])
+    return arrivals
+
+
+def _engine_config(bench_cfg: dict) -> EngineConfig:
+    return EngineConfig(
+        n_slots=bench_cfg["n_slots"],
+        cache_len=bench_cfg["cache_len"],
+        paged=True,
+        block_size=bench_cfg["block_size"],
+        n_blocks=bench_cfg["pool_blocks"] + 1,  # + the null block
+        prefill_chunk=bench_cfg["prefill_chunk"],
+        prefix_sharing=True,
+        retain_blocks=bench_cfg["retain_blocks"],
+    )
+
+
+def _simulate(model, params, bench_cfg: dict, arrivals, policy: str):
+    """Replay one arrival trace on the virtual clock; returns the
+    completed (cls, ticket) records plus engine/controller counters."""
+    clock = _FakeClock()
+    eng = ContinuousBatchingEngine(model, params, _engine_config(bench_cfg),
+                                   clock=clock)
+    ctrl = None
+    if policy == "slo":
+        ctrl = SLOController(
+            SLOConfig(
+                e2e_p95_ms=bench_cfg["batch_target_ms"],
+                tenant_e2e_p95_ms={"pro": bench_cfg["pro_target_ms"]},
+                window_s=2.0, interval_s=0.05, min_samples=4,
+                preempt=True, max_preemptions_per_poll=1,
+            ),
+            engine=eng, clock=clock)
+    step_s = bench_cfg["step_ms"] / 1e3
+    recs, i, steps = [], 0, 0
+    t_wall = time.perf_counter()
+    while i < len(arrivals) or not all(t.done() for _, t in recs):
+        while i < len(arrivals) and arrivals[i][0] <= clock.t:
+            _, cls, priority, prompt, max_new = arrivals[i]
+            recs.append((cls, eng.submit(prompt, max_new_tokens=max_new,
+                                         tenant=cls, priority=priority)))
+            i += 1
+        eng.step()
+        clock.advance(step_s)
+        if ctrl is not None:
+            ctrl.poll()
+        steps += 1
+        if steps > bench_cfg["max_steps"]:
+            raise SystemExit(
+                f"{policy} cell did not drain within "
+                f"{bench_cfg['max_steps']} steps — pool livelock?")
+    est = eng.stats()
+    cst = ctrl.stats() if ctrl is not None else None
+    if ctrl is not None:
+        ctrl.close()
+    eng.close()
+    wall_s = time.perf_counter() - t_wall
+    return recs, est, cst, steps, clock.t, wall_s
+
+
+def _attainment(recs, cls: str, target_ms: float):
+    lat = [t.wait_s * 1e3 for c, t in recs if c == cls]
+    met = sum(1 for v in lat if v <= target_ms)
+    arr = np.asarray(lat, np.float64)
+    p95 = float(np.percentile(arr, 95)) if arr.size else 0.0
+    return (met / len(lat) if lat else 1.0), p95, len(lat)
+
+
+def run(bench_cfg: dict) -> list[dict]:
+    cfg = dataclasses.replace(
+        get_config(bench_cfg["arch"], smoke=True),
+        compute_dtype="float32",
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    baseline = GenerationEngine(model, params)
+
+    rows = []
+    for load in bench_cfg["loads"]:
+        arrivals = _workload(bench_cfg, load, cfg.vocab_size)
+        refs = []
+        for _, _, _, prompt, max_new in arrivals:
+            out = baseline.generate(np.asarray(prompt)[None],
+                                    max_new_tokens=max_new,
+                                    cache_len=len(prompt) + max_new)
+            refs.append(np.asarray(out)[0])
+        for policy in ("static", "slo"):
+            recs, est, cst, steps, virtual_s, wall_s = _simulate(
+                model, params, bench_cfg, arrivals, policy)
+            parity = all(
+                np.array_equal(np.asarray(t.result()), ref)
+                for (_, t), ref in zip(recs, refs))
+            pro_att, pro_p95, n_pro = _attainment(
+                recs, "pro", bench_cfg["pro_target_ms"])
+            batch_att, batch_p95, n_batch = _attainment(
+                recs, "batch", bench_cfg["batch_target_ms"])
+            rows.append({
+                "cell": f"load{load:g}-{policy}",
+                "load": load,
+                "policy": policy,
+                "n_pro": n_pro,
+                "n_batch": n_batch,
+                "pro_target_ms": bench_cfg["pro_target_ms"],
+                "pro_attainment": pro_att,
+                "pro_p95_ms": pro_p95,
+                "batch_attainment": batch_att,
+                "batch_p95_ms": batch_p95,
+                "n_preemptions": est["n_preemptions"],
+                "n_resumes": est["n_resumes"],
+                "n_weight_updates": (cst["n_weight_updates"]
+                                     if cst else 0),
+                "n_polls": cst["n_polls"] if cst else 0,
+                "parity": parity,
+                "steps": steps,
+                "virtual_s": virtual_s,
+                "wall_s": wall_s,
+            })
+    return rows
+
+
+def _cell(rows, load: float, policy: str) -> dict:
+    for r in rows:
+        if r["load"] == load and r["policy"] == policy:
+            return r
+    raise KeyError((load, policy))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true", help="CI smoke shapes")
+    ap.add_argument("--out", default="BENCH_slo.json")
+    args = ap.parse_args(argv)
+    cfg = TINY if args.tiny else FULL
+    rows = run(cfg)
+
+    print("cell,n_pro,pro_attain,pro_p95_ms,batch_p95_ms,"
+          "preempts,resumes,parity")
+    for r in rows:
+        print(f"{r['cell']},{r['n_pro']},{r['pro_attainment']:.2f},"
+              f"{r['pro_p95_ms']:.0f},{r['batch_p95_ms']:.0f},"
+              f"{r['n_preemptions']},{r['n_resumes']},{r['parity']}")
+
+    bad = [r for r in rows if not r["parity"]]
+    if bad:
+        raise SystemExit(f"greedy parity violated in {len(bad)} cells "
+                         f"({[r['cell'] for r in bad]})")
+    total_preempts = sum(
+        r["n_preemptions"] for r in rows if r["policy"] == "slo")
+    for load in cfg["loads"]:
+        st, sl = _cell(rows, load, "static"), _cell(rows, load, "slo")
+        gap = sl["pro_attainment"] - st["pro_attainment"]
+        print(f"load {load:g}: pro SLO attainment "
+              f"{st['pro_attainment']:.2f} (static) -> "
+              f"{sl['pro_attainment']:.2f} (controller, "
+              f"{sl['n_preemptions']} preemptions), gap +{gap:.2f}")
+        if gap < cfg["min_attain_gap"]:
+            raise SystemExit(
+                f"load {load:g}: controller attainment gap {gap:.2f} < "
+                f"{cfg['min_attain_gap']} over static")
+    if total_preempts < cfg["min_preemptions"]:
+        raise SystemExit(
+            f"{total_preempts} preemptions fired < "
+            f"{cfg['min_preemptions']} — the controller never actuated")
+
+    with open(args.out, "w") as f:
+        json.dump({"config": dict(cfg), "rows": rows}, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@
   bench_prefix_sharing -> CoW prefix sharing vs private blocks at equal HBM
   bench_prefix_cache -> tiered prefix retention + host offload, Zipf sweep
   bench_router     -> replicated-engine fleet scaling + prefix affinity
+  bench_slo        -> SLO controller + priority preemption vs static knobs
   bench_drift      -> temporal drift vs the online recalibration loop
   roofline_report  -> dry-run roofline tables (EXPERIMENTS.md source)
 
@@ -25,7 +26,7 @@ from . import (bench_async_serving, bench_continuous_batching,
                bench_drift, bench_error_opt, bench_kernels, bench_latency,
                bench_paged_cache, bench_precision, bench_prefix_cache,
                bench_prefix_sharing, bench_router, bench_sharded,
-               bench_simulator, roofline_report)
+               bench_simulator, bench_slo, roofline_report)
 
 SECTIONS = [
     ("Table I — DIRC-RAG spec (calibrated model)", bench_simulator),
@@ -40,6 +41,7 @@ SECTIONS = [
     ("CoW prefix sharing on the paged pool", bench_prefix_sharing),
     ("Tiered prefix retention + host offload", bench_prefix_cache),
     ("Replicated-engine fleet + prefix affinity", bench_router),
+    ("SLO controller + priority preemption", bench_slo),
     ("Drift vs the online recalibration loop", bench_drift),
     ("Roofline (from multi-pod dry-run)", roofline_report),
 ]

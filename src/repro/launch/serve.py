@@ -24,8 +24,14 @@ paged attention through the fused Pallas flash-decoding kernel
 --n-replicas N serves decode from an EngineRouter fleet of N replicated
 engines with prefix-affinity placement (--no-affinity falls back to
 least-loaded routing), adding per-replica submit and affinity
-hit/miss/spill counters to the report. --json FILE ('-' = stdout)
-additionally emits any --rag report as machine-readable JSON.
+hit/miss/spill counters to the report. --slo-ttft-ms/--slo-e2e-ms
+attach the self-tuning SLO controller (serving/slo_controller.py) to
+the run: measured per-tenant p95s drive the scheduler deadline, the
+admission lookahead, DRR tenant weights, and (with --hi-pri-tenants N
+marking a protected priority class) preemption of running low-priority
+decodes; the report gains an "slo" counter block. --json FILE
+('-' = stdout) additionally emits any --rag report as machine-readable
+JSON.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
@@ -65,7 +71,8 @@ from repro.serving import (
     HashEmbedder,
     RagPipeline,
     RouterConfig,
-    SchedulerError,
+    SLOConfig,
+    SLOController,
 )
 from repro.serving.config import resolve_config
 
@@ -199,13 +206,21 @@ def _sum_pools(pools: list) -> dict:
     return out
 
 
+def _pct(values, q) -> float:
+    """np.percentile that reports 0.0 for an empty sample instead of
+    crashing (np.percentile([]) raises) — a run that served nothing
+    still needs a well-formed, NaN-free report."""
+    arr = np.asarray(values, np.float64)
+    return float(np.percentile(arr, q)) if arr.size else 0.0
+
+
 def _percentiles_ms(wait_s) -> dict:
     lat = np.asarray(wait_s, np.float64) * 1e3
     return {
-        "p50_ms": float(np.percentile(lat, 50)),
-        "p95_ms": float(np.percentile(lat, 95)),
-        "p99_ms": float(np.percentile(lat, 99)),
-        "mean_ms": float(lat.mean()),
+        "p50_ms": _pct(lat, 50),
+        "p95_ms": _pct(lat, 95),
+        "p99_ms": _pct(lat, 99),
+        "mean_ms": float(lat.mean()) if lat.size else 0.0,
     }
 
 
@@ -361,18 +376,17 @@ def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
     wall = time.perf_counter() - t0
 
     # a failed flush leaves wait_s=None on its tickets; report them as
-    # n_failed instead of poisoning the percentile math
+    # n_failed instead of poisoning the percentile math. A run that
+    # served NOTHING still returns a well-formed zeroed report (the
+    # percentile helpers are empty-safe) — callers decide what a
+    # 0-served run means from n_failed, not from a crash.
     served = [t for t in tickets if t.wait_s is not None]
-    if not served:
-        raise SchedulerError(
-            f"open-loop run served 0/{n_queries} queries "
-            f"({sched.n_failed} failed)")
     per_tenant = {}
     for t in served:
         per_tenant.setdefault(t.tenant, []).append(t.wait_s)
     out = {
         "offered_qps": offered_qps,
-        "achieved_qps": n_queries / wall,
+        "achieved_qps": len(served) / wall,
         "n_queries": n_queries,
         "n_failed": sched.n_failed,
         "n_tenants": n_tenants,
@@ -383,8 +397,8 @@ def serve_rag_open_loop(n_docs: int = 512, n_shards: int = 4, dim: int = 256,
         "mean_batch": sched.stats()["mean_batch"],
         "batch_hist": sched.batch_size_hist(),
         "per_tenant_p95_ms": {
-            name: float(np.percentile(np.asarray(w) * 1e3, 95))
-            for name, w in sorted(per_tenant.items())
+            name: _pct(np.asarray(w) * 1e3, 95)
+            for name, w in sorted(per_tenant.items()) if w
         },
     }
     out.update(_percentiles_ms([t.wait_s for t in served]))
@@ -412,6 +426,8 @@ def serve_rag_open_loop_generate(
         arch: str = "phi4-mini-3.8b", path: str = "int_exact",
         seed: int = 0, sense_errors: bool = False, drift_mag: float = 0.0,
         recal: bool = False,
+        slo: Optional[SLOConfig] = None,
+        hi_pri_tenants: int = 0,
         pipe: Optional[RagPipeline] = None) -> dict:
     """Open-loop retrieval+generation through the shared streaming front door.
 
@@ -444,6 +460,15 @@ def serve_rag_open_loop_generate(
     single engine; the report then adds `n_replicas`,
     `per_replica_submits`, and the affinity hit/miss/spill counters,
     with occupancy and pool counters aggregated over all replicas.
+
+    `slo=SLOConfig(...)` attaches an `SLOController` (background poll
+    thread) wired to the scheduler and engine for the duration of the
+    run — tightening/relaxing the flush deadline and admission
+    lookahead, rebalancing tenant weights, and preempting low-priority
+    decodes under pool pressure; its final counters land in the report
+    under `"slo"`. `hi_pri_tenants=N` submits the first N tenants'
+    traffic at priority 1 (everyone else 0), giving the preemption
+    actuator a two-class mix to work with.
     """
     if pipe is None:
         pipe = build_rag_pipeline(n_docs=n_docs, n_shards=n_shards, dim=dim,
@@ -484,6 +509,11 @@ def serve_rag_open_loop_generate(
             timeout=120.0)
     warm_stats = engine.stats()  # exclude warm-up from occupancy reporting
 
+    controller = None
+    if slo is not None:
+        controller = SLOController(slo, engine=engine, scheduler=sched,
+                                   start=True)
+
     gens: list = []
     n_chain_failed = [0]
 
@@ -493,29 +523,37 @@ def serve_rag_open_loop_generate(
             prompt, prefix_len = pipe.encode_prompt_with_prefix(
                 rt.text, texts_k)
             gt = engine.submit(prompt, max_new_tokens=max_new_tokens,
-                               tenant=rt.tenant, prefix_len=prefix_len)
+                               tenant=rt.tenant, prefix_len=prefix_len,
+                               priority=getattr(rt, "priority", 0))
             gt.retrieval = rt
             gens.append(gt)
         except Exception:  # noqa: BLE001 - failed retrieval or closed engine
             n_chain_failed[0] += 1  # count it instead of vanishing silently
 
     def submit(i):
-        sched.submit(queries[i], k=k,
-                     tenant=f"tenant{arrival_tenant[i]}") \
-             .add_done_callback(on_retrieved)
+        ticket = sched.submit(queries[i], k=k,
+                              tenant=f"tenant{arrival_tenant[i]}")
+        # the priority class rides retrieval onto the decode submit
+        ticket.priority = 1 if arrival_tenant[i] < hi_pri_tenants else 0
+        ticket.add_done_callback(on_retrieved)
 
     t0 = _pace_arrivals(gaps, submit)
     sched.close(drain=True)
+    slo_stats = None
+    if controller is not None:
+        # stop actuating before the engine drains its tail; the final
+        # counters describe exactly the paced-traffic window
+        slo_stats = controller.stats()
+        controller.close()
     engine.close(drain=True)
     wall = time.perf_counter() - t0
 
     # _finish stamps wait_s even on error tickets: require a clean finish
-    # with a first token, or the TTFT/e2e math below would see Nones
+    # with a first token, or the TTFT/e2e math below would see Nones.
+    # done == [] still yields a zeroed report (see _pct) — a fully
+    # failed run reports n_failed == n_queries rather than crashing.
     done = [g for g in gens
             if g.done() and g._error is None and g.first_token_s is not None]
-    if not done:
-        raise SchedulerError(
-            f"open-loop generate run finished 0/{n_queries} requests")
     # end-to-end: retrieval submit (arrival) -> last generated token, on
     # the shared monotonic clock the scheduler and engine both stamp
     e2e_s = [(g.submit_time + g.wait_s) - g.retrieval.submit_time
@@ -560,11 +598,10 @@ def serve_rag_open_loop_generate(
         "n_decode_steps": n_steps,
         "mean_slot_occupancy": mean_occ,
         "occupancy_hist": occ_hist,
-        "ttft_p50_ms": float(np.percentile(np.asarray(ttft_s) * 1e3, 50)),
-        "ttft_p95_ms": float(np.percentile(np.asarray(ttft_s) * 1e3, 95)),
+        "ttft_p50_ms": _pct(np.asarray(ttft_s) * 1e3, 50),
+        "ttft_p95_ms": _pct(np.asarray(ttft_s) * 1e3, 95),
         "per_token_ms_mean": float(np.mean(per_tok_ms)) if per_tok_ms else 0.0,
-        "per_token_ms_p95": float(np.percentile(per_tok_ms, 95))
-        if per_tok_ms else 0.0,
+        "per_token_ms_p95": _pct(per_tok_ms, 95),
         "paged": replicas[0].paged,
     }
     if fleet:
@@ -588,6 +625,9 @@ def serve_rag_open_loop_generate(
         pools = [e["pool"] for e in eng_stats if "pool" in e]
         if pools:
             out["pool"] = _sum_pools(pools)
+    if slo_stats is not None:
+        out["slo"] = slo_stats
+        out["hi_pri_tenants"] = hi_pri_tenants
     out.update(_percentiles_ms(e2e_s))
     return _attach_retrieval_stats(out, pipe)
 
@@ -680,6 +720,29 @@ def main() -> None:
                     help="--n-replicas: spill an affinity-routed request "
                          "to the least-loaded replica once its holder is "
                          "this many requests deeper (default: n_slots)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="--generate: p95 time-to-first-token target (ms); "
+                         "setting this (or --slo-e2e-ms) attaches the "
+                         "SLOController — live max-wait/lookahead/weight "
+                         "actuation + priority preemption (serving/"
+                         "slo_controller.py)")
+    ap.add_argument("--slo-e2e-ms", type=float, default=None,
+                    help="--generate: p95 end-to-end latency target (ms) "
+                         "for the SLO controller")
+    ap.add_argument("--slo-window-s", type=float, default=10.0,
+                    help="--slo-*: sliding sample window (seconds)")
+    ap.add_argument("--slo-interval-s", type=float, default=1.0,
+                    help="--slo-*: actuation interval (seconds)")
+    ap.add_argument("--slo-preempt", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="--slo-*: allow the controller to preempt running "
+                         "low-priority decodes when a higher-priority "
+                         "request is blocked on the pool "
+                         "(--no-slo-preempt disables)")
+    ap.add_argument("--hi-pri-tenants", type=int, default=0,
+                    help="--generate: submit the first N tenants' traffic "
+                         "at priority 1 (preemption's protected class); "
+                         "the rest submit at priority 0")
     ap.add_argument("--json", metavar="FILE", default=None,
                     help="--rag: also emit the report dict as JSON to FILE "
                          "('-' = stdout), alongside the human-readable "
@@ -694,6 +757,13 @@ def main() -> None:
             paged_kernel=args.paged_kernel,
             retain_blocks=args.retain_blocks,
             host_blocks=args.host_blocks)
+        slo = None
+        if args.slo_ttft_ms is not None or args.slo_e2e_ms is not None:
+            slo = SLOConfig(ttft_p95_ms=args.slo_ttft_ms,
+                            e2e_p95_ms=args.slo_e2e_ms,
+                            window_s=args.slo_window_s,
+                            interval_s=args.slo_interval_s,
+                            preempt=args.slo_preempt)
         out = serve_rag_open_loop_generate(
             n_docs=args.rag_docs, n_shards=args.n_shards,
             max_batch=args.batch, max_wait_ms=args.max_wait_ms,
@@ -705,7 +775,8 @@ def main() -> None:
             max_imbalance=args.max_imbalance,
             arch=args.arch or "phi4-mini-3.8b",
             sense_errors=args.sense_errors, drift_mag=args.drift_mag,
-            recal=args.recal)
+            recal=args.recal,
+            slo=slo, hi_pri_tenants=args.hi_pri_tenants)
         print(f"open-loop generate: offered {out['offered_qps']:.0f} q/s, "
               f"finished {out['n_finished']}/{out['n_queries']} requests "
               f"({out['achieved_qps']:.1f} q/s end-to-end)")
@@ -753,6 +824,14 @@ def main() -> None:
                       f"({pool.get('host_bytes', 0)} bytes) resident, "
                       f"{pool.get('n_host_hits', 0)} swap-ins, host hit "
                       f"rate {pool.get('host_hit_rate', 0.0):.2f}")
+        if "slo" in out:
+            s = out["slo"]
+            print(f"slo: {s['n_polls']} polls, {s['n_tightens']} tightens / "
+                  f"{s['n_relaxes']} relaxes, {s['n_weight_updates']} "
+                  f"weight updates, {s['n_preemptions']} preemptions, "
+                  f"worst p95/target {s['worst_ratio']:.2f}, final "
+                  f"max_wait {s['max_wait_ms']} ms / lookahead "
+                  f"{s['admit_lookahead']}")
         _print_retrieval_stats(out)
         if args.json:
             _emit_json(out, args.json)

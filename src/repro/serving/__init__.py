@@ -1,24 +1,33 @@
 """repro.serving — the serving stack, from front door to device pools.
 
-Architecture overview (request path, top to bottom):
+Architecture overview (request path, top to bottom, then the control
+plane that closes the loop around all of it):
 
 * **Scheduler** — `async_scheduler.AsyncBatchScheduler`: the streaming
   retrieval front door. Batches queries on a dual trigger (max_batch OR
   max_wait_ms) with weighted deficit-round-robin tenant fairness and
-  futures-style `AsyncTicket`s.
+  futures-style `AsyncTicket`s. The deadline and the tenant weights are
+  live-tunable (`set_max_wait_ms` / `set_tenant_weight`) — they are the
+  scheduler-side actuators of the controller below.
 * **Router** — `router.EngineRouter`: the fleet layer. N replicated
   decode engines behind one `submit()`, least-loaded placement with
   prefix-affinity (same-context-hash requests land on the replica that
   already holds the prefix KV, bounded by an imbalance guard), fleet
-  `stats()` rollup and `clear_prefix_cache()` fan-out. Fleet shape
-  lives in `config.RouterConfig`.
+  `stats()` rollup and fan-out for `clear_prefix_cache()` and the
+  control-plane hooks (`pop_completions`, `set_admit_lookahead`,
+  `preempt_for_waiting`). Fleet shape lives in `config.RouterConfig`.
 * **Engine** — `continuous_batching.ContinuousBatchingEngine`: one
   replica. An `n_slots`-wide decode batch over a single jitted step
   with iteration-level admission/retirement, chunked prefill
   interleaved with decode, and token-streaming `GenerationTicket`s.
-  Replica shape lives in `config.EngineConfig` (the per-knob spelling
-  is a deprecation shim through `config.resolve_config`). The simpler
-  per-query `engine.GenerationEngine` remains as the parity oracle.
+  Requests carry a `priority`: admission prefers higher priorities
+  within the skip-ahead window, and `preempt()` can release a running
+  low-priority sequence's blocks (its resident KV republished to the
+  retained tier first, so resumption is a re-attach + suffix prefill)
+  and re-queue it. Replica shape lives in `config.EngineConfig` (the
+  per-knob spelling is a deprecation shim through
+  `config.resolve_config`). The simpler per-query
+  `engine.GenerationEngine` remains as the parity oracle.
 * **Paged pool** — `paged_cache.PagedCacheManager`: the KV memory
   subsystem under the slots. Refcounted content-addressed block
   allocator with worst-case reservation + `OutOfBlocks` backpressure,
@@ -28,19 +37,28 @@ Architecture overview (request path, top to bottom):
   `models/attention.paged_attend`): the fused Pallas paged-attention
   decode step that walks the block table in-kernel; the dense-window
   gather path is kept as its parity oracle.
+* **Controller** — `slo_controller.SLOController`: the control plane.
+  Samples per-tenant p95 TTFT/e2e from the engine/router completion
+  feed over a sliding window and actuates the layers above against a
+  frozen `config.SLOConfig`: tightens/relaxes the scheduler deadline
+  and the engine's admission lookahead, rebalances DRR tenant weights,
+  and fires priority preemption under pool pressure. Runs on the same
+  injectable clock as everything else, so the whole loop is
+  deterministic on a fake clock.
 
 `rag_pipeline.RagPipeline` ties retrieval to generation end-to-end
 (scheduler-batched search chaining into engine/router decode slots via
 `query_stream(generate=True)`), and `launch/serve.py` drives the whole
-stack under open-loop Poisson traffic. Retrieval itself scales out
-separately in `repro.core.sharded_index` (device-mesh sharded scoring).
+stack — controller included (`--slo-*`) — under open-loop Poisson
+traffic. Retrieval itself scales out separately in
+`repro.core.sharded_index` (device-mesh sharded scoring).
 """
 from .async_scheduler import (  # noqa: F401
     AsyncBatchScheduler,
     AsyncTicket,
     SchedulerError,
 )
-from .config import EngineConfig, RouterConfig  # noqa: F401
+from .config import EngineConfig, RouterConfig, SLOConfig  # noqa: F401
 from .continuous_batching import (  # noqa: F401
     ContinuousBatchingEngine,
     GenerationTicket,
@@ -49,3 +67,4 @@ from .paged_cache import OutOfBlocks, PagedCacheManager  # noqa: F401
 from .engine import BatchScheduler, BatchTicket, GenerationEngine  # noqa: F401
 from .rag_pipeline import HashEmbedder, RagPipeline, RagResult  # noqa: F401
 from .router import EngineRouter  # noqa: F401
+from .slo_controller import SLOController  # noqa: F401

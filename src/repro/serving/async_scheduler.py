@@ -239,10 +239,33 @@ class AsyncBatchScheduler:
             raise ValueError(f"tenant weight must be finite and > 0, got {weight!r}")
 
     def set_tenant_weight(self, tenant: str, weight: float) -> None:
-        """Set `tenant`'s DRR weight (takes effect from its next visit)."""
+        """Set `tenant`'s DRR weight (takes effect from its next visit).
+
+        Taken under the queue lock so the background flush thread never
+        sees a half-applied update mid-rotation. The tenant's stored
+        deficit is reset with the weight: leftover credit was earned at
+        the OLD weight, and letting a demoted tenant spend it would let
+        it overdraw its new share for a whole extra round (audit fix —
+        the documented "from its next visit" contract now actually
+        holds under demotion).
+        """
         self._check_weight(weight)
         with self._cv:
             self._weights[tenant] = float(weight)
+            self._credit.pop(tenant, None)
+
+    def set_max_wait_ms(self, max_wait_ms: Optional[float]) -> None:
+        """Retune the deadline trigger on a live scheduler (an SLO
+        controller actuator). Taken under the queue lock AND notifying
+        the flush thread: without the wake-up a thread parked on
+        `wait(None)` (deadline previously disabled) would never observe
+        the new deadline until an unrelated submit arrived.
+        """
+        if max_wait_ms is not None and max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0 (or None to disable)")
+        with self._cv:
+            self.max_wait_ms = max_wait_ms
+            self._cv.notify_all()
 
     def tenant_weight(self, tenant: str) -> float:
         with self._cv:

@@ -113,26 +113,42 @@ class GenerationTicket:
     Filled in by the engine as decoding progresses: `tokens` grows one id
     per emitted token, `first_token_s` is the submit->first-token latency
     (TTFT) and `wait_s` the submit->finish latency, both on the engine's
-    clock. `slot` is the decode slot the request occupied.
+    clock. `slot` is the decode slot the request occupied. `priority`
+    orders admission and shields the request from preemption
+    (`n_preempted` counts how often it was preempted; TTFT/e2e stamps
+    span the whole request, preemptions included).
     """
 
     def __init__(self, engine: "ContinuousBatchingEngine", prompt: np.ndarray,
-                 max_new_tokens: int, tenant: str):
+                 max_new_tokens: int, tenant: str, priority: int = 0):
         self._engine = engine
         self.prompt = prompt
         self.max_new_tokens = max_new_tokens
         self.tenant = tenant
+        self.priority = priority
         self.submit_time = engine._clock()
         self.first_token_s: Optional[float] = None
         self.wait_s: Optional[float] = None
         self.slot: Optional[int] = None
         self.prefix_key: Optional[str] = None  # content hash of the
         self.prefix_span: int = 0  # shareable prompt prefix (paged mode)
+        self.n_preempted = 0
+        # after a preemption: prompt + tokens emitted so far — what a
+        # re-admission must make resident before decoding can continue
+        self._resume_prompt: Optional[np.ndarray] = None
         self.tokens: list[int] = []
         self._token_q: _queue.SimpleQueue = _queue.SimpleQueue()
         self._event = threading.Event()
         self._error: Optional[BaseException] = None
         self._callbacks: list = []
+
+    @property
+    def seq_prompt(self) -> np.ndarray:
+        """The token sequence admission must prefill: the original
+        prompt, or (after a preemption) prompt + already-emitted tokens —
+        resumption re-materializes the whole sequence, attaching the
+        republished prefix where the pool still holds it."""
+        return self.prompt if self._resume_prompt is None else self._resume_prompt
 
     def done(self) -> bool:
         """True once finished or failed (result() will not block)."""
@@ -213,6 +229,11 @@ class GenerationTicket:
             self.wait_s = self._engine._clock() - self.submit_time
             self._event.set()
             callbacks, self._callbacks = self._callbacks, []
+            if error is None and self.first_token_s is not None:
+                # latency sample for the SLO control plane (slo_controller)
+                self._engine._completions.append((
+                    self._engine._clock(), self.tenant, self.priority,
+                    self.first_token_s, self.wait_s))
         self._token_q.put(_DONE)
         for fn in callbacks:
             try:
@@ -460,7 +481,13 @@ class ContinuousBatchingEngine:
         self.n_failed = 0
         self.n_backpressure = 0  # admissions deferred by pool exhaustion
         self.n_skip_ahead = 0  # admissions that jumped a deferred head
+        self.n_preemptions = 0  # running sequences released + re-queued
+        self.n_resumes = 0  # preempted sequences re-admitted
         self.peak_active = 0
+        # finished-request latency samples for the SLO control plane:
+        # (finish clock, tenant, priority, ttft_s, e2e_s); bounded so an
+        # undrained engine never grows without bound
+        self._completions: deque = deque(maxlen=4096)
         # prefix keys being published: key -> owning slot. Requests with a
         # matching key are deferred in the queue (skip-ahead lets others
         # pass) and attach the registered blocks on a later boundary.
@@ -628,6 +655,7 @@ class ContinuousBatchingEngine:
         max_new_tokens: int = 32,
         tenant: str = DEFAULT_TENANT,
         prefix_len: Optional[int] = None,
+        priority: int = 0,
     ) -> GenerationTicket:
         """Enqueue one prompt; returns immediately with a GenerationTicket.
 
@@ -648,6 +676,12 @@ class ContinuousBatchingEngine:
         with copy-on-write divergence. Ignored when sharing is off;
         `None` offers the whole prompt. The final prompt token is never
         shared — it is always recomputed to produce the first logits.
+
+        `priority` (default 0, higher wins) orders paged admission
+        within the skip-ahead window and shields the request from
+        `preempt()`: only a strictly lower-priority running sequence may
+        be preempted on its behalf. Equal priorities reduce to the
+        FIFO-with-skip-ahead behaviour exactly.
         """
         prompt = np.asarray(list(prompt), np.int32)
         if prompt.ndim != 1 or prompt.size == 0:
@@ -668,7 +702,7 @@ class ContinuousBatchingEngine:
             raise SchedulerError(
                 f"request needs {prompt.size} prompt + {max_new_tokens} new "
                 f"tokens but cache_len is {self.cache_len}")
-        t = GenerationTicket(self, prompt, max_new_tokens, tenant)
+        t = GenerationTicket(self, prompt, max_new_tokens, tenant, priority)
         t.prefix_key, t.prefix_span = self.compute_prefix_key(
             prompt, prefix_len)
         with self._cv:
@@ -746,7 +780,9 @@ class ContinuousBatchingEngine:
 
         Paged mode only (int): `n_prefill_chunks`, `n_backpressure`
         (admissions deferred by pool exhaustion), `n_skip_ahead`
-        (admissions that jumped a deferred head), `prefill_chunk`.
+        (admissions that jumped a deferred head), `prefill_chunk`,
+        `n_preemptions` (running sequences released + re-queued) and
+        `n_resumes` (preempted sequences re-admitted).
 
         Pageable-KV mode only: `prefix_sharing` (bool), `paged_kernel`
         (bool or None — None defers to the model config), and `pool`,
@@ -773,6 +809,8 @@ class ContinuousBatchingEngine:
                 out["n_backpressure"] = self.n_backpressure
                 out["n_skip_ahead"] = self.n_skip_ahead
                 out["prefill_chunk"] = self.prefill_chunk
+                out["n_preemptions"] = self.n_preemptions
+                out["n_resumes"] = self.n_resumes
             if self._kv_paged:
                 out["prefix_sharing"] = self.prefix_sharing
                 out["paged_kernel"] = self.paged_kernel
@@ -865,13 +903,15 @@ class ContinuousBatchingEngine:
         with self._cv:
             self.n_prefills += 1
             self.n_tokens += 1
+            # len(tokens), not 1: a resumed sequence re-enters here with
+            # its pre-preemption output already emitted
             if (self.eos_id is not None and tok == self.eos_id) \
-                    or ticket.max_new_tokens == 1:
+                    or len(ticket.tokens) >= ticket.max_new_tokens:
                 self._retire_locked(slot)
                 finish = True
             else:
                 self._cur[slot, 0] = tok
-                self._emitted[slot] = 1
+                self._emitted[slot] = len(ticket.tokens)
                 finish = False
         if finish:
             ticket._finish()
@@ -910,12 +950,20 @@ class ContinuousBatchingEngine:
                          if self._head_skips < self.max_head_skips else 0)
             ticket = None
             head_deferred = False
-            for cand in waiting[: 1 + lookahead]:
+            window = waiting[: 1 + lookahead]
+            # probe highest priority first (stable within a priority, so
+            # the all-default-priority case reduces to FIFO order and
+            # probes exactly the candidates the pre-priority engine did)
+            order = sorted(range(len(window)),
+                           key=lambda i: (-window[i].priority, i))
+            for i in order:
+                cand = window[i]
                 if self._kv_paged:
                     if (cand.prefix_key is not None
                             and cand.prefix_key in self._publishing):
                         continue  # prefix mid-publication: attach later
-                    need = int(cand.prompt.size) + cand.max_new_tokens
+                    need = (int(cand.seq_prompt.size)
+                            + cand.max_new_tokens - len(cand.tokens))
                     if not self._pcm.can_reserve(
                             need, prefix_key=cand.prefix_key):
                         if cand is head:
@@ -940,8 +988,11 @@ class ContinuousBatchingEngine:
                     continue
                 slot = free[0]
                 self._slots[slot] = ticket
+                if ticket._resume_prompt is not None:
+                    self.n_resumes += 1
             if self._kv_paged:
-                need = int(ticket.prompt.size) + ticket.max_new_tokens
+                need = (int(ticket.seq_prompt.size)
+                        + ticket.max_new_tokens - len(ticket.tokens))
                 self._pcm.reserve(slot, need, prefix_key=ticket.prefix_key)
                 shared = self._pcm.shared_tokens(slot)
                 self._lengths[slot] = shared
@@ -1005,7 +1056,7 @@ class ContinuousBatchingEngine:
         Returns (done, logits) where `logits` is only meaningful at
         completion (the model's output at the prompt's last position).
         """
-        prompt = pre.ticket.prompt
+        prompt = pre.ticket.seq_prompt
         n = min(self.prefill_chunk, int(prompt.size) - pre.pos)
         if self._kv_paged:
             self._pcm.ensure(slot, pre.pos + n)
@@ -1113,6 +1164,130 @@ class ContinuousBatchingEngine:
         for ticket in finished:
             ticket._finish()
         return emitted
+
+    # ------------------------------------------------- priority preemption
+    def _preempt_locked(self, priority_below: Optional[int] = None) -> bool:
+        """Preempt one running sequence; caller holds the step lock.
+
+        Victim: the decode-phase slot (mid-prefill sequences are never
+        preempted — their first token is imminent) with the LOWEST
+        priority, tie-broken by smallest resident length (cheapest to
+        resume). With `priority_below`, only a victim of strictly lower
+        priority qualifies. Returns True when a sequence was preempted.
+
+        Pageable-KV mode publishes the victim's resident KV span under
+        its content hash BEFORE freeing the blocks, so with retention
+        enabled resumption is a prefix re-attach + one-token suffix
+        prefill instead of a full re-prefill (bit-identical KV either
+        way — the span is re-derived from the same tokens).
+        """
+        with self._cv:
+            cands = [
+                (t.priority,
+                 int(self._lengths[s]) if self._kv_paged else 0, s, t)
+                for s, t in enumerate(self._slots)
+                if t is not None and s not in self._prefills]
+        if not cands:
+            return False
+        pri, _, slot, ticket = min(cands)
+        if priority_below is not None and pri >= priority_below:
+            return False
+        full = np.concatenate(
+            [ticket.prompt, np.asarray(ticket.tokens, np.int32)])
+        key, span = None, 0
+        if self._kv_paged:
+            # resident KV covers full[:lengths] (the newest token's KV is
+            # written on its NEXT decode step) — exactly the default
+            # shareable span of the resume prompt, so the re-admission's
+            # content key matches this publication
+            span = int(self._lengths[slot])
+            if span >= self.block_size:
+                key = hashlib.sha1(full[:span].tobytes()).hexdigest()
+                self._pcm.register_prefix(key, slot, span)
+        self._release_slot(slot)
+        with self._cv:
+            self._slots[slot] = None
+            self._cur[slot, 0] = self._pad_id
+            self._emitted[slot] = 0
+            ticket._resume_prompt = full
+            ticket.prefix_key, ticket.prefix_span = key, span
+            ticket.slot = None
+            ticket.n_preempted += 1
+            self.n_preemptions += 1
+            self._waiting.append(ticket)
+            self._cv.notify_all()
+        return True
+
+    def preempt(self, priority_below: Optional[int] = None) -> bool:
+        """Release the lowest-priority running sequence's slot and pool
+        blocks and re-queue it to resume later (see `_preempt_locked`).
+        Paged engines only — fixed-slot mode has no block pool to
+        release into and returns False. Returns True when a sequence
+        was preempted."""
+        if not self.paged:
+            return False
+        with self._step_lock:
+            return self._preempt_locked(priority_below)
+
+    def preempt_for_waiting(self, max_preemptions: int = 1) -> int:
+        """Preempt lower-priority running sequences so the best waiting
+        request can admit; returns preemptions performed (<=
+        `max_preemptions`).
+
+        The policy half of preemption (the SLO controller's actuator):
+        take the highest-priority request in the admission window; when
+        it is blocked — no free slot, or (pageable KV) its reservation
+        cannot be covered — preempt a strictly lower-priority running
+        sequence and re-check, so preemption fires only under real
+        pressure and never on behalf of an equal-or-lower priority.
+        """
+        if not self.paged:
+            return 0
+        done = 0
+        while done < max_preemptions:
+            with self._step_lock:
+                with self._cv:
+                    window = list(itertools.islice(
+                        self._waiting, 1 + self.admit_lookahead))
+                    free = self._free_slots_locked()
+                if not window:
+                    return done
+                top = max(window, key=lambda t: t.priority)
+                if top.prefix_key is not None \
+                        and top.prefix_key in self._publishing:
+                    return done  # attaches once publication lands
+                blocked = not free
+                if not blocked and self._kv_paged:
+                    need = (int(top.seq_prompt.size)
+                            + top.max_new_tokens - len(top.tokens))
+                    blocked = not self._pcm.can_reserve(
+                        need, prefix_key=top.prefix_key)
+                if not blocked:
+                    return done
+                if not self._preempt_locked(priority_below=top.priority):
+                    return done
+            done += 1
+        return done
+
+    def set_admit_lookahead(self, n: int) -> None:
+        """Retune the paged admission skip-ahead bound live (an SLO
+        controller actuator). No-op on non-paged engines."""
+        if n < 0:
+            raise ValueError("admit_lookahead must be >= 0")
+        if not self.paged:
+            return
+        with self._cv:
+            self.admit_lookahead = int(n)
+
+    def pop_completions(self) -> list[tuple]:
+        """Drain finished-request latency samples: a list of
+        `(finish_clock, tenant, priority, ttft_s, e2e_s)` tuples, oldest
+        first. Successful requests only; each sample is handed out
+        exactly once (the SLO controller's measurement feed)."""
+        with self._cv:
+            out = list(self._completions)
+            self._completions.clear()
+        return out
 
     def step(self) -> int:
         """Admit waiting requests, advance prefills, run one decode step.

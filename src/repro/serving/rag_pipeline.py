@@ -41,6 +41,14 @@ Fleet serving (PR 8): `decode_engine(n_replicas=N)` (or
 engines instead of one — `query_stream`/`generate_stream` accept the
 same knobs, and prefix-affinity placement keeps the sharing hit-rate
 intact across the fleet (see serving/router.py).
+
+SLO control plane (PR 10): requests carry an optional priority
+((tenant, text, priority) triples) that rides retrieval onto the decode
+submit, and `query_stream(generate=True, slo=SLOConfig(...))` attaches
+an `SLOController` that is polled as the stream drains — tightening the
+flush deadline and admission lookahead, rebalancing tenant weights, and
+preempting low-priority decodes under pool pressure when the measured
+per-tenant p95s miss their targets (see serving/slo_controller.py).
 """
 from __future__ import annotations
 
@@ -64,11 +72,12 @@ from repro.models import supports_paged_kv
 from repro.core.simulator import simulate_query
 from repro.data.tokenizer import ByteTokenizer
 from .async_scheduler import DEFAULT_TENANT, AsyncBatchScheduler, SchedulerError
-from .config import (EngineConfig, RouterConfig, resolve_config,
+from .config import (EngineConfig, RouterConfig, SLOConfig, resolve_config,
                      resolve_router_config)
 from .continuous_batching import ContinuousBatchingEngine, GenerationTicket
 from .engine import GenerationEngine
 from .router import EngineRouter
+from .slo_controller import SLOController
 
 
 _FNV_PRIME = np.uint32(16777619)
@@ -181,6 +190,8 @@ class RagPipeline:
         )
         self.max_prompt_len = max_prompt_len
         self._clock = clock
+        # final SLOController counters from the last query_stream(slo=...)
+        self.last_slo_stats: Optional[dict] = None
 
     # ------------------------------------------------------------ retrieval
     def search_batch(
@@ -367,14 +378,19 @@ class RagPipeline:
                      prefill_chunk: Optional[int] = None,
                      prefix_sharing: Optional[bool] = None,
                      retain_blocks: Optional[int] = None,
-                     host_blocks: Optional[int] = None):
+                     host_blocks: Optional[int] = None,
+                     slo: Optional[SLOConfig] = None):
         """Stream results as they are served (completion order).
 
-        `requests` is an iterable of query strings or (tenant, text)
-        pairs. Each request is submitted to a live AsyncBatchScheduler
-        (background flush loop, dual trigger) and completed tickets are
-        yielded as soon as their batch lands — callers never block the
-        batch formation.
+        `requests` is an iterable of query strings, (tenant, text)
+        pairs, or (tenant, text, priority) triples. Each request is
+        submitted to a live AsyncBatchScheduler (background flush loop,
+        dual trigger) and completed tickets are yielded as soon as their
+        batch lands — callers never block the batch formation. A
+        request's priority (default 0) rides through retrieval onto its
+        decode submission: under pool pressure higher priorities are
+        admitted first and can preempt lower ones (see
+        `serving.continuous_batching`).
 
         With generate=False yields AsyncTicket objects: `.text`,
         `.tenant`, `.doc_ids`, `.doc_scores`, `.wait_s`, `.batch_size`.
@@ -401,18 +417,27 @@ class RagPipeline:
         `EngineRouter` fleet behind the stream instead of one engine —
         same-context queries then land on the replica already holding
         their prefix KV (see serving/router.py).
+
+        `slo=SLOConfig(...)` (requires generate=True) closes the control
+        loop: an `SLOController` wired to this stream's scheduler and
+        engine is polled as the stream drains, tightening/relaxing the
+        flush deadline and admission lookahead, rebalancing tenant
+        weights, and firing priority preemption against the configured
+        targets. Its final counters land on `self.last_slo_stats`.
         """
         import queue as _queue
 
         if generate and self.engine is None:
             raise TypeError("query_stream(generate=True) requires a model")
+        if slo is not None and not generate:
+            raise TypeError("query_stream(slo=...) requires generate=True")
         config = resolve_config(config, dict(
             n_slots=n_slots, paged=paged, block_size=block_size,
             n_blocks=n_blocks, prefill_chunk=prefill_chunk,
             prefix_sharing=prefix_sharing, retain_blocks=retain_blocks,
             host_blocks=host_blocks))
         done_q: "_queue.Queue" = _queue.Queue()
-        sched = engine = None
+        sched = engine = controller = None
         try:
             # engine first: if its cache-layout probe raises, no thread
             # has started yet; the finally closes whatever did start
@@ -423,6 +448,10 @@ class RagPipeline:
                 start=True) if generate else None
             sched = self.scheduler(max_batch=max_batch, key=key,
                                    max_wait_ms=max_wait_ms, start=True)
+            if slo is not None:
+                controller = SLOController(slo, engine=engine,
+                                           scheduler=sched,
+                                           clock=self._clock)
 
             def on_retrieved(ticket):
                 """Scheduler-thread callback: chain retrieval into decode."""
@@ -433,7 +462,8 @@ class RagPipeline:
                         ticket.text, texts_k)
                     gen = engine.submit(
                         prompt, max_new_tokens=max_new_tokens,
-                        tenant=ticket.tenant, prefix_len=prefix_len)
+                        tenant=ticket.tenant, prefix_len=prefix_len,
+                        priority=getattr(ticket, "priority", 0))
                     gen.text = ticket.text
                     gen.retrieval = ticket
                     gen.add_done_callback(done_q.put)
@@ -448,32 +478,52 @@ class RagPipeline:
                         ticket._error = err
                     done_q.put(ticket)  # surface the failing ticket
 
-            def submit(tenant, text):
-                sched.submit(text, k=k, tenant=tenant).add_done_callback(
+            def submit(tenant, text, priority):
+                ticket = sched.submit(text, k=k, tenant=tenant)
+                # ride the priority through retrieval to the decode submit
+                ticket.priority = priority
+                ticket.add_done_callback(
                     on_retrieved if generate else done_q.put)
 
-            yield from self._drain_stream(requests, submit, done_q)
+            yield from self._drain_stream(
+                requests, submit, done_q,
+                poll=controller.poll if controller is not None else None)
         finally:
+            if controller is not None:
+                self.last_slo_stats = controller.stats()
+                controller.close()
             if sched is not None:
                 sched.close(drain=True)
             if engine is not None:
                 engine.close(drain=True)
 
-    def _drain_stream(self, requests, submit, done_q):
+    def _drain_stream(self, requests, submit, done_q, poll=None):
         """Shared submit/drain loop for the streaming generators.
 
-        Submits each request via `submit(tenant, text)` (which must
-        arrange for exactly one finished ticket per request to land on
-        `done_q`), opportunistically yielding completions while
-        submitting and draining the remainder afterwards."""
+        Submits each request via `submit(tenant, text, priority)` (which
+        must arrange for exactly one finished ticket per request to land
+        on `done_q`), opportunistically yielding completions while
+        submitting and draining the remainder afterwards. Requests are
+        bare strings, (tenant, text) pairs, or (tenant, text, priority)
+        triples. `poll`, when given, is invoked between completions
+        (the SLO controller's poll hook) — during the final drain the
+        queue wait is chopped so the controller keeps actuating even
+        while no ticket lands."""
         import queue as _queue
 
         n_submitted = n_yielded = 0
         for req in requests:
-            tenant, text = (req if isinstance(req, tuple)
-                            else (DEFAULT_TENANT, req))
-            submit(tenant, text)
+            priority = 0
+            if isinstance(req, tuple):
+                tenant, text = req[0], req[1]
+                if len(req) > 2:
+                    priority = int(req[2])
+            else:
+                tenant, text = DEFAULT_TENANT, req
+            submit(tenant, text, priority)
             n_submitted += 1
+            if poll is not None:
+                poll()
             while True:  # opportunistically drain while submitting
                 try:
                     yield self._finalize_stream_item(done_q.get_nowait())
@@ -481,7 +531,15 @@ class RagPipeline:
                 except _queue.Empty:
                     break
         while n_yielded < n_submitted:
-            yield self._finalize_stream_item(done_q.get())
+            if poll is None:
+                ticket = done_q.get()
+            else:
+                poll()
+                try:
+                    ticket = done_q.get(timeout=0.05)
+                except _queue.Empty:
+                    continue
+            yield self._finalize_stream_item(ticket)
             n_yielded += 1
 
     def _finalize_stream_item(self, ticket):
@@ -507,9 +565,9 @@ class RagPipeline:
                         host_blocks: Optional[int] = None):
         """Stream plain (retrieval-free) generations in completion order.
 
-        `requests` is an iterable of prompt strings or (tenant, text)
-        pairs; each is tokenized and submitted into a continuous-batching
-        decode slot. Yields GenerationTicket objects as sequences retire:
+        `requests` is an iterable of prompt strings, (tenant, text)
+        pairs, or (tenant, text, priority) triples; each is tokenized
+        and submitted into a continuous-batching decode slot. Yields GenerationTicket objects as sequences retire:
         `.text`, `.tokens`, `.answer_text`, `.first_token_s`, `.wait_s`.
         Use `ticket.token_stream()` from another thread for live
         per-token consumption. Engine shape knobs are best passed as
@@ -541,11 +599,11 @@ class RagPipeline:
             temperature=temperature, start=True)
         vocab = self.engine.model.cfg.vocab_size
 
-        def submit(tenant, text):
+        def submit(tenant, text, priority):
             toks = [t % vocab for t in self.tokenizer.encode(text)]
             toks = toks[-(engine.cache_len - max_new_tokens):]
             ticket = engine.submit(toks, max_new_tokens=max_new_tokens,
-                                   tenant=tenant)
+                                   tenant=tenant, priority=priority)
             ticket.text = text
             ticket.add_done_callback(done_q.put)
 

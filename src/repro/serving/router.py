@@ -147,10 +147,14 @@ class EngineRouter:
         self._rr += 1
         return pick
 
-    def place(self, key: Optional[str]) -> int:
-        """Pick the replica for a request carrying prefix key `key`
-        (None: keyless). Pure placement — no submission; `submit()`
-        calls this, and tests drive it directly.
+    def _place(self, key: Optional[str]) -> tuple[int, Optional[str]]:
+        """(replica index, placement kind) for a request carrying prefix
+        key `key` (None: keyless). Kind is "hit"/"miss"/"spill" for
+        keyed traffic, None for keyless. Pure decision — no counters
+        move here: `submit()` commits the kind only once the replica has
+        ACCEPTED the request, so a rejected submit (never-fits) can
+        never leave a placement counted without a placement made
+        (`hits + misses + spills == keyed placements`, always).
         """
         loads = [e.load() for e in self.engines]
         holders = ([i for i, e in enumerate(self.engines)
@@ -158,16 +162,33 @@ class EngineRouter:
                    if self.affinity and key is not None else [])
         with self._lock:
             if not (self.affinity and key is not None):
-                return self._least_loaded(loads)
+                return self._least_loaded(loads), None
             if not holders:
-                self.n_affinity_misses += 1
-                return self._least_loaded(loads)
+                return self._least_loaded(loads), "miss"
             holder = min(holders, key=lambda i: loads[i])
             if loads[holder] > min(loads) + self.max_imbalance:
+                return self._least_loaded(loads), "spill"
+            return holder, "hit"
+
+    def place(self, key: Optional[str]) -> int:
+        """Pick the replica for a request carrying prefix key `key`
+        (None: keyless), committing the placement counters immediately.
+        Prefer `submit()`, which only commits once the replica accepts.
+        """
+        idx, kind = self._place(key)
+        self._commit_placement(kind)
+        return idx
+
+    def _commit_placement(self, kind: Optional[str]) -> None:
+        if kind is None:
+            return
+        with self._lock:
+            if kind == "hit":
+                self.n_affinity_hits += 1
+            elif kind == "spill":
                 self.n_affinity_spills += 1
-                return self._least_loaded(loads)
-            self.n_affinity_hits += 1
-            return holder
+            else:
+                self.n_affinity_misses += 1
 
     # --------------------------------------------------------------- submit
     def submit(
@@ -176,22 +197,33 @@ class EngineRouter:
         max_new_tokens: int = 32,
         tenant: str = DEFAULT_TENANT,
         prefix_len: Optional[int] = None,
+        priority: int = 0,
     ) -> GenerationTicket:
         """Route one prompt to a replica; returns that replica's ticket.
 
         Same contract as `ContinuousBatchingEngine.submit` (including
         SchedulerError on a request no replica could ever serve — every
         replica has identical capacity, so replica 0's check stands for
-        the fleet). The ticket's `replica` attribute records the
-        placement.
+        the fleet; `priority` forwards to the replica's admission /
+        preemption ordering). The ticket's `replica` attribute records
+        the placement.
+
+        Placement races benignly with the decode loops: the holder probe
+        and the submit are not atomic, so a replica may retire or evict
+        the prefix in between — the request then admits as a plain miss
+        there and re-publishes (the same publish-heal path a spill
+        uses). Placement counters commit only after the replica accepts,
+        so `hits + misses + spills == keyed placements` holds even when
+        a submit is rejected.
         """
         prompt = np.asarray(list(prompt), np.int32)
         key, _ = self.engines[0].compute_prefix_key(prompt, prefix_len)
-        idx = self.place(key)
+        idx, kind = self._place(key)
         ticket = self.engines[idx].submit(
             prompt, max_new_tokens=max_new_tokens, tenant=tenant,
-            prefix_len=prefix_len)
+            prefix_len=prefix_len, priority=priority)
         ticket.replica = idx
+        self._commit_placement(kind)
         with self._lock:
             self.n_submitted += 1
             self.per_replica_submits[idx] += 1
@@ -234,6 +266,30 @@ class EngineRouter:
         """Fan out `clear_prefix_cache()`; total entries dropped."""
         return sum(e.clear_prefix_cache() for e in self.engines)
 
+    # ----------------------------------------------- control-plane fan-out
+    def pop_completions(self) -> list[tuple]:
+        """Drain every replica's finished-request latency samples,
+        merged oldest-first on the shared clock (the SLO controller's
+        fleet-wide measurement feed)."""
+        out: list[tuple] = []
+        for e in self.engines:
+            out.extend(e.pop_completions())
+        out.sort(key=lambda s: s[0])
+        return out
+
+    def set_admit_lookahead(self, n: int) -> None:
+        """Fan out `set_admit_lookahead(n)` to every replica."""
+        for e in self.engines:
+            e.set_admit_lookahead(n)
+
+    def preempt_for_waiting(self, max_preemptions: int = 1) -> int:
+        """Fan out `preempt_for_waiting` — each replica preempts only
+        for ITS OWN blocked high-priority waiting requests (placement
+        already pinned every request to one replica, so pressure is a
+        per-replica condition); returns total preemptions performed."""
+        return sum(
+            e.preempt_for_waiting(max_preemptions) for e in self.engines)
+
     def close(self, drain: bool = True,
               timeout: Optional[float] = None) -> None:
         """Close every replica; idempotent (same semantics as the
@@ -262,7 +318,8 @@ class EngineRouter:
 
         `fleet` — the all-numeric rollup, every key always present:
         sums `n_tokens`, `n_finished`, `n_failed`, `n_decode_steps`,
-        `n_prefills`, `n_backpressure` over replicas; maxes
+        `n_prefills`, `n_backpressure`, `n_preemptions`, `n_resumes`
+        over replicas; maxes
         `peak_active`; pools the prefix counters (`n_prefix_hits`,
         `n_prefix_misses`, `n_device_hits`, `n_host_hits`, and the
         derived `prefix_hit_rate` / `device_hit_rate` /
@@ -279,7 +336,8 @@ class EngineRouter:
         fleet = {
             k: sum(r.get(k, 0) for r in replicas)
             for k in ("n_tokens", "n_finished", "n_failed",
-                      "n_decode_steps", "n_prefills", "n_backpressure")
+                      "n_decode_steps", "n_prefills", "n_backpressure",
+                      "n_preemptions", "n_resumes")
         }
         fleet["peak_active"] = max(r["peak_active"] for r in replicas)
         pools = [r.get("pool") for r in replicas]

@@ -179,6 +179,89 @@ def test_set_tenant_weight_live_and_validation():
     assert sum(t.flush_seq == 0 for t in std) == 1
 
 
+def test_set_tenant_weight_resets_stale_deficit_on_demotion():
+    """Regression: leftover DRR credit earned at an old (high) weight
+    must not survive a demotion. Pre-fix, a tenant demoted from weight
+    50 to 1 kept its ~46 banked credit and monopolised the next chunk
+    ([A,A,A,A] then [B,B,B,B]); post-fix the next chunk is the fair
+    interleave the new weights dictate."""
+    sched, _ = make(max_batch=4, max_wait_ms=None,
+                    tenant_weights={"A": 50.0})
+    a_round1 = [sched.submit(f"a#{i}", k=1, tenant="A") for i in range(5)]
+    assert sched.poll() == 4  # [A,A,A,A]; A banks 46 credit, 1 ticket left
+    assert [t.flush_seq for t in a_round1[:4]] == [0, 0, 0, 0]
+    sched.set_tenant_weight("A", 1.0)  # demotion must also drop the bank
+    b = [sched.submit(f"b#{i}", k=1, tenant="B") for i in range(4)]
+    a2 = [sched.submit(f"a#{i + 5}", k=1, tenant="A") for i in range(3)]
+    sched.poll()
+    # weight 1 vs 1 -> strict interleave: both chunks are [A,B,A,B].
+    # With the stale 46 credit, A would sweep all of chunk 1 instead.
+    assert [t.flush_seq for t in [a_round1[4]] + a2] == [1, 1, 2, 2]
+    assert [t.flush_seq for t in b] == [1, 1, 2, 2]
+
+
+def test_set_max_wait_ms_wakes_parked_flush_thread():
+    """Regression: enabling a deadline on a live scheduler whose flush
+    thread is parked on `wait(None)` (max_wait_ms=None and no full
+    batch) must wake the thread — pre-fix the new deadline was never
+    observed until an unrelated submit arrived."""
+    sched = AsyncBatchScheduler(value_search, max_batch=64,
+                                max_wait_ms=None, start=True)
+    try:
+        t = sched.submit("q#3", k=1)
+        with pytest.raises(TimeoutError):
+            t.result(timeout=0.1)  # no deadline, no full batch: parked
+        sched.set_max_wait_ms(5.0)
+        assert list(t.result(timeout=5.0)[0]) == [300]
+        with pytest.raises(ValueError, match="max_wait_ms"):
+            sched.set_max_wait_ms(-1.0)
+    finally:
+        sched.close()
+
+
+@pytest.mark.slow
+def test_threaded_weight_changes_mid_drain_lose_no_tickets():
+    """Hammer set_tenant_weight from one thread while producers submit
+    and the background flush loop drains: every ticket must be served
+    exactly once with the right rows, whatever weights were in flight."""
+    sched = AsyncBatchScheduler(value_search, max_batch=8, max_wait_ms=1.0,
+                                start=True)
+    per_thread = 60
+    results = [None] * (4 * per_thread)
+    stop = threading.Event()
+
+    def producer(base):
+        tickets = [
+            sched.submit(f"q#{base + i}", k=1, tenant=f"t{base % 2}")
+            for i in range(per_thread)
+        ]
+        for i, t in enumerate(tickets):
+            results[base + i] = t.result(timeout=30.0)
+
+    def hammer():
+        w = 0
+        while not stop.is_set():
+            sched.set_tenant_weight("t0", [0.5, 4.0, 1.0][w % 3])
+            sched.set_tenant_weight("t1", [2.0, 0.5, 3.0][w % 3])
+            w += 1
+
+    threads = [threading.Thread(target=producer, args=(n * per_thread,))
+               for n in range(4)]
+    h = threading.Thread(target=hammer)
+    for th in threads:
+        th.start()
+    h.start()
+    for th in threads:
+        th.join(60.0)
+    stop.set()
+    h.join(10.0)
+    sched.close()
+    for v, row in enumerate(results):
+        assert row is not None, f"ticket {v} never served"
+        assert list(row[0]) == [v * 100]
+    assert sched.n_served == 4 * per_thread and sched.n_failed == 0
+
+
 # ------------------------------------------------------- mixed-k batching
 def test_mixed_k_single_batch_truncates_rows():
     seen_k = []

@@ -6,6 +6,7 @@ resolution at the router layer, and the stats() schema drift test
 (router scalars + all-numeric fleet rollup + per-replica dicts that
 match the engine schema exactly)."""
 
+import threading
 import warnings
 from types import SimpleNamespace
 
@@ -19,6 +20,7 @@ from repro.serving import (
     EngineConfig,
     EngineRouter,
     RouterConfig,
+    SchedulerError,
 )
 from repro.serving.config import resolve_router_config
 
@@ -170,6 +172,67 @@ def test_keyless_requests_go_least_loaded():
     assert (st["n_affinity_hits"] == st["n_affinity_misses"]
             == st["n_affinity_spills"] == 0)
     assert st["n_submitted"] == 4
+
+
+def test_rejected_submit_commits_no_placement_counters():
+    """Regression: a keyed request no replica can ever serve must leave
+    the placement counters untouched. Pre-fix the probe counted its
+    "miss" BEFORE the replica's capacity check rejected the submit, so
+    `hits + misses + spills` drifted past the placements actually made."""
+    r = _router(n_replicas=2)
+    try:
+        # 30 prompt + 8 new tokens = 10 blocks of 4 > the 8-block
+        # per-sequence cap (cache_len 32); span 29 >= block_size -> keyed
+        too_big = np.arange(1, 31, dtype=np.int32) % 32
+        with pytest.raises(SchedulerError, match="blocks"):
+            r.submit(too_big, max_new_tokens=8, prefix_len=len(too_big))
+        st = r.stats()
+        assert st["n_submitted"] == 0
+        assert st["per_replica_submits"] == [0, 0]
+        assert (st["n_affinity_hits"] == st["n_affinity_misses"]
+                == st["n_affinity_spills"] == 0)
+    finally:
+        r.close()
+
+
+def test_router_priority_forwards_to_replica_ticket():
+    r = _router(n_replicas=2)
+    (p, h), = _reqs([CTX_A], [10])
+    t = r.submit(p, max_new_tokens=2, prefix_len=h, priority=3)
+    assert t.priority == 3
+    r.run_until_drained()
+    r.close()
+
+
+def test_threaded_submits_keep_counter_invariant():
+    """hits + misses + spills == keyed placements must hold while
+    concurrent submits race the decode loops (the probe/submit window
+    where a holder can retire its prefix mid-placement)."""
+    r = _router(n_replicas=2, start=True)
+    errs: list = []
+
+    def worker(ctx, base):
+        try:
+            for p, h in _reqs([ctx] * 8, range(base, base + 8)):
+                r.submit(p, max_new_tokens=2, prefix_len=h).result(
+                    timeout=30.0)
+        except Exception as e:  # noqa: BLE001 - surfaced by the assert
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=args)
+               for args in ((CTX_A, 10), (CTX_B, 10),
+                            (CTX_A, 18), (CTX_B, 18))]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(60.0)
+    st = r.stats()
+    r.close()
+    assert errs == []
+    # every submission carried a prefix key (span 5 >= block_size 4)
+    assert st["n_submitted"] == 32
+    assert (st["n_affinity_hits"] + st["n_affinity_misses"]
+            + st["n_affinity_spills"]) == 32
 
 
 # ----------------------------------------------------------------- parity

@@ -173,3 +173,47 @@ def test_decode_engine_requires_model():
         pipe.decode_engine()
     with pytest.raises(TypeError, match="model"):
         list(pipe.query_stream(["q"], generate=True))
+
+
+# ---------------------------------------------- serve-report regressions
+def test_percentile_helpers_are_empty_safe():
+    """np.percentile([]) raises; the report helpers must not (a run that
+    serves nothing still needs a NaN-free, well-formed report)."""
+    from repro.launch.serve import _pct, _percentiles_ms
+
+    assert _pct([], 95) == 0.0
+    out = _percentiles_ms([])
+    assert out == {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0,
+                   "mean_ms": 0.0}
+    # non-empty path unchanged
+    out = _percentiles_ms([0.010, 0.020])
+    assert out["p50_ms"] > 0.0 and np.isfinite(out["mean_ms"])
+
+
+def test_open_loop_zero_served_returns_zeroed_report():
+    """Every flush failing used to crash the report on np.percentile of
+    an empty array; now it returns a zeroed report and the failure count
+    carries the signal."""
+    import json
+
+    from repro.launch.serve import build_rag_pipeline, serve_rag_open_loop
+
+    pipe = build_rag_pipeline(n_docs=32, n_shards=2, dim=64)
+    real = pipe.search_batch
+    calls = [0]
+
+    def broken(texts, k, key=None):
+        calls[0] += 1
+        if calls[0] == 1:  # off-clock compile warm-up stays healthy
+            return real(texts, k, key=key)
+        raise RuntimeError("index offline")
+
+    pipe.search_batch = broken
+    out = serve_rag_open_loop(n_queries=8, offered_qps=2000.0,
+                              n_tenants=2, max_batch=4, pipe=pipe)
+    assert out["n_failed"] == 8
+    assert out["achieved_qps"] == 0.0
+    assert out["p95_ms"] == 0.0 and out["mean_ms"] == 0.0
+    assert out["per_tenant_p95_ms"] == {}
+    for v in out.values():  # the whole report must stay JSON-clean
+        json.dumps(v)

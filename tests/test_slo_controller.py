@@ -1,0 +1,465 @@
+"""SLO control plane (PR 10): priority preemption + the controller loop.
+
+The load-bearing acceptance property is preempt/resume correctness on
+the checksum paged model: a preempted sequence publishes its resident
+KV to the retained tier, releases its blocks, re-queues, re-attaches on
+re-admission, and finishes with output BIT-IDENTICAL to an unpreempted
+run — any KV corruption anywhere in the round trip changes the checksum
+chain immediately. On top of that: priority-aware admission (exact FIFO
+reduction at equal priorities), `preempt_for_waiting` firing only under
+real pool pressure, the controller's tighten/relax/weight actuation on
+a fake clock, and schema drift tests for the new counters.
+"""
+
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (
+    AsyncBatchScheduler,
+    ContinuousBatchingEngine,
+    EngineConfig,
+    EngineRouter,
+    GenerationEngine,
+    SLOConfig,
+    SLOController,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, s):
+        self.t += s
+
+
+# --------------------------------------------- checksum paged script model
+class ChecksumPagedScriptModel:
+    """Next token = (sum of the ENTIRE history read back from the pool)
+    % vocab — redeclared from test_prefix_sharing to keep this module
+    import-independent. Every emitted token depends on every stored
+    token, so a corrupted block table, a stale retained block, or a
+    wrong resume span breaks parity at the very next token."""
+
+    def __init__(self, vocab: int = 97):
+        self.cfg = SimpleNamespace(vocab_size=vocab)
+        self.vocab = vocab
+
+    def init_caches(self, batch, cache_len, prefix_len):
+        return {
+            "sum": jnp.zeros((batch,), jnp.int32),
+            "length": jnp.full((batch,), prefix_len, jnp.int32),
+        }
+
+    def decode_step(self, params, caches, token):
+        s = caches["sum"] + token[:, 0]
+        logits = jax.nn.one_hot(s % self.vocab, self.vocab, dtype=jnp.float32)
+        return logits, {"sum": s, "length": caches["length"] + 1}
+
+    def init_paged_caches(self, n_blocks, block_size):
+        return jnp.zeros((n_blocks, block_size), jnp.int32)
+
+    def paged_step(self, params, pools, tables, lengths, tokens, n_valid):
+        b, t = tokens.shape
+        bs = pools.shape[1]
+        mb = tables.shape[1]
+        pos = lengths[:, None] + jnp.arange(t)[None, :]
+        valid = jnp.arange(t)[None, :] < n_valid[:, None]
+        blk = jnp.take_along_axis(
+            tables, jnp.clip(pos // bs, 0, mb - 1), axis=1)
+        blk = jnp.where(valid, blk, 0)
+        off = jnp.where(valid, pos % bs, 0)
+        pools = pools.at[blk, off].set(tokens)
+        window = pools[tables]
+        wpos = (jnp.arange(mb)[:, None] * bs + jnp.arange(bs)[None, :])[None]
+        mask = wpos < (lengths + jnp.maximum(n_valid, 1))[:, None, None]
+        total = jnp.sum(jnp.where(mask, window, 0), axis=(1, 2))
+        logits = jax.nn.one_hot(
+            total % self.vocab, self.vocab, dtype=jnp.float32)
+        return logits, pools
+
+    def init(self, key):
+        return {}
+
+
+CFG = EngineConfig(n_slots=2, cache_len=32, paged=True, block_size=4,
+                   n_blocks=13, prefill_chunk=4, prefix_sharing=True,
+                   retain_blocks=4)
+
+
+def _engine(config=CFG, clock=None):
+    kw = {} if clock is None else {"clock": clock}
+    return ContinuousBatchingEngine(ChecksumPagedScriptModel(), {}, config,
+                                    **kw)
+
+
+def _reference(prompt, max_new):
+    """Unpreempted single-sequence oracle for the checksum model."""
+    out = GenerationEngine(ChecksumPagedScriptModel(), {}).generate(
+        jnp.asarray(prompt, jnp.int32)[None], max_new_tokens=max_new,
+        cache_len=64)
+    return np.asarray(out)[0]
+
+
+# --------------------------------------------------------- preempt/resume
+def test_preempt_resume_bit_identical_via_retained_tier():
+    """Preempt mid-decode, resume via a retained-tier re-attach: final
+    tokens must equal the unpreempted oracle bit for bit, and the resume
+    must be a device hit (no re-prefill of the published span)."""
+    eng = _engine()
+    prompt = np.arange(1, 11, dtype=np.int32)
+    t = eng.submit(prompt, max_new_tokens=12)
+    for _ in range(6):
+        eng.step()  # prefill (3 chunks) + a few decode steps
+    assert len(t.tokens) >= 3  # genuinely mid-decode
+    assert eng.preempt() is True
+    assert t.slot is None and eng.pending() == 1
+    st = eng.stats()
+    assert st["n_preemptions"] == 1
+    assert st["pool"]["n_retained"] >= 1  # resident KV was published
+    eng.run_until_drained()
+    assert np.array_equal(np.asarray(t.result(1.0)), _reference(prompt, 12))
+    st = eng.stats()
+    eng.close()
+    assert st["n_resumes"] == 1 and t.n_preempted == 1
+    assert st["pool"]["n_device_hits"] >= 1  # re-attach, not re-prefill
+
+
+def test_preempt_resume_parity_without_retention():
+    """retain_blocks=0: the published prefix dies with the free(), so
+    resume is a full re-prefill — slower, but still bit-identical."""
+    eng = _engine(CFG.replace(retain_blocks=0, host_blocks=0))
+    prompt = np.arange(1, 11, dtype=np.int32)
+    t = eng.submit(prompt, max_new_tokens=12)
+    for _ in range(6):
+        eng.step()
+    assert eng.preempt() is True
+    eng.run_until_drained()
+    assert np.array_equal(np.asarray(t.result(1.0)), _reference(prompt, 12))
+    assert eng.stats()["n_resumes"] == 1
+    eng.close()
+
+
+def test_preempt_noop_cases():
+    eng = _engine()
+    assert eng.preempt() is False  # nothing running
+    t = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=4)
+    eng.step()  # still prefilling: no decode-phase victim
+    assert eng.preempt() is False
+    eng.run_until_drained()
+    assert eng.preempt() is False  # retired
+    assert t.n_preempted == 0 and eng.stats()["n_preemptions"] == 0
+    eng.close()
+    fixed = ContinuousBatchingEngine(
+        ChecksumPagedScriptModel(), {},
+        EngineConfig(n_slots=2, cache_len=32, paged=False))
+    assert fixed.preempt() is False  # non-paged engines never preempt
+    fixed.close()
+
+
+def test_preempt_priority_below_shields_equal_priority():
+    eng = _engine()
+    t = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=8,
+                   priority=2)
+    for _ in range(4):
+        eng.step()
+    assert eng.preempt(priority_below=2) is False  # equal is shielded
+    assert eng.preempt(priority_below=3) is True  # strictly lower only
+    eng.run_until_drained()
+    assert np.array_equal(np.asarray(t.result(1.0)),
+                          _reference(np.arange(1, 9), 8))
+    eng.close()
+
+
+# ------------------------------------------------------ priority admission
+def test_priority_orders_admission_within_window():
+    cfg = CFG.replace(n_slots=1, n_blocks=9)
+    eng = _engine(cfg)
+    first = eng.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=2)
+    eng.run_until_drained()  # occupy-then-retire so the queue backs up
+    assert first.done()
+    lo = eng.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=2,
+                    priority=0)
+    hi = eng.submit(np.arange(11, 15, dtype=np.int32), max_new_tokens=2,
+                    priority=1)
+    eng.step()  # one admission round: the window is [lo, hi]
+    assert hi.slot is not None, "high priority should win the free slot"
+    assert lo.slot is None
+    eng.run_until_drained()
+    eng.close()
+    assert lo.done() and hi.done()  # nobody starves
+
+
+def test_equal_priorities_reduce_to_fifo():
+    cfg = CFG.replace(n_slots=1, n_blocks=9)
+    eng = _engine(cfg)
+    a = eng.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=2)
+    b = eng.submit(np.arange(11, 15, dtype=np.int32), max_new_tokens=2)
+    eng.step()
+    assert a.slot is not None and b.slot is None  # strict FIFO
+    eng.run_until_drained()
+    eng.close()
+
+
+# ------------------------------------------------------ preempt_for_waiting
+def test_preempt_for_waiting_fires_under_pool_pressure():
+    """A blocked high-priority arrival evicts the low-priority hog; both
+    finish with oracle-exact tokens."""
+    clock = FakeClock()
+    eng = _engine(CFG.replace(n_blocks=9), clock=clock)
+    big = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=20,
+                     priority=0)
+    for _ in range(4):
+        eng.step()
+    hi = eng.submit(np.arange(20, 26, dtype=np.int32), max_new_tokens=4,
+                    priority=5)
+    eng.step()  # admission attempt fails: pool cannot cover hi
+    assert eng.pending() == 1
+    assert eng.preempt_for_waiting() == 1
+    assert big.slot is None and big.n_preempted == 1
+    eng.run_until_drained()
+    assert np.array_equal(np.asarray(hi.result(1.0)),
+                          _reference(np.arange(20, 26), 4))
+    assert np.array_equal(np.asarray(big.result(1.0)),
+                          _reference(np.arange(1, 9), 20))
+    eng.close()
+
+
+def test_preempt_for_waiting_noop_without_pressure_or_priority():
+    eng = _engine()
+    a = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=4)
+    for _ in range(3):
+        eng.step()
+    assert eng.preempt_for_waiting() == 0  # nobody waiting
+    # an EQUAL-priority waiter must not preempt (strictly-lower rule)
+    eng.submit(np.arange(11, 19, dtype=np.int32), max_new_tokens=4)
+    assert eng.preempt_for_waiting() == 0
+    assert a.n_preempted == 0
+    eng.run_until_drained()
+    eng.close()
+
+
+# ----------------------------------------------------------- controller
+def _controller(sched_wait=50.0, **cfg_kw):
+    clock = FakeClock()
+    eng = _engine(clock=clock)
+    sched = AsyncBatchScheduler(
+        lambda texts, k: (np.zeros((len(texts), k), int),
+                          np.zeros((len(texts), k), np.float32)),
+        max_batch=4, max_wait_ms=sched_wait, clock=clock)
+    cfg = SLOConfig(e2e_p95_ms=10.0, min_samples=2, interval_s=1.0,
+                    window_s=100.0, **cfg_kw)
+    ctrl = SLOController(cfg, engine=eng, scheduler=sched, clock=clock)
+    return ctrl, eng, sched, clock
+
+
+def test_controller_tightens_then_relaxes_to_baselines():
+    ctrl, eng, sched, clock = _controller()
+    base_lookahead = eng.admit_lookahead
+    # two slow completions: p95 40x over the 10ms target -> tighten
+    ctrl.observe("pro", 0.4, 0.4)
+    ctrl.observe("pro", 0.4, 0.4)
+    assert ctrl.poll() > 0
+    st = ctrl.stats()
+    assert st["n_tightens"] == 1 and st["worst_ratio"] == pytest.approx(40.0)
+    assert sched.max_wait_ms == pytest.approx(50.0 / 1.5)
+    assert eng.admit_lookahead == base_lookahead + 1
+    assert sched.tenant_weight("pro") == pytest.approx(1.5)
+    # window ages the slow samples out; fast samples -> relax to baseline
+    clock.advance(200.0)
+    for _ in range(8):
+        ctrl.observe("pro", 0.001, 0.001)
+    while ctrl.stats()["max_wait_ms"] < 50.0:
+        clock.advance(2.0)
+        ctrl.poll()
+    st = ctrl.stats()
+    assert st["n_relaxes"] >= 1
+    assert sched.max_wait_ms == pytest.approx(50.0)  # never past baseline
+    assert eng.admit_lookahead == base_lookahead
+    assert sched.tenant_weight("pro") == pytest.approx(1.0)  # boost undone
+    ctrl.close(), eng.close(), sched.close()
+
+
+def test_controller_restores_hand_set_weight_not_one():
+    ctrl, eng, sched, clock = _controller()
+    sched.set_tenant_weight("pro", 2.0)  # operator-chosen baseline
+    ctrl.observe("pro", 0.4, 0.4)
+    ctrl.observe("pro", 0.4, 0.4)
+    ctrl.poll()
+    assert sched.tenant_weight("pro") == pytest.approx(3.0)
+    clock.advance(200.0)
+    for _ in range(8):
+        ctrl.observe("pro", 0.001, 0.001)
+    while sched.tenant_weight("pro") > 2.0:
+        clock.advance(2.0)
+        ctrl.poll()
+    assert sched.tenant_weight("pro") == pytest.approx(2.0)  # not 1.0
+    ctrl.close(), eng.close(), sched.close()
+
+
+def test_controller_gates_on_min_samples_and_interval():
+    ctrl, eng, sched, clock = _controller()
+    ctrl.observe("t", 0.4, 0.4)  # 1 < min_samples=2
+    ctrl.poll()
+    assert ctrl.stats()["n_actuations"] == 0
+    ctrl.observe("t", 0.4, 0.4)
+    ctrl.poll()
+    assert ctrl.stats()["n_tightens"] == 1
+    ctrl.observe("t", 0.4, 0.4)
+    ctrl.poll()  # same fake-clock instant: interval gate holds it
+    assert ctrl.stats()["n_tightens"] == 1
+    clock.advance(1.5)
+    ctrl.poll()
+    assert ctrl.stats()["n_tightens"] == 2
+    ctrl.close(), eng.close(), sched.close()
+
+
+def test_controller_per_tenant_targets_pick_worst():
+    clock = FakeClock()
+    cfg = SLOConfig(e2e_p95_ms=1000.0, tenant_e2e_p95_ms={"pro": 10.0},
+                    min_samples=2, interval_s=1.0)
+    sched = AsyncBatchScheduler(
+        lambda texts, k: (np.zeros((len(texts), k), int),
+                          np.zeros((len(texts), k), np.float32)),
+        max_batch=4, max_wait_ms=40.0, clock=clock)
+    ctrl = SLOController(cfg, scheduler=sched, clock=clock)
+    # 20ms e2e: fine vs the 1000ms global, 2x over pro's 10ms override
+    ctrl.observe("batch", 0.02, 0.02)
+    ctrl.observe("pro", 0.02, 0.02)
+    ctrl.poll()
+    st = ctrl.stats()
+    assert st["worst_ratio"] == pytest.approx(2.0)
+    assert sched.tenant_weight("pro") > 1.0  # the override tenant boosted
+    assert sched.tenant_weight("batch") == 1.0
+    ctrl.close(), sched.close()
+
+
+def test_controller_preempts_via_engine_with_parity():
+    clock = FakeClock()
+    eng = ContinuousBatchingEngine(
+        ChecksumPagedScriptModel(), {}, CFG.replace(n_blocks=9), clock=clock)
+    ctrl = SLOController(SLOConfig(e2e_p95_ms=10.0), engine=eng, clock=clock)
+    big = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=20,
+                     priority=0)
+    for _ in range(4):
+        eng.step()
+    hi = eng.submit(np.arange(20, 26, dtype=np.int32), max_new_tokens=4,
+                    priority=5)
+    eng.step()
+    assert ctrl.poll() == 1
+    assert ctrl.stats()["n_preemptions"] == 1
+    eng.run_until_drained()
+    assert np.array_equal(np.asarray(big.result(1.0)),
+                          _reference(np.arange(1, 9), 20))
+    assert np.array_equal(np.asarray(hi.result(1.0)),
+                          _reference(np.arange(20, 26), 4))
+    ctrl.close(), eng.close()
+
+
+def test_controller_preempt_disabled_by_config():
+    clock = FakeClock()
+    eng = ContinuousBatchingEngine(
+        ChecksumPagedScriptModel(), {}, CFG.replace(n_blocks=9), clock=clock)
+    ctrl = SLOController(SLOConfig(e2e_p95_ms=10.0, preempt=False),
+                         engine=eng, clock=clock)
+    big = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=20)
+    for _ in range(4):
+        eng.step()
+    eng.submit(np.arange(20, 26, dtype=np.int32), max_new_tokens=4,
+               priority=5)
+    eng.step()
+    assert ctrl.poll() == 0 and ctrl.stats()["n_preemptions"] == 0
+    assert big.n_preempted == 0
+    eng.run_until_drained()
+    ctrl.close(), eng.close()
+
+
+def test_controller_ingests_engine_completion_feed():
+    clock = FakeClock()
+    eng = _engine(clock=clock)
+    ctrl = SLOController(SLOConfig(e2e_p95_ms=1e9, min_samples=1),
+                         engine=eng, clock=clock)
+    t = eng.submit(np.arange(1, 9, dtype=np.int32), max_new_tokens=3,
+                   tenant="pro", priority=2)
+    while not t.done():
+        eng.step()
+        clock.advance(0.01)
+    ctrl.poll()
+    st = ctrl.stats()
+    assert st["n_samples"] == 1
+    assert eng.pop_completions() == []  # controller drained the feed
+    ctrl.close(), eng.close()
+
+
+def test_router_fans_out_completions_and_preemption_counters():
+    r = EngineRouter(ChecksumPagedScriptModel(), {}, CFG, n_replicas=2)
+    tickets = [r.submit(np.arange(1 + i, 9 + i, dtype=np.int32),
+                        max_new_tokens=2, tenant=f"t{i}") for i in range(3)]
+    r.run_until_drained()
+    assert all(t.done() for t in tickets)
+    samples = r.pop_completions()
+    assert len(samples) == 3
+    assert [s[0] for s in samples] == sorted(s[0] for s in samples)
+    assert r.pop_completions() == []
+    st = r.stats()
+    assert st["fleet"]["n_preemptions"] == 0
+    assert st["fleet"]["n_resumes"] == 0
+    r.set_admit_lookahead(7)
+    assert all(e.admit_lookahead == 7 for e in r.engines)
+    r.close()
+
+
+# ------------------------------------------------------------- schemas
+def _doc_keys(doc):
+    import re
+
+    return set(re.findall(r"`([a-z_0-9]+)`", doc))
+
+
+def test_controller_stats_schema_matches_docstring():
+    ctrl, eng, sched, _ = _controller()
+    st = ctrl.stats()
+    assert set(st) == _doc_keys(SLOController.stats.__doc__)
+    for k, v in st.items():
+        assert v is None or isinstance(v, (int, float)), (k, type(v))
+    ctrl.close(), eng.close(), sched.close()
+
+
+def test_engine_stats_carry_preemption_counters():
+    eng = _engine()
+    st = eng.stats()
+    assert st["n_preemptions"] == 0 and st["n_resumes"] == 0
+    assert isinstance(st["n_preemptions"], int)
+    eng.close()
+    fixed = ContinuousBatchingEngine(
+        ChecksumPagedScriptModel(), {},
+        EngineConfig(n_slots=2, cache_len=32, paged=False))
+    st = fixed.stats()  # fixed-slot engines don't grow the paged block
+    fixed.close()
+    assert "n_preemptions" not in st and "n_resumes" not in st
+
+
+# --------------------------------------------------------------- config
+def test_slo_config_validation():
+    with pytest.raises(ValueError, match="target"):
+        SLOConfig()  # at least one target required
+    with pytest.raises(ValueError, match="ttft_p95_ms"):
+        SLOConfig(ttft_p95_ms=-1.0)
+    with pytest.raises(ValueError, match="relax_ratio"):
+        SLOConfig(e2e_p95_ms=10.0, relax_ratio=1.5)
+    with pytest.raises(ValueError, match="wait_step"):
+        SLOConfig(e2e_p95_ms=10.0, wait_step=1.0)
+    with pytest.raises(ValueError, match="weight_step"):
+        SLOConfig(e2e_p95_ms=10.0, weight_step=0.5)
+    cfg = SLOConfig(e2e_p95_ms=10.0)
+    assert cfg.replace(ttft_p95_ms=5.0).ttft_p95_ms == 5.0
+    assert cfg.replace(ttft_p95_ms=5.0) is not cfg
+    with pytest.raises(TypeError):
+        SLOController(config={"e2e_p95_ms": 10.0})
